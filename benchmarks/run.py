@@ -1,0 +1,44 @@
+"""Benchmark harness — one module per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV rows.
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig1,table1,...]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+MODULES = ["fig1_concentration", "table1_tradeoff", "table2_space_build",
+           "fig5_blocking", "fig6_summaries"]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated prefixes (fig1,table1,...)")
+    args = ap.parse_args()
+    only = args.only.split(",") if args.only else None
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for mod_name in MODULES:
+        if only and not any(mod_name.startswith(o) for o in only):
+            continue
+        t0 = time.time()
+        try:
+            mod = __import__(f"benchmarks.{mod_name}", fromlist=["run"])
+            for line in mod.run():
+                print(line)
+            print(f"# {mod_name} done in {time.time() - t0:.1f}s",
+                  file=sys.stderr)
+        except Exception as e:  # keep the harness going
+            failures += 1
+            print(f"# {mod_name} FAILED: {type(e).__name__}: {e}",
+                  file=sys.stderr)
+    if failures:
+        raise SystemExit(f"{failures} benchmark modules failed")
+
+
+if __name__ == "__main__":
+    main()

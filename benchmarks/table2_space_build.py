@@ -1,0 +1,43 @@
+"""Table 2: index size and build time (Seismic vs SparseIvf-style; the
+exact/impact baselines reuse Seismic's inverted arrays so their size is
+the 'inverted' component)."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax
+
+from benchmarks.common import INDEX, built_index, collection, row
+from repro.core.baselines import build_ivf
+
+
+def run() -> list[str]:
+    docs, *_ = collection()
+    idx, build_s = built_index()
+    sizes = idx.nbytes()
+    out = [row("table2_seismic_build", build_s * 1e6,
+               seconds=round(build_s, 2)),
+           row("table2_seismic_size", 0.0,
+               total_mib=round(sizes["total"] / 2 ** 20, 1),
+               fwd_mib=round(sizes["forward"] / 2 ** 20, 1),
+               inv_mib=round(sizes["inverted"] / 2 ** 20, 1),
+               summaries_mib=round(sizes["summaries"] / 2 ** 20, 1))]
+
+    t0 = time.time()
+    ivf = build_ivf(docs, n_clusters=int(4 * np.sqrt(docs.n)), cap=256)
+    jax.block_until_ready(ivf.centroids)
+    ivf_s = time.time() - t0
+    ivf_bytes = (ivf.centroids.nbytes + ivf.member_docs.nbytes
+                 + ivf.member_len.nbytes + ivf.fwd.coords.nbytes
+                 + ivf.fwd.vals.nbytes)
+    out.append(row("table2_sparseivf_build", ivf_s * 1e6,
+                   seconds=round(ivf_s, 2)))
+    out.append(row("table2_sparseivf_size", 0.0,
+                   total_mib=round(ivf_bytes / 2 ** 20, 1)))
+    # quantization saves 4x on summary values (paper §7.3)
+    q_mib = idx.sum_q.nbytes / 2 ** 20
+    out.append(row("table2_summary_quant_saving", 0.0,
+                   u8_mib=round(q_mib, 1),
+                   f32_equiv_mib=round(q_mib * 4, 1)))
+    return out

@@ -1,0 +1,86 @@
+"""LSR end-to-end: an LM encoder producing learned sparse embeddings,
+indexed and served by Seismic — the bridge between the assigned LM
+architectures and the paper's technique (DESIGN.md §5).
+
+Pipeline: tiny decoder LM (llama3-8b reduced) -> SPLADE-style pooling
+(log(1+relu(logits)) max-pooled over positions) -> sparse embeddings ->
+Seismic index -> retrieval. With an untrained encoder the embeddings
+are not semantically meaningful; the demonstration is the *system
+contract*: any vocab-dim sparse encoder drops into the index, and
+approximate search matches exact search over those embeddings.
+
+    PYTHONPATH=src python examples/lsr_end_to_end.py
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import SeismicConfig, SearchParams, build_index, search_batch
+from repro.core.baselines import exact_search
+from repro.core.oracle import recall_at_k
+from repro.models.api import get_bundle
+from repro.models.transformer import lm
+from repro.sparse.ops import PaddedSparse, sparsify
+
+
+def splade_pool(logits: jax.Array, mask: jax.Array) -> jax.Array:
+    """SPLADE pooling: max over positions of log(1 + relu(logit))."""
+    act = jnp.log1p(jax.nn.relu(logits.astype(jnp.float32)))
+    act = jnp.where(mask[..., None], act, 0.0)
+    return act.max(axis=1)                       # [B, V]
+
+
+def main():
+    bundle = get_bundle("llama3-8b")
+    cfg = bundle.reduced                          # vocab 256 toy encoder
+    params = bundle.init(jax.random.PRNGKey(0), cfg, {})
+    rng = np.random.default_rng(0)
+
+    print("== encoding 'documents' and 'queries' with the LM ==")
+    n_docs, n_queries, seq = 2048, 32, 24
+    doc_tokens = rng.integers(0, cfg.vocab, (n_docs, seq)).astype(np.int32)
+    # queries are prefixes of some docs -> they have true near neighbors
+    q_docs = rng.choice(n_docs, n_queries, replace=False)
+    q_tokens = doc_tokens[q_docs][:, :12]
+    q_tokens = np.pad(q_tokens, ((0, 0), (0, seq - 12)))
+
+    @jax.jit
+    def encode(tokens):
+        logits, _ = lm.forward(params, tokens, cfg)
+        mask = jnp.asarray(tokens) != 0
+        return splade_pool(logits, mask)
+
+    doc_emb = np.concatenate([np.asarray(encode(jnp.asarray(
+        doc_tokens[i:i + 256]))) for i in range(0, n_docs, 256)])
+    q_emb = np.asarray(encode(jnp.asarray(q_tokens)))
+    nnz = (doc_emb > 0).sum(-1).mean()
+    print(f"   embeddings: dim={cfg.vocab}, doc nnz(mean)={nnz:.0f}")
+
+    print("== sparsify + index with Seismic ==")
+    docs = sparsify(jnp.asarray(doc_emb), nnz_max=64)
+    queries = sparsify(jnp.asarray(q_emb), nnz_max=32)
+    index = build_index(docs, SeismicConfig(lam=128, beta=8, alpha=0.4,
+                                            block_cap=32, summary_nnz=32),
+                        list_chunk=16)
+
+    _, exact_ids = exact_search(docs, queries, 10)
+    for budget in (24, 64, 128):
+        p = SearchParams(k=10, cut=12, block_budget=budget, policy="adaptive")
+        _, ids, ev = search_batch(index, queries, p)
+        rec = np.mean([recall_at_k(np.asarray(ids[q]),
+                                   np.asarray(exact_ids[q]))
+                       for q in range(n_queries)])
+        hit = np.mean([q_docs[q] in np.asarray(ids[q])
+                       for q in range(n_queries)])
+        print(f"   budget={budget:3d} recall@10 vs exact = {rec:.3f}  "
+              f"(docs evaluated {int(np.asarray(ev).mean())}/{n_docs})  "
+              f"source-doc hit rate: {hit:.2f}")
+    print("   NOTE: an untrained encoder emits near-dense embeddings with"
+          " weak concentration of importance; recall climbs slowly with"
+          " budget — the paper's efficiency PRESUMES the concentration"
+          " property (§4), which trained SPLADE models exhibit and the"
+          " synthetic benchmarks reproduce.")
+
+
+if __name__ == "__main__":
+    main()

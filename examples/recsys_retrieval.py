@@ -1,0 +1,61 @@
+"""Beyond-paper application: Seismic for recsys candidate retrieval.
+
+SASRec's retrieval cell is a MIPS over the item-embedding table
+(DESIGN.md §5). Dense item embeddings are sparsified (top-t entries of
+a nonneg-transformed embedding) and indexed with Seismic; the user
+state queries the index instead of brute-forcing all items.
+
+    PYTHONPATH=src python examples/recsys_retrieval.py
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import SeismicConfig, SearchParams, build_index, search_batch
+from repro.models.api import get_bundle
+from repro.models.recsys import sasrec
+from repro.sparse.ops import PaddedSparse, sparsify
+
+
+def main():
+    bundle = get_bundle("sasrec")
+    import dataclasses
+    cfg = dataclasses.replace(bundle.reduced, n_items=4096, embed_dim=32)
+    params = bundle.init(jax.random.PRNGKey(0), cfg, {})
+    rng = np.random.default_rng(0)
+
+    print("== dense item table -> nonneg sparse embeddings ==")
+    table = np.asarray(params["item_emb"])[:cfg.n_items + 1]
+    # nonnegative decomposition: [relu(x); relu(-x)] keeps inner products
+    nonneg = np.concatenate([np.maximum(table, 0), np.maximum(-table, 0)],
+                            axis=1)                       # [N, 2D]
+    items = sparsify(jnp.asarray(nonneg), nnz_max=16)
+    index = build_index(items, SeismicConfig(lam=128, beta=8, alpha=0.5,
+                                             block_cap=32, summary_nnz=32),
+                        list_chunk=16)
+
+    print("== user states -> queries ==")
+    n_users = 32
+    seqs = rng.integers(1, cfg.n_items, (n_users, cfg.seq_len)).astype(np.int32)
+    states = np.asarray(sasrec.forward(params, jnp.asarray(seqs), cfg))[:, -1]
+    q_nonneg = np.concatenate([np.maximum(states, 0),
+                               np.maximum(-states, 0)], axis=1)
+    queries = sparsify(jnp.asarray(q_nonneg), nnz_max=16)
+
+    print("== Seismic retrieval vs dense brute force ==")
+    dense_scores = states @ table.T                      # [U, N]
+    dense_top = np.argsort(-dense_scores, axis=1)[:, :10]
+    p = SearchParams(k=10, cut=8, block_budget=32, policy="budget")
+    _, ids, ev = search_batch(index, queries, p)
+    overlap = np.mean([len(set(np.asarray(ids[u]).tolist())
+                           & set(dense_top[u].tolist())) / 10
+                       for u in range(n_users)])
+    print(f"   top-10 overlap with dense brute force: {overlap:.2f} "
+          f"(sparsified embeddings, {int(np.asarray(ev).mean())} of "
+          f"{cfg.n_items} items evaluated)")
+    print("   NOTE: overlap is bounded by the top-16-entry sparsification;"
+          " the contract demonstrated is index <-> any sparse encoder.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,80 @@
+"""End-to-end LM training driver: data pipeline -> train loop -> async
+checkpointing -> resume. CPU-sized by default; --arch/--steps/--batch
+scale it up (the same code path the production launcher uses).
+
+    PYTHONPATH=src python examples/train_lm.py --steps 100
+    PYTHONPATH=src python examples/train_lm.py --resume   # picks up ckpt
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.ckpt import CheckpointManager
+from repro.data.pipeline import PrefetchLoader, lm_token_stream
+from repro.models.api import get_bundle
+from repro.train import AdamWConfig, init_opt_state, make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3-8b")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_lm_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--full-config", action="store_true",
+                    help="use the full arch config (needs accelerators)")
+    args = ap.parse_args()
+
+    bundle = get_bundle(args.arch)
+    cfg = bundle.config if args.full_config else bundle.reduced
+    dims = dict(global_batch=args.batch, seq_len=args.seq)
+    print(f"arch={cfg.name} layers={cfg.n_layers} d_model={cfg.d_model}")
+
+    params = bundle.init(jax.random.PRNGKey(0), cfg, dims)
+    n_params = sum(p.size for p in jax.tree.leaves(params))
+    print(f"params: {n_params/1e6:.1f}M")
+    opt = init_opt_state(params)
+    opt_cfg = AdamWConfig(lr=3e-3, warmup_steps=10, total_steps=args.steps)
+    step_fn = jax.jit(make_train_step(bundle.step(cfg, dims, "train"),
+                                      opt_cfg))
+
+    mgr = CheckpointManager(args.ckpt_dir, keep=2)
+    start = 0
+    if args.resume:
+        try:
+            restored, start = mgr.restore_latest(dict(params=params, opt=opt))
+            params, opt = restored["params"], restored["opt"]
+            print(f"resumed from step {start}")
+        except FileNotFoundError:
+            print("no checkpoint found; starting fresh")
+
+    loader = PrefetchLoader(
+        lm_token_stream(cfg.vocab, args.batch, args.seq, seed=start),
+        prefetch=4)
+    t0 = time.time()
+    for i, batch in enumerate(loader):
+        step = start + i
+        if i >= args.steps:
+            break
+        batch = {k: jnp.asarray(v) for k, v in batch.items()}
+        params, opt, metrics = step_fn(params, opt, batch)
+        if step % 10 == 0:
+            print(f"step {step:5d}  loss={float(metrics['loss']):.4f}  "
+                  f"lr={float(metrics['lr']):.2e}  "
+                  f"gnorm={float(metrics['grad_norm']):.2f}  "
+                  f"{(time.time()-t0)/(i+1)*1000:.0f} ms/step")
+        if step > 0 and step % args.ckpt_every == 0:
+            mgr.save_async(step, dict(params=params, opt=opt))
+    loader.close()
+    mgr.save_async(start + args.steps, dict(params=params, opt=opt))
+    mgr.wait()
+    print("done; checkpoints in", args.ckpt_dir)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,6 @@
+from repro.configs.base import (ARCH_REGISTRY, ArchConfig, GNNConfig,
+                                RecsysConfig, TransformerConfig, get_arch,
+                                list_archs)
+
+__all__ = ["ARCH_REGISTRY", "ArchConfig", "GNNConfig", "RecsysConfig",
+           "TransformerConfig", "get_arch", "list_archs"]

@@ -1,0 +1,43 @@
+"""The paper's own system as a selectable arch: Seismic over a
+SPLADE-statistics MS MARCO-scale collection (8.8M docs, vocab 30522,
+lambda=6000, beta=400, alpha=0.4 — the paper's best MS MARCO settings,
+§7.1). The dry-run lowers the distributed query step; CPU experiments
+use the reduced config."""
+import dataclasses
+
+from repro.configs.base import ShapeCell
+from repro.core.types import SeismicConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class SeismicArchConfig:
+    name: str
+    index: SeismicConfig
+    n_docs: int
+    dim: int
+    doc_nnz: int
+    query_nnz: int
+
+    @property
+    def family(self) -> str:
+        return "retrieval"
+
+
+CONFIG = SeismicArchConfig(
+    name="seismic-msmarco",
+    index=SeismicConfig(lam=6000, beta=400, alpha=0.4, block_cap=64,
+                        summary_nnz=96, fwd_dtype="bfloat16"),
+    n_docs=8_841_823, dim=30522, doc_nnz=128, query_nnz=48)
+
+SHAPES = [
+    ShapeCell("query_batch", "retrieval", dict(batch=4096, k=10, cut=10,
+                                               block_budget=64)),
+    ShapeCell("query_online", "retrieval", dict(batch=256, k=10, cut=10,
+                                                block_budget=64)),
+]
+
+REDUCED = SeismicArchConfig(
+    name="seismic-reduced",
+    index=SeismicConfig(lam=128, beta=8, alpha=0.4, block_cap=32,
+                        summary_nnz=32),
+    n_docs=2048, dim=1024, doc_nnz=48, query_nnz=16)

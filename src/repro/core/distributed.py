@@ -1,0 +1,100 @@
+"""Distributed Seismic: doc-sharded indexes, query fan-out, top-k merge.
+
+Scale-out design (DESIGN.md §4): the corpus is sharded over the mesh's
+``model`` (and optionally ``pod``) axes; every shard owns a complete
+local Seismic index over its documents. Queries are sharded over
+``data``. A query executes its local search on every doc shard, then an
+``all_gather`` of the per-shard (score, global_id) top-k over the doc
+axes and a vectorized merge produce the global top-k. Per-query
+collective volume is O(k * n_doc_shards) — independent of corpus size.
+
+The stacked index (leading axis = doc shard) is a regular pytree, so
+``jax.jit`` + ``shard_map`` drive the whole thing; the same function is
+what the multi-pod dry-run lowers for the retrieval cells.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core.build import build_index
+from repro.core.query import SearchParams, _search_one
+from repro.core.types import SeismicConfig
+from repro.sparse.ops import PaddedSparse
+
+
+def shard_collection(docs: PaddedSparse, n_shards: int) -> PaddedSparse:
+    """Pad N to a multiple of n_shards and add a leading shard axis:
+    [S, N/S, nnz]."""
+    n = docs.n
+    per = -(-n // n_shards)
+    pad = per * n_shards - n
+    coords = jnp.pad(docs.coords, ((0, pad), (0, 0)))
+    vals = jnp.pad(docs.vals, ((0, pad), (0, 0)))
+    return PaddedSparse(coords.reshape(n_shards, per, -1),
+                        vals.reshape(n_shards, per, -1), docs.dim)
+
+
+def build_sharded_index(docs: PaddedSparse, cfg: SeismicConfig,
+                        n_shards: int, *, list_chunk: int = 32):
+    """Build one local index per doc shard; returns a stacked pytree
+    whose every array leaf has a leading [n_shards] axis."""
+    sharded = shard_collection(docs, n_shards)
+    indexes = []
+    for s in range(n_shards):
+        shard_docs = PaddedSparse(sharded.coords[s], sharded.vals[s], docs.dim)
+        indexes.append(build_index(shard_docs, cfg, list_chunk=list_chunk))
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *indexes)
+
+
+def make_distributed_search(mesh, p: SearchParams,
+                            doc_axes=("model",), data_axis="data"):
+    """Returns ``search(stacked_index, q_coords, q_vals) -> (scores, ids)``
+    running under shard_map on ``mesh``.
+
+    stacked_index leaves: [n_doc_shards, ...] sharded over ``doc_axes``.
+    q_coords/q_vals: [Q, nnz] sharded over ``data_axis``.
+    output: (scores [Q,k], global ids [Q,k]) sharded over ``data_axis``.
+    """
+    index_spec = P(doc_axes)
+    q_spec = P(data_axis)
+
+    def local_search(index_shard, q_coords, q_vals):
+        # every leaf arrives as [1, ...] on its doc-shard device
+        local = jax.tree.map(lambda x: x[0], index_shard)
+        per_shard = local.fwd.coords.shape[0]
+
+        def one(c, v):
+            s, ids, _ = _search_one(local, c, v, p)
+            return s, ids
+
+        scores, ids = jax.vmap(one)(q_coords, q_vals)          # [Ql, k]
+
+        # globalize ids with the shard offset (row-major over doc axes)
+        shard_id = jax.lax.axis_index(doc_axes[0])
+        for ax in doc_axes[1:]:
+            shard_id = shard_id * jax.lax.axis_size(ax) + jax.lax.axis_index(ax)
+        gids = jnp.where(ids >= 0, ids + shard_id * per_shard, -1)
+
+        # fan-in: gather every shard's top-k, merge
+        all_s, all_g = scores, gids
+        for ax in doc_axes:
+            all_s = jax.lax.all_gather(all_s, ax)              # [Pax, Q, kk]
+            all_g = jax.lax.all_gather(all_g, ax)
+            all_s = jnp.moveaxis(all_s, 0, 1).reshape(scores.shape[0], -1)
+            all_g = jnp.moveaxis(all_g, 0, 1).reshape(scores.shape[0], -1)
+        top_s, pos = jax.lax.top_k(all_s, p.k)
+        top_g = jnp.take_along_axis(all_g, pos, axis=-1)
+        return top_s, top_g
+
+    def search(stacked_index, q_coords, q_vals):
+        specs = jax.tree.map(lambda _: index_spec, stacked_index)
+        fn = jax.shard_map(
+            local_search, mesh=mesh,
+            in_specs=(specs, q_spec, q_spec),
+            out_specs=(q_spec, q_spec),
+            check_vma=False)  # outputs replicated over doc axes post-gather
+        return fn(stacked_index, q_coords, q_vals)
+
+    return search

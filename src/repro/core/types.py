@@ -1,0 +1,102 @@
+"""Seismic index data model (fixed-shape, shardable pytrees).
+
+Layout decisions vs the paper (§5, Fig. 3):
+
+  * Inverted lists are a dense ``[n_coords, lam]`` doc-id matrix,
+    *block-permuted*: after geometric clustering each list's entries
+    are reordered so blocks occupy contiguous ranges. A block is then
+    just ``(offset, length)`` into its list row.
+  * Geometric clusters larger than ``block_cap`` are split into
+    multiple *physical* blocks (each gets its own summary — strictly
+    tighter than one summary for the whole cluster). This bounds the
+    query-time gather window to ``block_cap`` and keeps shapes static.
+    The physical block axis has size
+    ``n_blocks = beta + ceil(lam / block_cap)``.
+  * Summaries are alpha-mass subvectors of the coordinate-wise max
+    (Eq. 2), stored padded to ``summary_nnz`` entries and 8-bit
+    quantized with per-block (scale, zero).
+  * The forward index is the PaddedSparse collection itself (paper
+    stores fp16; we default to bf16-compatible fp32-on-CPU and cast
+    per config).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+
+from repro.sparse.ops import PaddedSparse
+
+
+@dataclasses.dataclass(frozen=True)
+class SeismicConfig:
+    """Indexing hyper-parameters (paper's lambda, beta, alpha)."""
+
+    lam: int = 256            # max inverted-list length (static pruning)
+    beta: int = 16            # max geometric clusters per list
+    alpha: float = 0.4        # summary alpha-mass fraction
+    block_cap: int = 64       # physical block capacity (gather window)
+    summary_nnz: int = 64     # padded summary size
+    fwd_dtype: str = "float32"   # forward index value dtype
+    fwd_quant: bool = False      # compact forward index: u8 values with
+    #                              per-doc affine scale + u16 coords when
+    #                              dim < 65536 (beyond-paper, §Perf —
+    #                              halves scoring-phase HBM traffic)
+    cluster_mode: str = "gather"  # "gather" | "matmul" (MXU densified)
+    # §6 generalized architecture knobs:
+    blocking: str = "geometric"   # "geometric" (shallow K-Means) |
+    #                               "fixed" (impact-order chunks, Fig. 5)
+    summary_kind: str = "max"     # "max" (Eq. 2 upper bound) |
+    #                               "centroid" (mean sketch, §6)
+    seed: int = 0
+
+    @property
+    def n_blocks(self) -> int:
+        return self.beta + math.ceil(self.lam / self.block_cap)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class SeismicIndex:
+    """The built index. All arrays are fixed-shape; ``n_docs`` is the
+    sentinel doc id (one past the last real doc)."""
+
+    fwd: PaddedSparse                # forward index  [N, nnz_d]
+    list_docs: jax.Array             # int32 [L, lam]  block-permuted doc ids (N = pad)
+    list_vals: jax.Array             # fwd value of the list coordinate  [L, lam]
+    list_len: jax.Array              # int32 [L]
+    block_off: jax.Array             # int32 [L, n_blocks]
+    block_len: jax.Array             # int32 [L, n_blocks] (0 = unused)
+    sum_coords: jax.Array            # int32 [L, n_blocks, S]
+    sum_q: jax.Array                 # uint8 [L, n_blocks, S]
+    sum_scale: jax.Array             # f32   [L, n_blocks]
+    sum_zero: jax.Array              # f32   [L, n_blocks]
+    # compact forward index (fwd_quant=True): per-doc dequant constants
+    fwd_scale: jax.Array | None = None   # f32 [N]
+    fwd_zero: jax.Array | None = None    # f32 [N]
+    config: SeismicConfig = dataclasses.field(metadata=dict(static=True),
+                                              default_factory=SeismicConfig)
+
+    @property
+    def dim(self) -> int:
+        return self.fwd.dim
+
+    @property
+    def n_docs(self) -> int:
+        return self.fwd.n
+
+    @property
+    def n_lists(self) -> int:
+        return self.list_docs.shape[0]
+
+    def nbytes(self) -> dict:
+        """Index size accounting (Table 2 analog)."""
+        fwd = self.fwd.coords.nbytes + self.fwd.vals.nbytes
+        inv = (self.list_docs.nbytes + self.list_vals.nbytes
+               + self.list_len.nbytes + self.block_off.nbytes
+               + self.block_len.nbytes)
+        summaries = (self.sum_coords.nbytes + self.sum_q.nbytes
+                     + self.sum_scale.nbytes + self.sum_zero.nbytes)
+        return dict(forward=fwd, inverted=inv, summaries=summaries,
+                    total=fwd + inv + summaries)

@@ -1,0 +1,3 @@
+from repro.data.synthetic_sparse import SyntheticSparseConfig, make_collection
+
+__all__ = ["SyntheticSparseConfig", "make_collection"]

@@ -1,0 +1,4 @@
+from repro.distributed.sharding import (dp_axes, logical, mesh_axis_size,
+                                        shard, tp_axis)
+
+__all__ = ["shard", "logical", "dp_axes", "tp_axis", "mesh_axis_size"]

@@ -1,0 +1,126 @@
+"""Collective-bytes extraction from compiled HLO text.
+
+``cost_analysis()`` has no collective accounting, so we parse the
+(post-SPMD, per-device) module: every all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute contributes the byte
+size of its RESULT shape(s) (async ``-start`` forms counted once,
+``-done`` skipped). This is the per-device wire volume under the
+convention that one collective moves ~result-size bytes per device;
+all-reduce's 2x (reduce-scatter + all-gather) factor is folded into
+the roofline's link-efficiency margin rather than double-counted here.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+}
+
+_SHAPE_RE = re.compile(r"(pred|[suf]\d+|bf16|f16)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"=\s*((?:\([^)]*\))|(?:[a-z0-9_]+\[[^\]]*\]\S*))\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES.get(dt, 4)
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Returns {op_kind: bytes, ..., 'total': bytes, 'total_wire': bytes}
+    per device. 'total' sums result shapes (the table convention);
+    'total_wire' weights all-reduce 2x (its ring realization is a
+    reduce-scatter + all-gather), the more faithful wire volume used by
+    the §Perf iterations."""
+    out: dict = defaultdict(int)
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        result_type, kind, _ = m.groups()
+        out[kind] += _shape_bytes(result_type)
+    out["total"] = sum(v for k, v in out.items() if k != "total")
+    out["total_wire"] = out["total"] + out.get("all-reduce", 0)
+    return dict(out)
+
+
+def count_ops(hlo_text: str, names=("fusion", "dot", "custom-call")) -> dict:
+    out = {}
+    for n in names:
+        out[n] = len(re.findall(rf"\b{re.escape(n)}\b", hlo_text))
+    return out
+
+
+# ---------------------------------------------------------------------
+# Dot-flop accounting. XLA:CPU's cost_analysis() misses flops inside
+# fusion/while called computations, so we count matmul flops directly
+# from the HLO text: flops(dot) = 2 * prod(result_shape)
+#                               * prod(lhs contracting dim sizes).
+# Valid when no while loops remain (the dry-run probe lowers models
+# UNROLLED); `n_while` in the result flags any leftover loops whose
+# bodies would be counted once.
+# ---------------------------------------------------------------------
+
+_DEF_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*((?:\([^=]*?\))|(?:\w+\[[^\]]*\]\S*))\s+(\w[\w\-]*)\(")
+_DOT_OPERANDS_RE = re.compile(r"dot\(\s*(?:\w+\[[^\]]*\]\S*\s+)?%?([\w.\-]+)")
+_LHS_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_FIRST_SHAPE_RE = re.compile(r"(pred|[suf]\d+|bf16|f16)\[([\d,]*)\]")
+
+
+def _dims(type_text: str) -> list[int]:
+    m = _FIRST_SHAPE_RE.search(type_text)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+def hlo_dot_flops(hlo_text: str) -> dict:
+    """Sum matmul flops over every computation in the module."""
+    total = 0.0
+    n_dots = 0
+    sym: dict[str, str] = {}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        if stripped.endswith("{"):      # new computation -> new scope
+            sym = {}
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        name, rtype, op = m.groups()
+        sym[name] = rtype
+        if op != "dot":
+            continue
+        om = _DOT_OPERANDS_RE.search(line)
+        cm = _LHS_CONTRACT_RE.search(line)
+        if not om or not cm:
+            continue
+        lhs_name = om.group(1)
+        lhs_type = sym.get(lhs_name)
+        if lhs_type is None:
+            continue
+        lhs_dims = _dims(lhs_type)
+        contract = [int(d) for d in cm.group(1).split(",") if d]
+        k = 1
+        for c in contract:
+            if c < len(lhs_dims):
+                k *= lhs_dims[c]
+        out_elems = 1
+        for d in _dims(rtype):
+            out_elems *= d
+        total += 2.0 * out_elems * k
+        n_dots += 1
+    n_while = len(re.findall(r"\bwhile\(", hlo_text))
+    return dict(dot_flops=total, n_dots=n_dots, n_while=n_while)

@@ -1,0 +1,164 @@
+"""Rule-based parameter/batch/cache PartitionSpecs.
+
+One place maps every param leaf to its mesh axes (Megatron-style TP on
+"model"; DP axes = ("pod", "data") when present). ZeRO-1 sharding of
+the optimizer state over the DP axes is a transform on these specs.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import PartitionSpec as P
+from jax.tree_util import DictKey, SequenceKey
+
+TP = "model"
+
+
+def _names(path) -> list[str]:
+    out = []
+    for p in path:
+        if isinstance(p, DictKey):
+            out.append(str(p.key))
+        elif isinstance(p, SequenceKey):
+            out.append(f"[{p.idx}]")
+    return out
+
+
+def _lm_rule(names: list[str], ndim: int) -> P:
+    name = names[-1]
+    stacked = "layers" in names
+    base_nd = ndim - (1 if stacked else 0)
+    if name in ("embed", "out_embed"):
+        return P(TP, None)
+    if name in ("wq", "wk", "wv", "w_uk", "w_uv"):
+        spec = (None, TP)
+    elif name == "wo":
+        spec = (TP, None)
+    elif name in ("w1", "w3"):
+        # dense ffn [d, ff] -> col shard; moe experts [E, d, ff] -> E shard
+        spec = (TP, None, None) if base_nd == 3 else (None, TP)
+    elif name == "w2":
+        spec = (TP, None, None) if base_nd == 3 else (TP, None)
+    elif name in ("w_dkv", "w_kr", "router"):
+        spec = (None,) * base_nd
+    else:  # norms, biases, scalars
+        spec = (None,) * base_nd
+    if stacked:
+        spec = (None,) + tuple(spec)
+    return P(*spec)
+
+
+def _lm_rule_fsdp(names: list[str], ndim: int, shape) -> P:
+    """FSDP: every weight matrix row-sharded over (data, model); per-
+    layer all-gathers replace the per-token TP all-reduces. Vocab
+    matrices keep the Megatron vocab shard on model (2D: fsdp body +
+    vocab-parallel head)."""
+    name = names[-1]
+    stacked = "layers" in names
+    base_nd = ndim - (1 if stacked else 0)
+    base_shape = shape[1:] if stacked else shape
+    if name in ("embed", "out_embed"):
+        return P(("data", TP), None)
+    two_plus = base_nd >= 2
+    if two_plus and name not in ("router",):
+        # shard the first dim divisible by the full world
+        spec = [None] * base_nd
+        for i, dim in enumerate(base_shape):
+            if dim % (16 * 16) == 0:
+                spec[i] = ("data", TP)
+                break
+        else:
+            for i, dim in enumerate(base_shape):
+                if dim % 16 == 0:
+                    spec[i] = TP
+                    break
+    else:
+        spec = [None] * base_nd
+    if stacked:
+        spec = [None] + spec
+    return P(*spec)
+
+
+def lm_param_specs(params, mode: str = "tp") -> dict:
+    """PartitionSpec tree for LM params (works on arrays or SDS)."""
+    if mode == "fsdp":
+        return jax.tree_util.tree_map_with_path(
+            lambda path, leaf: _lm_rule_fsdp(_names(path), leaf.ndim,
+                                             leaf.shape), params)
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: _lm_rule(_names(path), np.ndim(leaf) if not
+                                    hasattr(leaf, "ndim") else leaf.ndim),
+        params)
+
+
+def recsys_param_specs(params) -> dict:
+    """Embedding tables row-sharded over TP; everything else replicated."""
+    def rule(path, leaf):
+        names = _names(path)
+        name = names[-1]
+        if name in ("item_emb", "emb", "v", "w_lin", "wide") \
+                and leaf.ndim == 2 and leaf.shape[0] % 16 == 0:
+            return P(TP, None)
+        return P(*(None,) * leaf.ndim)
+    return jax.tree_util.tree_map_with_path(rule, params)
+
+
+def gnn_param_specs(params) -> dict:
+    return jax.tree.map(lambda l: P(*(None,) * l.ndim), params)
+
+
+def cache_specs(cache, dp, dp_size: int = 0, tp_size: int = 0) -> dict:
+    """Decode caches: batch over DP, cache length over TP (updates use
+    the one-hot formulation so the sharded dim partitions cleanly).
+    Small batches (e.g. long_500k's batch=1) fall back to sharding the
+    cache length over DP+TP together."""
+    def rule(path, leaf):
+        names = _names(path)
+        name = names[-1]
+        if name in ("k", "v", "ckv", "kr", "k_local", "v_local",
+                    "k_global", "v_global"):       # [L, B, T, ...]
+            b, t = leaf.shape[1], leaf.shape[2]
+            if dp_size and b % dp_size != 0:
+                axes = (tuple(dp) if isinstance(dp, (tuple, list))
+                        else (dp,)) + (TP,)
+                size = dp_size * max(tp_size, 1)
+                if t % size == 0:
+                    return P(None, None, axes, *(None,) * (leaf.ndim - 3))
+                return P(None, None, TP, *(None,) * (leaf.ndim - 3))
+            return P(None, dp, TP, *(None,) * (leaf.ndim - 3))
+        if name in ("k0", "v0", "ckv0", "kr0"):    # [B, T, ...]
+            b = leaf.shape[0]
+            if dp_size and b % dp_size != 0:
+                return P(None, TP, *(None,) * (leaf.ndim - 2))
+            return P(dp, TP, *(None,) * (leaf.ndim - 2))
+        return P(*(None,) * leaf.ndim)
+    return jax.tree_util.tree_map_with_path(rule, cache)
+
+
+def zero_shard_spec(spec: P, shape: tuple, dp, dp_size: int) -> P:
+    """ZeRO-1: additionally shard the first dim that is unsharded and
+    divisible by the DP world size. No-op for params already sharded
+    over a DP axis (FSDP mode)."""
+    parts = list(spec) + [None] * (len(shape) - len(spec))
+    dp_axes = set(dp) if isinstance(dp, (tuple, list)) else {dp}
+    for ax in parts:
+        axes = set(ax) if isinstance(ax, (tuple, list)) else {ax}
+        if axes & dp_axes:
+            return P(*parts)          # already DP-sharded
+    for i, (ax, dim) in enumerate(zip(parts, shape)):
+        if ax is None and dim % dp_size == 0 and dim >= dp_size:
+            parts[i] = dp
+            return P(*parts)
+    return P(*parts)
+
+
+def opt_state_specs(param_specs, params, *, zero: bool = False,
+                    dp=("pod", "data"), dp_size: int = 1) -> dict:
+    """Optimizer-state specs mirror the params; ZeRO adds DP sharding."""
+    if not zero:
+        mv = param_specs
+    else:
+        mv = jax.tree.map(
+            lambda s, p: zero_shard_spec(s, p.shape, dp, dp_size),
+            param_specs, params)
+    return dict(m=mv, v=mv, step=P())

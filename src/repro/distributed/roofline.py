@@ -1,0 +1,78 @@
+"""Roofline math for TPU v5e (the TARGET hardware; this container is
+CPU-only so terms are derived from the compiled artifact, not walltime).
+
+Hardware constants (per chip):
+  peak bf16 compute : 197 TFLOP/s
+  HBM bandwidth     : 819 GB/s
+  ICI link bandwidth: ~50 GB/s per link (3D-torus links per chip
+                      counted as ``n_links``; the conservative default
+                      1 attributes all collective bytes to one link)
+
+Terms (seconds, per device, per step):
+  T_compute    = flops / PEAK_FLOPS
+  T_memory     = hbm_bytes / HBM_BW
+  T_collective = collective_bytes / (n_links * ICI_BW)
+"""
+from __future__ import annotations
+
+import dataclasses
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+
+@dataclasses.dataclass(frozen=True)
+class Roofline:
+    flops: float
+    hbm_bytes: float
+    coll_bytes: float
+    n_links: int = 1
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes / (self.n_links * ICI_BW)
+
+    @property
+    def bottleneck(self) -> str:
+        terms = dict(compute=self.t_compute, memory=self.t_memory,
+                     collective=self.t_collective)
+        return max(terms, key=terms.get)
+
+    @property
+    def t_bound(self) -> float:
+        """Lower-bound step time = max term (perfect overlap)."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    def compute_fraction(self) -> float:
+        """How compute-bound the cell is: t_compute / t_bound. 1.0 means
+        the chip's MXUs are the limiter (the roofline optimum for
+        flops-dominated kernels)."""
+        t = self.t_bound
+        return self.t_compute / t if t > 0 else 0.0
+
+    def as_dict(self) -> dict:
+        return dict(flops=self.flops, hbm_bytes=self.hbm_bytes,
+                    coll_bytes=self.coll_bytes,
+                    t_compute=self.t_compute, t_memory=self.t_memory,
+                    t_collective=self.t_collective,
+                    bottleneck=self.bottleneck,
+                    compute_fraction=self.compute_fraction())
+
+
+def model_flops_train(n_params_active: int, n_tokens: int) -> float:
+    """6 * N * D for one training step (fwd+bwd)."""
+    return 6.0 * n_params_active * n_tokens
+
+
+def model_flops_infer(n_params_active: int, n_tokens: int) -> float:
+    """2 * N * D for forward-only."""
+    return 2.0 * n_params_active * n_tokens

@@ -1,0 +1,75 @@
+"""Logical-axis sharding helpers.
+
+Model code annotates tensors with *logical* axes ("dp", "tp", None);
+these resolve against the ambient mesh (set via ``jax.set_mesh``):
+
+  "dp" -> every data-parallel axis present:   ("pod", "data")
+  "tp" -> the tensor/model-parallel axis:     "model"
+
+With no ambient mesh (single-device smoke tests) every constraint is a
+no-op, so the same model code runs unsharded on CPU and sharded on the
+production meshes without changes.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+
+def _ambient_axes() -> tuple[str, ...]:
+    mesh = jax.sharding.get_abstract_mesh()
+    if mesh is None or mesh.empty:
+        return ()
+    return tuple(mesh.axis_names)
+
+
+def dp_axes() -> tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in _ambient_axes())
+
+
+def tp_axis() -> str | None:
+    return "model" if "model" in _ambient_axes() else None
+
+
+def mesh_axis_size(name: str) -> int:
+    mesh = jax.sharding.get_abstract_mesh()
+    if mesh is None or mesh.empty or name not in mesh.axis_names:
+        return 1
+    return mesh.shape[name]
+
+
+def _resolve(n):
+    if n == "dp":
+        ax = dp_axes()
+        return ax if ax else None
+    if n == "tp":
+        return tp_axis()
+    if n is None:
+        return None
+    return n if n in _ambient_axes() else None
+
+
+def logical(*names) -> P:
+    """Resolve logical axis names to a PartitionSpec on the ambient
+    mesh. A tuple entry (e.g. ("dp", "tp")) combines the resolved axes
+    of its members onto one positional dimension (FSDP batch)."""
+    out = []
+    for n in names:
+        if isinstance(n, tuple):
+            axes: list = []
+            for m in n:
+                r = _resolve(m)
+                if r is None:
+                    continue
+                axes.extend(r if isinstance(r, tuple) else (r,))
+            out.append(tuple(axes) if axes else None)
+        else:
+            out.append(_resolve(n))
+    return P(*out)
+
+
+def shard(x: jax.Array, *names) -> jax.Array:
+    """with_sharding_constraint against logical axes; no-op without a mesh."""
+    if not _ambient_axes():
+        return x
+    return jax.lax.with_sharding_constraint(x, logical(*names))

@@ -1,0 +1,47 @@
+"""Public wrapper: GQA-aware flash attention with padding + head fold."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.flash_attention import flash_attention_pallas
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    sm_scale: float | None = None, causal: bool = True,
+                    window: int | None = None,
+                    tile_q: int = 128, tile_k: int = 128) -> jax.Array:
+    """q [B, Hq, Sq, D], k/v [B, Hkv, Sk, D] (Hq % Hkv == 0) -> q-shaped.
+
+    Pads Sq/Sk to tile multiples, folds (B, H) into the kernel batch,
+    expands kv heads for GQA (a production kernel indexes instead).
+    """
+    b, hq, sq, dh = q.shape
+    hkv, sk = k.shape[1], k.shape[2]
+    assert hq % hkv == 0
+    if sm_scale is None:
+        sm_scale = dh ** -0.5
+    group = hq // hkv
+    if group > 1:
+        k = jnp.repeat(k, group, axis=1)
+        v = jnp.repeat(v, group, axis=1)
+    pad_q = (-sq) % tile_q
+    pad_k = (-sk) % tile_k
+    qf = jnp.pad(q, ((0, 0), (0, 0), (0, pad_q), (0, 0))).reshape(
+        b * hq, sq + pad_q, dh)
+    kf = jnp.pad(k, ((0, 0), (0, 0), (0, pad_k), (0, 0))).reshape(
+        b * hq, sk + pad_k, dh)
+    vf = jnp.pad(v, ((0, 0), (0, 0), (0, pad_k), (0, 0))).reshape(
+        b * hq, sk + pad_k, dh)
+    out = flash_attention_pallas(
+        qf, kf, vf, sm_scale=sm_scale, causal=causal, window=window,
+        kv_len=sk, tile_q=tile_q, tile_k=tile_k, interpret=not _on_tpu())
+    return out[:, :sq].reshape(b, hq, sq, dh)
+
+
+__all__ = ["flash_attention", "attention_ref"]

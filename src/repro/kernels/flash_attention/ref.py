@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for the flash_attention kernel."""
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  sm_scale: float, causal: bool = True,
+                  window: int | None = None,
+                  kv_len: int | None = None) -> jax.Array:
+    """q [BH, Sq, D], k/v [BH, Sk, D] -> [BH, Sq, D]; full softmax."""
+    sq, sk = q.shape[1], k.shape[1]
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * sm_scale
+    q_pos = jnp.arange(sq)[:, None]
+    k_pos = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), bool)
+    if kv_len is not None:
+        mask &= k_pos < kv_len
+    if causal:
+        mask &= k_pos <= q_pos
+    if window is not None:
+        mask &= k_pos > q_pos - window
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    # fully-masked rows produce uniform p; zero them for parity
+    any_valid = mask.any(-1)
+    p = jnp.where(any_valid[None, :, None], p, 0.0)
+    return jnp.einsum("bqk,bkd->bqd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,3 @@
+from repro.kernels.gather_dot.ops import gather_dot
+
+__all__ = ["gather_dot"]

@@ -1,0 +1,32 @@
+"""jit'd public wrapper for the gather_dot kernel: pads N to the tile
+size, picks interpret mode off-TPU, falls back to ref on any platform
+where neither applies."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.gather_dot.gather_dot import gather_dot_pallas
+from repro.kernels.gather_dot.ref import gather_dot_ref
+
+_TILE = 128
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def gather_dot(q_dense: jax.Array, coords: jax.Array,
+               vals: jax.Array) -> jax.Array:
+    """Batched sparse·dense scoring with tile padding. [N,nnz] -> [N]."""
+    n = coords.shape[0]
+    pad = (-n) % _TILE
+    if pad:
+        coords = jnp.pad(coords, ((0, pad), (0, 0)))
+        vals = jnp.pad(vals, ((0, pad), (0, 0)))
+    out = gather_dot_pallas(q_dense, coords, vals, tile_n=_TILE,
+                            interpret=not _on_tpu())
+    return out[:n]
+
+
+__all__ = ["gather_dot", "gather_dot_ref"]

@@ -1,0 +1,10 @@
+"""Pure-jnp oracle for the gather_dot kernel."""
+import jax
+import jax.numpy as jnp
+
+
+def gather_dot_ref(q_dense: jax.Array, coords: jax.Array,
+                   vals: jax.Array) -> jax.Array:
+    """scores[n] = sum_j q_dense[coords[n, j]] * vals[n, j]."""
+    return (jnp.take(q_dense, coords, axis=0)
+            * vals.astype(q_dense.dtype)).sum(axis=-1)

@@ -1,0 +1,3 @@
+from repro.kernels.summary_dot.ops import summary_dot
+
+__all__ = ["summary_dot"]

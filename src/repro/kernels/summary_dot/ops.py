@@ -1,0 +1,21 @@
+"""jit'd public wrapper for summary_dot."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.summary_dot.ref import summary_dot_ref
+from repro.kernels.summary_dot.summary_dot import summary_dot_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def summary_dot(q_dense: jax.Array, sum_coords: jax.Array, sum_q: jax.Array,
+                sum_scale: jax.Array, sum_zero: jax.Array) -> jax.Array:
+    """Quantized routing scores [cut, nb]; dequant fused in-kernel."""
+    return summary_dot_pallas(q_dense, sum_coords, sum_q, sum_scale,
+                              sum_zero, interpret=not _on_tpu())
+
+
+__all__ = ["summary_dot", "summary_dot_ref"]

@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for the summary_dot kernel."""
+import jax
+import jax.numpy as jnp
+
+from repro.sparse.quant import dequantize_u8
+
+
+def summary_dot_ref(q_dense: jax.Array, sum_coords: jax.Array,
+                    sum_q: jax.Array, sum_scale: jax.Array,
+                    sum_zero: jax.Array) -> jax.Array:
+    """r[l, b] = <q, dequant(summary[l, b])>."""
+    sv = dequantize_u8(sum_q, sum_scale, sum_zero, dtype=q_dense.dtype)
+    return (jnp.take(q_dense, sum_coords, axis=0) * sv).sum(axis=-1)

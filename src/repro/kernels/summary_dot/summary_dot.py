@@ -1,0 +1,59 @@
+"""Pallas TPU kernel: quantized summary routing (Seismic phase R).
+
+Computes, for every (probed list l, block b):
+
+    r[l, b] = sum_s q_dense[sum_coords[l,b,s]] * dequant(sum_q[l,b,s])
+
+with the u8 affine dequantization ((q-1)*scale + zero, level 0 = pad)
+FUSED into the multiply — the paper's "matrix multiplication against
+all quantized summaries of an inverted list" (§7.1), done without ever
+materializing the dequantized summaries in HBM.
+
+Tiling:
+  grid = (cut,)  — one grid step per probed list
+  blocks: coords/q [1, nb, S] tiles, scale/zero [1, nb], q resident [d]
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _summary_dot_kernel(q_ref, coords_ref, sq_ref, scale_ref, zero_ref,
+                        out_ref):
+    q = q_ref[...]                                  # [d]
+    coords = coords_ref[0]                          # [nb, S]
+    sq = sq_ref[0].astype(q.dtype)                  # [nb, S] u8 -> f
+    scale = scale_ref[0].astype(q.dtype)            # [nb]
+    zero = zero_ref[0].astype(q.dtype)              # [nb]
+    gathered = jnp.take(q, coords, axis=0)          # [nb, S]
+    deq = (sq - 1.0) * scale[:, None] + zero[:, None]
+    deq = jnp.where(sq > 0, deq, 0.0)               # level 0 == padding
+    out_ref[0] = (gathered * deq).sum(axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def summary_dot_pallas(q_dense: jax.Array, sum_coords: jax.Array,
+                       sum_q: jax.Array, sum_scale: jax.Array,
+                       sum_zero: jax.Array, *,
+                       interpret: bool = True) -> jax.Array:
+    """r [cut, nb] from quantized summaries [cut, nb, S]."""
+    cut, nb, s = sum_coords.shape
+    d = q_dense.shape[0]
+    return pl.pallas_call(
+        _summary_dot_kernel,
+        grid=(cut,),
+        in_specs=[
+            pl.BlockSpec((d,), lambda i: (0,)),
+            pl.BlockSpec((1, nb, s), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, nb, s), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, nb), lambda i: (i, 0)),
+            pl.BlockSpec((1, nb), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, nb), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((cut, nb), q_dense.dtype),
+        interpret=interpret,
+    )(q_dense, sum_coords, sum_q, sum_scale, sum_zero)

@@ -1,0 +1,467 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape
+x mesh) cell on the production meshes and record roofline inputs.
+
+This proves the distribution config is coherent without hardware:
+sharding mismatches, compile-time OOM math, and unsupported collectives
+all fail HERE. Per cell it records:
+
+  * compiled.memory_analysis()  (fits-in-HBM evidence)
+  * compiled.cost_analysis()    (per-device FLOPs / bytes)
+  * collective bytes parsed from the compiled HLO
+  * the derived roofline terms (distributed/roofline.py)
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch llama3-8b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--fast]
+
+Results land in experiments/dryrun/<arch>__<shape>__<mesh>.json.
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import get_arch, list_archs
+from repro.distributed.hlo_analysis import collective_bytes, hlo_dot_flops
+from repro.distributed.param_sharding import (cache_specs, opt_state_specs,
+                                              lm_param_specs)
+from repro.distributed.roofline import (Roofline, model_flops_infer,
+                                        model_flops_train)
+from repro.launch.mesh import make_production_mesh
+from repro.models.api import get_bundle
+from repro.train import AdamWConfig, init_opt_state, make_train_step
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun")
+
+
+def _dp(mesh) -> tuple:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _sharding_tree(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def input_specs(arch_id: str, shape_name: str):
+    """ShapeDtypeStruct stand-ins for every model input of a cell —
+    weak-type-correct, shardable, no device allocation."""
+    bundle = get_bundle(arch_id)
+    cell = next(c for c in bundle.shapes if c.name == shape_name)
+    return bundle.batch_specs(bundle.config, cell.dims, cell.kind), cell
+
+
+# ------------------------------------------------------------ LM cells
+
+def _seismic_override(mod, overrides: dict):
+    import types as _t
+    cfg = dataclasses.replace(
+        mod.CONFIG, index=dataclasses.replace(mod.CONFIG.index, **overrides))
+    proxy = _t.SimpleNamespace(CONFIG=cfg, SHAPES=mod.SHAPES,
+                               REDUCED=mod.REDUCED)
+    return proxy
+
+
+def _lower_lm(bundle, cell, mesh, *, microbatches: int = 1):
+    cfg = bundle.config
+    dp = _dp(mesh)
+    batch_sds = bundle.batch_specs(cfg, cell.dims, cell.kind)
+    params_sds = jax.eval_shape(
+        lambda k: bundle.init(k, cfg, cell.dims), jax.random.PRNGKey(0))
+    pspecs = lm_param_specs(params_sds, mode=cfg.sharding_mode)
+    psh = _sharding_tree(mesh, pspecs)
+
+    if cell.kind == "train":
+        opt_sds = jax.eval_shape(init_opt_state, params_sds)
+        ospecs = opt_state_specs(pspecs, params_sds, zero=True, dp=dp,
+                                 dp_size=int(np.prod([mesh.shape[a] for a in dp])))
+        osh = _sharding_tree(mesh, ospecs)
+        bsh = dict(tokens=NamedSharding(mesh, P(dp, None)),
+                   labels=NamedSharding(mesh, P(dp, None)))
+        loss = bundle.step(cfg, cell.dims, "train")
+        step = make_train_step(loss, AdamWConfig(),
+                               microbatches=microbatches)
+        jitted = jax.jit(step, in_shardings=(psh, osh, bsh),
+                         donate_argnums=(0, 1))
+        args = (params_sds, opt_sds, batch_sds)
+    elif cell.kind == "prefill":
+        bsh = dict(tokens=NamedSharding(mesh, P(dp, None)))
+        fwd = bundle.step(cfg, cell.dims, "prefill")
+        jitted = jax.jit(fwd, in_shardings=(psh, bsh))
+        args = (params_sds, batch_sds)
+    else:  # decode
+        cache_sds = jax.eval_shape(
+            lambda: bundle.init_cache(cfg, cell.dims))
+        dp_size = int(np.prod([mesh.shape[a] for a in dp])) if dp else 1
+        cspecs = cache_specs(cache_sds, dp, dp_size=dp_size,
+                             tp_size=mesh.shape.get("model", 1))
+        csh = _sharding_tree(mesh, cspecs)
+        b = cell.dims["global_batch"]
+        tok_spec = P(dp, None) if b % dp_size == 0 else P()
+        bsh = dict(tokens=NamedSharding(mesh, tok_spec),
+                   pos=NamedSharding(mesh, P()))
+        dec = bundle.step(cfg, cell.dims, "decode")
+        jitted = jax.jit(dec, in_shardings=(psh, csh, bsh),
+                         donate_argnums=(1,))
+        args = (params_sds, cache_sds, batch_sds)
+
+    lowered = jitted.lower(*args)
+    # MODEL_FLOPS for the ratio row
+    n_tok = cell.dims["global_batch"] * (cell.dims["seq_len"]
+                                         if cell.kind != "decode" else 1)
+    if cell.kind == "train":
+        mf = model_flops_train(cfg.active_param_count(), n_tok)
+    else:
+        mf = model_flops_infer(cfg.active_param_count(), n_tok)
+    return lowered, mf
+
+
+# ----------------------------------------------------- GNN/recsys cells
+
+def _lower_generic(bundle, cell, mesh):
+    cfg = bundle.config
+    dp = _dp(mesh)
+    all_axes = tuple(mesh.axis_names)
+    batch_sds = bundle.batch_specs(cfg, cell.dims, cell.kind)
+    params_sds = jax.eval_shape(
+        lambda k: bundle.init(k, cfg, cell.dims), jax.random.PRNGKey(0))
+    pspecs = bundle.param_specs(params_sds)
+    psh = _sharding_tree(mesh, pspecs)
+
+    if bundle.family == "gnn":
+        bspec = dict(feats=P(), edges=P(all_axes),
+                     labels=P(), graph_ids=P(), graph_labels=P())
+    else:
+        def bs(name, sds):
+            if name in ("cand",):
+                return P(all_axes)
+            if sds.shape and sds.shape[0] > 1:
+                return P(dp)
+            return P()
+        bspec = {k: bs(k, v) for k, v in batch_sds.items()}
+    bsh = {k: NamedSharding(mesh, bspec[k]) for k in batch_sds}
+
+    if cell.kind == "train":
+        opt_sds = jax.eval_shape(init_opt_state, params_sds)
+        ospecs = opt_state_specs(pspecs, params_sds, zero=False)
+        osh = _sharding_tree(mesh, ospecs)
+        loss = bundle.step(cfg, cell.dims, "train")
+        step = make_train_step(loss, AdamWConfig())
+        jitted = jax.jit(step, in_shardings=(psh, osh, bsh),
+                         donate_argnums=(0, 1))
+        args = (params_sds, opt_sds, batch_sds)
+    else:
+        fn = bundle.step(cfg, cell.dims, cell.kind)
+        jitted = jax.jit(fn, in_shardings=(psh, bsh))
+        args = (params_sds, batch_sds)
+    return jitted.lower(*args), 0.0
+
+
+# --------------------------------------------------------- seismic cell
+
+def _lower_seismic(mod, cell, mesh):
+    from repro.core.distributed import make_distributed_search
+    from repro.core.query import SearchParams
+    from repro.core.types import SeismicConfig, SeismicIndex
+    from repro.sparse.ops import PaddedSparse
+    cfg = mod.CONFIG
+    dp = _dp(mesh)
+    doc_axes = ("model",) if "pod" not in mesh.axis_names else ("pod", "model")
+    n_shards = int(np.prod([mesh.shape[a] for a in doc_axes]))
+    per = -(-cfg.n_docs // n_shards)
+    # per-shard index hyper-params scale with the local corpus: a shard
+    # holding 1/P of the docs keeps lambda/P postings and beta/P blocks
+    # per list (same recall structure, 1/P memory) — what a real
+    # deployment provisions.
+    icfg: SeismicConfig = dataclasses.replace(
+        cfg.index,
+        lam=max(64, cfg.index.lam // n_shards),
+        beta=max(8, cfg.index.beta // n_shards),
+        block_cap=cfg.index.block_cap)
+    d, lam, nb, s = cfg.dim, icfg.lam, icfg.n_blocks, icfg.summary_nnz
+    f16 = jnp.dtype(icfg.fwd_dtype)
+
+    def sds(shape, dtype):
+        return jax.ShapeDtypeStruct((n_shards,) + shape, dtype)
+
+    if icfg.fwd_quant:
+        coord_dt, val_dt = jnp.uint16 if d < 65536 else jnp.int32, jnp.uint8
+        fwd_scale = sds((per,), jnp.float32)
+        fwd_zero = sds((per,), jnp.float32)
+    else:
+        coord_dt, val_dt = jnp.int32, f16
+        fwd_scale = fwd_zero = None
+    index_sds = SeismicIndex(
+        fwd=PaddedSparse(sds((per, cfg.doc_nnz), coord_dt),
+                         sds((per, cfg.doc_nnz), val_dt), d),
+        list_docs=sds((d, lam), jnp.int32),
+        list_vals=sds((d, lam), jnp.float32),
+        list_len=sds((d,), jnp.int32),
+        block_off=sds((d, nb), jnp.int32),
+        block_len=sds((d, nb), jnp.int32),
+        sum_coords=sds((d, nb, s), jnp.int32),
+        sum_q=sds((d, nb, s), jnp.uint8),
+        sum_scale=sds((d, nb), jnp.float32),
+        sum_zero=sds((d, nb), jnp.float32),
+        fwd_scale=fwd_scale, fwd_zero=fwd_zero,
+        config=icfg)
+    q = cell.dims["batch"]
+    q_sds = jax.ShapeDtypeStruct((q, cfg.query_nnz), jnp.int32)
+    v_sds = jax.ShapeDtypeStruct((q, cfg.query_nnz), jnp.float32)
+    p = SearchParams(k=cell.dims["k"], cut=cell.dims["cut"],
+                     block_budget=cell.dims["block_budget"],
+                     policy="budget")
+    search = make_distributed_search(mesh, p, doc_axes=doc_axes,
+                                     data_axis="data")
+    ish = jax.tree.map(lambda _: NamedSharding(mesh, P(doc_axes)), index_sds)
+    qsh = NamedSharding(mesh, P("data"))
+    jitted = jax.jit(search, in_shardings=(ish, qsh, qsh))
+    # analytic per-device flops+bytes (gather-dot heavy; no HLO dots to
+    # count, and memory_analysis charges the resident index rather than
+    # the per-batch touched bytes):
+    #   routing: cut lists x nb blocks x S entries (coords i32 + u8 val)
+    #   scoring: budget x cap candidate docs x nnz (coords i32 + val)
+    q_loc = q // mesh.shape["data"]
+    per_query = (p.cut * nb * s * 2
+                 + p.block_budget * icfg.block_cap * cfg.doc_nnz * 2)
+    analytic = float(q_loc * per_query)
+    if icfg.fwd_quant:
+        entry_b = (2 if d < 65536 else 4) + 1   # u16 coord + u8 value
+        doc_extra = 8                            # per-doc scale+zero
+    else:
+        entry_b = 4 + jnp.dtype(icfg.fwd_dtype).itemsize
+        doc_extra = 0
+    per_query_bytes = (p.cut * nb * s * 5                      # summaries
+                       + p.block_budget * icfg.block_cap
+                       * (cfg.doc_nnz * entry_b + doc_extra)   # fwd rows
+                       + cfg.dim * 4 * 3)                      # q densify
+    return jitted.lower(index_sds, q_sds, v_sds), 0.0, \
+        dict(flops=analytic, bytes=float(q_loc * per_query_bytes))
+
+
+# -------------------------------------------------------------- probes
+#
+# XLA:CPU's cost_analysis() only accounts for the ENTRY computation —
+# scan/while bodies (our layer stacks) report ~zero flops. The probe
+# methodology recovers honest per-device numbers: lower the SAME cell
+# with a few layers UNROLLED (remat off, attention un-chunked so no
+# while loops remain), take per-layer deltas, extrapolate linearly:
+#
+#   total = head_cost + n_layers_of_kind * per_layer_cost(kind)
+#
+# Memory analysis still comes from the production (scanned) compile.
+
+def _probe_cost(bundle, cell, mesh, overrides: dict, *,
+                microbatches: int = 1) -> dict:
+    cfg = bundle.config
+    probe_cfg = dataclasses.replace(
+        cfg, unroll_layers=True, remat="none",
+        attn_q_chunk=max(cell.dims.get("seq_len", 512), 512), **overrides)
+    pb = dataclasses.replace(bundle, config=probe_cfg)
+    lowered, _ = _lower_lm(pb, cell, mesh, microbatches=1)
+    compiled = lowered.compile()
+    hlo = compiled.as_text()
+    dots = hlo_dot_flops(hlo)          # fusion-body-aware matmul flops
+    coll = collective_bytes(hlo)
+    mem = compiled.memory_analysis()
+    traffic = (mem.argument_size_in_bytes + mem.output_size_in_bytes
+               + 2 * mem.temp_size_in_bytes)
+    return dict(flops=dots["dot_flops"], hbm=float(traffic),
+                coll=float(coll.get("total", 0)),
+                coll_wire=float(coll.get("total_wire", 0)),
+                n_while=dots["n_while"])
+
+
+def probe_lm_totals(bundle, cell, mesh, *, microbatches: int = 1) -> dict:
+    """Extrapolated per-device (flops, hbm, coll) for the full depth."""
+    cfg = bundle.config
+    if cfg.local_per_global > 0:          # gemma: local + global deltas
+        c1 = _probe_cost(bundle, cell, mesh, dict(n_layers=1))
+        c2 = _probe_cost(bundle, cell, mesh, dict(n_layers=2))
+        cg = _probe_cost(bundle, cell, mesh,
+                         dict(n_layers=2, local_per_global=1))
+        import numpy as _np
+        from repro.models.transformer.lm import layer_windows
+        wins = layer_windows(cfg)
+        n_local = int((wins > 0).sum())
+        n_global = int((wins == 0).sum())
+        out = {}
+        for k in ("flops", "hbm", "coll", "coll_wire"):
+            d_local = c2[k] - c1[k]
+            d_global = cg[k] - c1[k]
+            head = c1[k] - d_local
+            out[k] = head + n_local * d_local + n_global * d_global
+        out["n_probe_compiles"] = 3
+        return out
+    if cfg.moe:                            # dense0 + (L-1) moe layers
+        c2 = _probe_cost(bundle, cell, mesh, dict(n_layers=2))
+        c3 = _probe_cost(bundle, cell, mesh, dict(n_layers=3))
+        n_moe = cfg.n_layers - cfg.n_dense_layers
+        out = {k: c2[k] + (n_moe - 1) * (c3[k] - c2[k])
+               for k in ("flops", "hbm", "coll", "coll_wire")}
+        out["n_probe_compiles"] = 2
+        return out
+    c1 = _probe_cost(bundle, cell, mesh, dict(n_layers=1))
+    c2 = _probe_cost(bundle, cell, mesh, dict(n_layers=2))
+    out = {k: c1[k] + (cfg.n_layers - 1) * (c2[k] - c1[k])
+           for k in ("flops", "hbm", "coll", "coll_wire")}
+    out["n_probe_compiles"] = 2
+    return out
+
+
+# --------------------------------------------------------------- driver
+
+def run_cell(arch_id: str, shape_name: str, *, multi_pod: bool,
+             opt_overrides=None, tag: str = "", probe: bool = True,
+             microbatches: int = 1) -> dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mod = get_arch(arch_id)
+    cell = next(c for c in mod.SHAPES if c.name == shape_name)
+    if cell.skip:
+        return dict(arch=arch_id, shape=shape_name, skipped=cell.skip)
+    t0 = time.time()
+    probe_totals = None
+    analytic_flops = None
+    with jax.set_mesh(mesh):
+        if arch_id == "seismic-msmarco":
+            if opt_overrides:   # overrides apply to the SeismicConfig
+                mod = _seismic_override(mod, opt_overrides)
+            lowered, mf, analytic_flops = _lower_seismic(mod, cell, mesh)
+        else:
+            bundle = get_bundle(arch_id)
+            if opt_overrides:
+                bundle = dataclasses.replace(
+                    bundle, config=dataclasses.replace(
+                        bundle.config, **opt_overrides))
+            if bundle.family == "lm":
+                lowered, mf = _lower_lm(bundle, cell, mesh,
+                                        microbatches=microbatches)
+                if probe and not multi_pod:
+                    probe_totals = probe_lm_totals(
+                        bundle, cell, mesh, microbatches=microbatches)
+            else:
+                lowered, mf = _lower_generic(bundle, cell, mesh)
+        compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis() or {}
+    hlo = compiled.as_text()
+    coll = collective_bytes(hlo)
+    traffic = float(mem.argument_size_in_bytes + mem.output_size_in_bytes
+                    + 2 * mem.temp_size_in_bytes)
+    if probe_totals is not None:
+        # scan-aware extrapolated totals (see probe docstring)
+        flops = probe_totals["flops"]
+        hbm = probe_totals["hbm"]
+        coll = dict(coll, total=probe_totals["coll"],
+                    total_wire=probe_totals["coll_wire"],
+                    entry_total=coll.get("total", 0))
+        flops_source = "probe-dot-count"
+    elif arch_id == "seismic-msmarco":
+        flops = analytic_flops["flops"]
+        hbm = analytic_flops["bytes"]
+        flops_source = "analytic"
+    else:
+        dots = hlo_dot_flops(hlo)
+        flops = dots["dot_flops"]
+        hbm = traffic
+        flops_source = (f"hlo-dot-count(n_while={dots['n_while']})"
+                        if dots["n_while"] else "hlo-dot-count")
+    n_chips = int(np.prod(list(mesh.shape.values())))
+    roof = Roofline(flops=flops, hbm_bytes=hbm,
+                    coll_bytes=float(coll.get("total", 0)))
+    rec = dict(
+        arch=arch_id, shape=shape_name,
+        mesh="x".join(str(mesh.shape[a]) for a in mesh.axis_names),
+        multi_pod=multi_pod, n_chips=n_chips, kind=cell.kind,
+        compile_s=round(t_compile, 1),
+        memory=dict(
+            argument_bytes=mem.argument_size_in_bytes,
+            output_bytes=mem.output_size_in_bytes,
+            temp_bytes=mem.temp_size_in_bytes,
+            alias_bytes=mem.alias_size_in_bytes,
+            peak_est=mem.argument_size_in_bytes + mem.output_size_in_bytes
+            + mem.temp_size_in_bytes - mem.alias_size_in_bytes,
+        ),
+        cost=dict(flops=flops, hbm_bytes=hbm),
+        collectives=coll,
+        roofline=roof.as_dict(),
+        probe=probe_totals,
+        flops_source=flops_source,
+        model_flops=mf,
+        model_flops_ratio=(mf / (flops * n_chips)
+                           if flops > 0 and mf > 0 else None),
+        tag=tag,
+    )
+    return rec
+
+
+def save_record(rec: dict, out_dir: str = OUT_DIR):
+    os.makedirs(out_dir, exist_ok=True)
+    mesh_tag = "multipod" if rec.get("multi_pod") else "singlepod"
+    tag = f"__{rec['tag']}" if rec.get("tag") else ""
+    name = f"{rec['arch']}__{rec['shape']}__{mesh_tag}{tag}.json"
+    with open(os.path.join(out_dir, name), "w") as f:
+        json.dump(rec, f, indent=1)
+    return name
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    args = ap.parse_args()
+
+    jobs = []
+    archs = list_archs() if args.all else [args.arch]
+    for a in archs:
+        mod = get_arch(a)
+        shapes = [c.name for c in mod.SHAPES] if (args.all or not args.shape) \
+            else [args.shape]
+        for s in shapes:
+            meshes = [False, True] if args.both_meshes else [args.multi_pod]
+            for mp in meshes:
+                jobs.append((a, s, mp))
+
+    failures = []
+    for a, s, mp in jobs:
+        label = f"{a:24s} {s:14s} {'2x16x16' if mp else '16x16'}"
+        try:
+            rec = run_cell(a, s, multi_pod=mp)
+            if "skipped" in rec:
+                print(f"SKIP {label}: {rec['skipped']}")
+                save_record(dict(rec, multi_pod=mp, tag=""), OUT_DIR)
+                continue
+            r = rec["roofline"]
+            print(f"OK   {label}  compile={rec['compile_s']}s  "
+                  f"flops/dev={rec['cost']['flops']:.3e}  "
+                  f"coll/dev={rec['collectives'].get('total', 0):.3e}B  "
+                  f"bound={r['bottleneck']}")
+            print("     memory_analysis:", rec["memory"])
+            save_record(rec)
+        except Exception as e:
+            failures.append((label, e))
+            print(f"FAIL {label}: {type(e).__name__}: {e}")
+            traceback.print_exc()
+    if failures:
+        raise SystemExit(f"{len(failures)} dry-run cells failed")
+    print("all dry-run cells passed")
+
+
+if __name__ == "__main__":
+    main()

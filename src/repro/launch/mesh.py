@@ -1,0 +1,29 @@
+"""Production mesh construction.
+
+A FUNCTION (not a module-level constant) so importing this module never
+touches jax device state. Single pod: (16, 16) = 256 chips,
+("data", "model"). Multi-pod: (2, 16, 16) = 512 chips,
+("pod", "data", "model") — the leading pod axis is the inter-pod DCN
+dimension; nothing below hardcodes 2 pods, so 4/8-pod meshes are a
+shape change here.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_mesh_for(n_devices: int, model_parallel: int = 1):
+    """Elastic helper: whatever devices exist -> (data, model) mesh."""
+    assert n_devices % model_parallel == 0
+    shape = (n_devices // model_parallel, model_parallel)
+    return jax.make_mesh(
+        shape, ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2)

@@ -1,0 +1,118 @@
+"""Production training launcher.
+
+Builds the mesh, shards params/optimizer with the rule-based specs
+(ZeRO over DP for the optimizer state), wires the prefetching data
+pipeline, checkpointing (async, keep-last-k, resume), and runs the
+train loop. On this CPU container it is exercised with reduced configs
+and a small forced device count; on a real slice the same entry point
+runs the full configs:
+
+  PYTHONPATH=src python -m repro.launch.train --arch llama3-8b \
+      --batch 8 --seq 64 --steps 50 --reduced --devices 8
+"""
+import argparse
+import os
+import time
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3-8b")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_launch_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=20)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--reduced", action="store_true",
+                    help="reduced config (CPU-sized)")
+    ap.add_argument("--devices", type=int, default=0,
+                    help="force host device count (testing only)")
+    ap.add_argument("--model-parallel", type=int, default=0,
+                    help="TP width; default = 1 (reduced) / 16 (full)")
+    args = ap.parse_args()
+
+    if args.devices:
+        os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                                   + f" --xla_force_host_platform_device_count={args.devices}")
+    import numpy as np
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.ckpt import CheckpointManager
+    from repro.data.pipeline import PrefetchLoader, lm_token_stream
+    from repro.distributed.param_sharding import opt_state_specs
+    from repro.launch.mesh import make_mesh_for
+    from repro.models.api import get_bundle
+    from repro.train import AdamWConfig, init_opt_state, make_train_step
+
+    bundle = get_bundle(args.arch)
+    cfg = bundle.reduced if args.reduced else bundle.config
+    dims = dict(global_batch=args.batch, seq_len=args.seq)
+    n_dev = len(jax.devices())
+    tp = args.model_parallel or (1 if args.reduced else min(16, n_dev))
+    mesh = make_mesh_for(n_dev, model_parallel=tp)
+    dp = ("data",)
+    print(f"mesh={dict(mesh.shape)} arch={cfg.name}")
+
+    with jax.set_mesh(mesh):
+        params = bundle.init(jax.random.PRNGKey(0), cfg, dims)
+        pspecs = bundle.param_specs(params)
+        psh = jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs,
+                           is_leaf=lambda x: isinstance(x, P))
+        params = jax.tree.map(jax.device_put, params, psh)
+        opt = init_opt_state(params)
+        ospecs = opt_state_specs(pspecs, params, zero=True, dp=dp,
+                                 dp_size=mesh.shape["data"])
+        osh = jax.tree.map(lambda s: NamedSharding(mesh, s), ospecs,
+                           is_leaf=lambda x: isinstance(x, P))
+        opt = jax.tree.map(jax.device_put, opt, osh)
+        bsh = dict(tokens=NamedSharding(mesh, P(dp, None)),
+                   labels=NamedSharding(mesh, P(dp, None)))
+
+        opt_cfg = AdamWConfig(lr=args.lr, warmup_steps=10,
+                              total_steps=args.steps)
+        step_fn = jax.jit(
+            make_train_step(bundle.step(cfg, dims, "train"), opt_cfg,
+                            microbatches=args.microbatches),
+            in_shardings=(psh, osh, bsh), donate_argnums=(0, 1))
+
+        mgr = CheckpointManager(args.ckpt_dir, keep=2)
+        start = 0
+        if args.resume:
+            try:
+                restored, start = mgr.restore_latest(
+                    dict(params=params, opt=opt),
+                    shardings=dict(params=psh, opt=osh))
+                params, opt = restored["params"], restored["opt"]
+                print(f"resumed from step {start}")
+            except FileNotFoundError:
+                print("no checkpoint; fresh start")
+
+        loader = PrefetchLoader(
+            lm_token_stream(cfg.vocab, args.batch, args.seq, seed=start),
+            prefetch=4)
+        t0 = time.time()
+        for i, batch in enumerate(loader):
+            if i >= args.steps:
+                break
+            step = start + i
+            batch = {k: jax.device_put(jnp.asarray(v), bsh[k])
+                     for k, v in batch.items()}
+            params, opt, metrics = step_fn(params, opt, batch)
+            if step % 10 == 0:
+                print(f"step {step:5d}  loss={float(metrics['loss']):.4f}  "
+                      f"{(time.time()-t0)/(i+1)*1000:.0f} ms/step")
+            if step > 0 and step % args.ckpt_every == 0:
+                mgr.save_async(step, dict(params=params, opt=opt))
+        loader.close()
+        mgr.save_async(start + args.steps, dict(params=params, opt=opt))
+        mgr.wait()
+        print("done")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,283 @@
+"""Unified model API: one entry point per (arch x shape-cell) that the
+smoke tests, launchers, and the multi-pod dry-run all share.
+
+  bundle = get_bundle("llama3-8b")
+  params = bundle.init(key, cfg, dims)
+  fn, inputs = bundle.step(cfg, dims, kind)      # callable + SDS specs
+  batch = bundle.make_batch(rng, cfg, dims, kind)  # real (small) arrays
+
+``dims`` comes from the ShapeCell (full scale for the dry-run, tiny for
+smoke tests) so every cell is driven by the same code path.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import (GNNConfig, RecsysConfig, TransformerConfig,
+                                get_arch)
+
+I32 = jnp.int32
+F32 = jnp.float32
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+# ============================================================ LM family
+
+def _lm_specs(cfg: TransformerConfig, dims: dict, kind: str) -> dict:
+    if kind == "train":
+        b, s = dims["global_batch"], dims["seq_len"]
+        return dict(tokens=_sds((b, s), I32), labels=_sds((b, s), I32))
+    if kind == "prefill":
+        b, s = dims["global_batch"], dims["seq_len"]
+        return dict(tokens=_sds((b, s), I32))
+    if kind == "decode":
+        b = dims["global_batch"]
+        return dict(tokens=_sds((b, 1), I32), pos=_sds((), I32))
+    raise ValueError(kind)
+
+
+def _lm_batch(rng, cfg: TransformerConfig, dims: dict, kind: str) -> dict:
+    specs = _lm_specs(cfg, dims, kind)
+    out = {}
+    for k, s in specs.items():
+        if k == "pos":
+            out[k] = jnp.asarray(dims.get("pos", 3), I32)
+        else:
+            out[k] = jnp.asarray(
+                rng.integers(0, cfg.vocab, s.shape), I32)
+    return out
+
+
+def _lm_step(cfg: TransformerConfig, kind: str) -> Callable:
+    from repro.models.transformer import lm
+    if kind == "train":
+        return lambda params, batch: lm.loss_fn(params, batch, cfg)
+    if kind == "prefill":
+        return lambda params, batch: lm.forward(params, batch["tokens"], cfg)[0]
+    if kind == "decode":
+        return lambda params, cache, batch: lm.decode_step(
+            params, cache, batch["tokens"], batch["pos"], cfg)
+    raise ValueError(kind)
+
+
+# =========================================================== GNN family
+
+def _gnn_dims(cell_dims: dict) -> dict:
+    d = dict(cell_dims)
+    if "fanout" in d:  # minibatch_lg: padded subgraph shapes
+        from repro.models.gnn.sampler import subgraph_shapes
+        n, e = subgraph_shapes(d["batch_nodes"], tuple(d["fanout"]))
+        d["sub_nodes"], d["sub_edges"] = n, e
+    return d
+
+
+def _pad_edges(e: int) -> int:
+    """Edge counts pad to 512-multiples so the edge axis shards on any
+    production mesh (padding edges are sink self-loops)."""
+    return e if e < 512 else -(-e // 512) * 512
+
+
+def _pad_nodes(n: int) -> int:
+    """Node counts (incl. sink) pad likewise for node-sharded layers."""
+    return n if n < 512 else -(-n // 512) * 512
+
+
+def _gnn_specs(cfg: GNNConfig, dims: dict, kind: str) -> dict:
+    d = _gnn_dims(dims)
+    if "batch" in d:      # molecule: batched small graphs
+        n = _pad_nodes(d["batch"] * d["n_nodes"] + 1)
+        e = _pad_edges(d["batch"] * d["n_edges"])
+        return dict(feats=_sds((n, d["d_feat"]), F32),
+                    edges=_sds((e, 2), I32),
+                    graph_ids=_sds((n,), I32),
+                    graph_labels=_sds((d["batch"],), I32))
+    if "sub_nodes" in d:  # sampled minibatch
+        return dict(feats=_sds((_pad_nodes(d["sub_nodes"]), d["d_feat"]), F32),
+                    edges=_sds((_pad_edges(d["sub_edges"]), 2), I32),
+                    labels=_sds((_pad_nodes(d["sub_nodes"]),), I32))
+    n = _pad_nodes(d["n_nodes"] + 1)  # full graph + sink (+ pad)
+    return dict(feats=_sds((n, d["d_feat"]), F32),
+                edges=_sds((_pad_edges(d["n_edges"]), 2), I32),
+                labels=_sds((n,), I32))
+
+
+def _gnn_batch(rng, cfg: GNNConfig, dims: dict, kind: str) -> dict:
+    specs = _gnn_specs(cfg, dims, kind)
+    n = specs["feats"].shape[0]
+    out = dict(
+        feats=jnp.asarray(rng.standard_normal(specs["feats"].shape), F32),
+        edges=jnp.asarray(rng.integers(0, n - 1, specs["edges"].shape), I32),
+    )
+    ncls = dims.get("n_classes", cfg.n_classes)
+    if "graph_labels" in specs:
+        g = specs["graph_labels"].shape[0]
+        out["graph_ids"] = jnp.asarray(
+            np.minimum(np.arange(n) // dims["n_nodes"], g - 1), I32)
+        out["graph_labels"] = jnp.asarray(rng.integers(0, ncls, (g,)), I32)
+    else:
+        labels = rng.integers(0, ncls, (n,))
+        real = dims.get("n_nodes", n - 1)
+        labels[min(real, n - 1):] = -1  # sink + node padding
+        out["labels"] = jnp.asarray(labels, I32)
+    return out
+
+
+def _gnn_step(cfg: GNNConfig, kind: str, dims: dict) -> Callable:
+    from repro.models.gnn import gin
+    if "batch" in dims:
+        return lambda params, batch: gin.graph_loss(params, batch, cfg)
+    return lambda params, batch: gin.node_loss(params, batch, cfg)
+
+
+def _gnn_init(key, cfg: GNNConfig, dims: dict):
+    from repro.models.gnn import gin
+    return gin.init_params(key, cfg, dims["d_feat"],
+                           dims.get("n_classes", cfg.n_classes))
+
+
+# ======================================================== RecSys family
+
+def _pad_cand(n: int) -> int:
+    """Candidate counts pad up to a 512-multiple so the candidate axis
+    shards on any production mesh (1,000,000 -> 1,000,448; padding
+    candidates score and are dropped after top-k)."""
+    return n if n < 512 else -(-n // 512) * 512
+
+
+def _recsys_specs(cfg: RecsysConfig, dims: dict, kind: str) -> dict:
+    b = dims.get("batch", 1)
+    if cfg.interaction in ("fm-2way", "concat"):
+        if kind == "retrieval":
+            return dict(ids=_sds((1, cfg.n_sparse - 1), I32),
+                        dense=_sds((1, cfg.n_dense_feat), F32),
+                        cand=_sds((_pad_cand(dims["n_candidates"]),), I32))
+        specs = dict(ids=_sds((b, cfg.n_sparse), I32),
+                     dense=_sds((b, cfg.n_dense_feat), F32))
+        if kind == "train":
+            specs["labels"] = _sds((b,), F32)
+        return specs
+    if cfg.interaction == "self-attn-seq":       # sasrec
+        if kind == "train":
+            return dict(seq=_sds((b, cfg.seq_len), I32),
+                        pos=_sds((b, cfg.seq_len), I32),
+                        neg=_sds((b, cfg.seq_len), I32))
+        if kind == "retrieval":
+            return dict(seq=_sds((1, cfg.seq_len), I32),
+                        cand=_sds((_pad_cand(dims["n_candidates"]),), I32))
+        return dict(seq=_sds((b, cfg.seq_len), I32),
+                    cand=_sds((b, 100), I32))
+    # bst
+    if kind == "train":
+        return dict(seq=_sds((b, cfg.seq_len), I32),
+                    target=_sds((b,), I32), labels=_sds((b,), F32))
+    if kind == "retrieval":
+        return dict(seq=_sds((1, cfg.seq_len), I32),
+                    cand=_sds((_pad_cand(dims["n_candidates"]),), I32))
+    return dict(seq=_sds((b, cfg.seq_len), I32), target=_sds((b,), I32))
+
+
+def _recsys_batch(rng, cfg: RecsysConfig, dims: dict, kind: str) -> dict:
+    specs = _recsys_specs(cfg, dims, kind)
+    out = {}
+    for k, s in specs.items():
+        if k == "ids":
+            cols = np.stack([rng.integers(0, cfg.table_rows[i], s.shape[0])
+                             for i in range(s.shape[1])], axis=1)
+            out[k] = jnp.asarray(cols, I32)
+        elif k in ("seq", "pos", "neg", "target", "cand"):
+            hi = max(cfg.n_items, 2)
+            out[k] = jnp.asarray(rng.integers(1, hi, s.shape), I32)
+        elif k == "dense":
+            out[k] = jnp.asarray(rng.standard_normal(s.shape), F32)
+        elif k == "labels":
+            out[k] = jnp.asarray(rng.integers(0, 2, s.shape), F32)
+    return out
+
+
+def _recsys_module(cfg: RecsysConfig):
+    from repro.models.recsys import bst, fm, sasrec, wide_deep
+    return {"fm-2way": fm, "concat": wide_deep, "self-attn-seq": sasrec,
+            "transformer-seq": bst}[cfg.interaction]
+
+
+def _recsys_step(cfg: RecsysConfig, kind: str) -> Callable:
+    mod = _recsys_module(cfg)
+    if kind == "train":
+        return lambda params, batch: mod.loss_fn(params, batch, cfg)
+    if kind == "retrieval":
+        return lambda params, batch: mod.retrieval_step(params, batch, cfg)
+    if hasattr(mod, "serve_step"):
+        return lambda params, batch: mod.serve_step(params, batch, cfg)
+    return lambda params, batch: mod.forward(params, batch["ids"],
+                                             batch["dense"], cfg)
+
+
+# ============================================================== bundles
+
+@dataclasses.dataclass(frozen=True)
+class ModelBundle:
+    arch_id: str
+    config: object
+    reduced: object
+    shapes: list
+    family: str
+
+    def init(self, key, cfg, dims: dict):
+        if self.family == "lm":
+            from repro.models.transformer import lm
+            return lm.init_params(key, cfg)
+        if self.family == "gnn":
+            return _gnn_init(key, cfg, dims)
+        return _recsys_module(cfg).init_params(key, cfg)
+
+    def init_cache(self, cfg, dims: dict):
+        assert self.family == "lm"
+        from repro.models.transformer import lm
+        return lm.init_cache(cfg, dims["global_batch"], dims["seq_len"])
+
+    def step(self, cfg, dims: dict, kind: str) -> Callable:
+        if self.family == "lm":
+            return _lm_step(cfg, kind)
+        if self.family == "gnn":
+            return _gnn_step(cfg, kind, _gnn_dims(dims))
+        return _recsys_step(cfg, kind)
+
+    def batch_specs(self, cfg, dims: dict, kind: str) -> dict:
+        if self.family == "lm":
+            return _lm_specs(cfg, dims, kind)
+        if self.family == "gnn":
+            return _gnn_specs(cfg, dims, kind)
+        return _recsys_specs(cfg, dims, kind)
+
+    def make_batch(self, rng, cfg, dims: dict, kind: str) -> dict:
+        if self.family == "lm":
+            return _lm_batch(rng, cfg, dims, kind)
+        if self.family == "gnn":
+            return _gnn_batch(rng, cfg, dims, kind)
+        return _recsys_batch(rng, cfg, dims, kind)
+
+    def param_specs(self, params):
+        from repro.distributed.param_sharding import (gnn_param_specs,
+                                                      lm_param_specs,
+                                                      recsys_param_specs)
+        if self.family == "lm":
+            return lm_param_specs(
+                params, mode=getattr(self.config, "sharding_mode", "tp"))
+        if self.family == "gnn":
+            return gnn_param_specs(params)
+        return recsys_param_specs(params)
+
+
+def get_bundle(arch_id: str) -> ModelBundle:
+    mod = get_arch(arch_id)
+    cfg = mod.CONFIG
+    return ModelBundle(arch_id=arch_id, config=cfg, reduced=mod.REDUCED,
+                       shapes=mod.SHAPES, family=cfg.family)

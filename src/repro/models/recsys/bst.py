@@ -1,0 +1,85 @@
+"""BST (Behavior Sequence Transformer, arXiv:1905.06874): one
+transformer block (8 heads) over [history ; target item], concatenated
+output into a 1024-512-256 MLP CTR head."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import RecsysConfig
+from repro.models.common import bce_with_logits, layer_norm, mlp_apply, mlp_init
+from repro.models.recsys.embedding import init_table, lookup, padded_rows
+
+
+def init_params(key, cfg: RecsysConfig) -> dict:
+    d = cfg.embed_dim
+    dtype = jnp.dtype(cfg.dtype)
+    s_total = cfg.seq_len + 1                     # history + target
+    ks = jax.random.split(key, 3 + cfg.n_blocks)
+    blocks = []
+    for i in range(cfg.n_blocks):
+        bk = jax.random.split(ks[3 + i], 6)
+        sc = d ** -0.5
+        blocks.append(dict(
+            wq=(jax.random.normal(bk[0], (d, d)) * sc).astype(dtype),
+            wk=(jax.random.normal(bk[1], (d, d)) * sc).astype(dtype),
+            wv=(jax.random.normal(bk[2], (d, d)) * sc).astype(dtype),
+            wo=(jax.random.normal(bk[3], (d, d)) * sc).astype(dtype),
+            w1=(jax.random.normal(bk[4], (d, 4 * d)) * sc).astype(dtype),
+            w2=(jax.random.normal(bk[5], (4 * d, d)) * (4 * d) ** -0.5).astype(dtype),
+            ln1_s=jnp.ones((d,), jnp.float32), ln1_b=jnp.zeros((d,), jnp.float32),
+            ln2_s=jnp.ones((d,), jnp.float32), ln2_b=jnp.zeros((d,), jnp.float32),
+        ))
+    return dict(
+        item_emb=init_table(ks[0], padded_rows(cfg.n_items + 1), d, dtype),
+        pos_emb=(jax.random.normal(ks[1], (s_total, d)) * 0.01).astype(dtype),
+        blocks=blocks,
+        head=mlp_init(ks[2], (s_total * d,) + cfg.mlp_dims + (1,), dtype),
+    )
+
+
+def _attn(b, h, n_heads):
+    bs, s, d = h.shape
+    dh = d // n_heads
+    q = (h @ b["wq"]).reshape(bs, s, n_heads, dh)
+    k = (h @ b["wk"]).reshape(bs, s, n_heads, dh)
+    v = (h @ b["wv"]).reshape(bs, s, n_heads, dh)
+    sc = jnp.einsum("bshd,bthd->bhst", q.astype(jnp.float32),
+                    k.astype(jnp.float32)) * dh ** -0.5
+    p = jax.nn.softmax(sc, axis=-1)   # bidirectional (CTR scoring)
+    o = jnp.einsum("bhst,bthd->bshd", p, v.astype(jnp.float32))
+    return o.reshape(bs, s, d).astype(h.dtype) @ b["wo"]
+
+
+def forward(params: dict, seq: jax.Array, target: jax.Array,
+            cfg: RecsysConfig) -> jax.Array:
+    """seq [B, S], target [B] -> CTR logits [B]."""
+    full = jnp.concatenate([seq, target[:, None]], axis=1)  # [B, S+1]
+    h = lookup(params["item_emb"], full) + params["pos_emb"][None]
+    for b in params["blocks"]:
+        a = _attn(b, layer_norm(h, b["ln1_s"], b["ln1_b"]), cfg.n_heads)
+        h = h + a
+        f = layer_norm(h, b["ln2_s"], b["ln2_b"])
+        h = h + jax.nn.relu(f @ b["w1"]) @ b["w2"]
+    x = h.reshape(h.shape[0], -1)
+    return mlp_apply(params["head"], x,
+                     len(cfg.mlp_dims) + 1)[..., 0].astype(jnp.float32)
+
+
+def loss_fn(params: dict, batch: dict, cfg: RecsysConfig) -> jax.Array:
+    logits = forward(params, batch["seq"], batch["target"], cfg)
+    return bce_with_logits(logits, batch["labels"])
+
+
+def serve_step(params: dict, batch: dict, cfg: RecsysConfig) -> jax.Array:
+    return forward(params, batch["seq"], batch["target"], cfg)
+
+
+def retrieval_step(params: dict, batch: dict, cfg: RecsysConfig) -> jax.Array:
+    """One user, C candidate targets: the transformer + MLP run batched
+    over candidates (BST has no factorization shortcut — this is the
+    honest cost of its interaction structure)."""
+    seq, cand = batch["seq"], batch["cand"]
+    c = cand.shape[0]
+    seq_b = jnp.broadcast_to(seq, (c, seq.shape[1]))
+    return forward(params, seq_b, cand, cfg)

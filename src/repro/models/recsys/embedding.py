@@ -1,0 +1,87 @@
+"""Sharded embedding tables + EmbeddingBag.
+
+JAX has no native nn.EmbeddingBag and no CSR sparse; the lookup here is
+built from ``jnp.take`` + masked reductions / ``segment_sum`` — this IS
+part of the system (taxonomy §RecSys).
+
+Layout: all categorical fields live in ONE fused table [R_total, D]
+with per-field row offsets (the production packing). Under a mesh the
+table rows are sharded over the model axis and lookups run in
+shard_map: each shard resolves the ids that fall in its row range and
+a psum over the model axis completes the gather — the classic
+model-parallel embedding with O(B * F * D) collective volume.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed.sharding import dp_axes, mesh_axis_size, tp_axis
+
+
+def field_offsets(table_rows: tuple[int, ...]) -> np.ndarray:
+    return np.concatenate([[0], np.cumsum(table_rows)[:-1]]).astype(np.int64)
+
+
+def padded_rows(n: int, mult: int = 512) -> int:
+    """Round table rows up so row-sharding divides any mesh axis."""
+    return -(-n // mult) * mult
+
+
+def init_table(key, n_rows: int, dim: int, dtype=jnp.float32) -> jax.Array:
+    return (jax.random.normal(key, (n_rows, dim), jnp.float32)
+            * 0.01).astype(dtype)
+
+
+def lookup(table: jax.Array, gids: jax.Array) -> jax.Array:
+    """Row lookup [..., ] -> [..., D]; model-sharded table under a mesh."""
+    tp = tp_axis()
+    rows = table.shape[0]
+    if tp is None or rows % mesh_axis_size("model") != 0:
+        return jnp.take(table, gids, axis=0)
+
+    token_axes = dp_axes()
+    if token_axes:
+        dp_size = 1
+        for a in token_axes:
+            dp_size *= mesh_axis_size(a)
+        if gids.shape[0] % dp_size != 0:
+            token_axes = ()      # small request batches stay replicated
+
+    def body(tbl, ids):
+        per = tbl.shape[0]
+        shard_id = jax.lax.axis_index("model")
+        lo = shard_id * per
+        local = ids - lo
+        in_range = (local >= 0) & (local < per)
+        got = jnp.take(tbl, jnp.clip(local, 0, per - 1), axis=0)
+        got = jnp.where(in_range[..., None], got, 0)
+        return jax.lax.psum(got, "model")
+
+    ids_spec = P(token_axes) if token_axes else P()
+    return jax.shard_map(
+        body,
+        in_specs=(P("model", None), ids_spec),
+        out_specs=ids_spec,
+        check_vma=False)(table, gids)
+
+
+def embedding_bag(table: jax.Array, ids: jax.Array, mask: jax.Array,
+                  mode: str = "sum") -> jax.Array:
+    """EmbeddingBag: ids [B, L] with validity mask [B, L] -> [B, D].
+    take + masked reduce (sum/mean) — the jnp EmbeddingBag."""
+    emb = lookup(table, ids)                       # [B, L, D]
+    emb = emb * mask[..., None].astype(emb.dtype)
+    out = emb.sum(axis=1)
+    if mode == "mean":
+        out = out / jnp.maximum(mask.sum(axis=1, keepdims=True), 1.0)
+    return out
+
+
+def fielded_lookup(table: jax.Array, ids: jax.Array,
+                   offsets: jax.Array) -> jax.Array:
+    """ids [B, F] per-field local ids -> [B, F, D] via the fused table."""
+    gids = ids.astype(jnp.int64) + offsets[None, :]
+    return lookup(table, gids)

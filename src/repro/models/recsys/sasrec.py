@@ -1,0 +1,101 @@
+"""SASRec [arXiv:1808.09781]: self-attentive sequential recommendation.
+
+2 causal transformer blocks (1 head, d=50) over the item history;
+training uses the paper's BCE with one positive (next item) and one
+sampled negative per position. Serving scores the last-position user
+state against candidate item embeddings — a pure MIPS, which is where
+the Seismic bridge applies (examples/recsys_retrieval.py).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import RecsysConfig
+from repro.models.common import layer_norm
+from repro.models.recsys.embedding import init_table, lookup, padded_rows
+
+
+def init_params(key, cfg: RecsysConfig) -> dict:
+    d = cfg.embed_dim
+    dtype = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 2 + cfg.n_blocks)
+    blocks = []
+    for i in range(cfg.n_blocks):
+        bk = jax.random.split(ks[2 + i], 6)
+        s = d ** -0.5
+        blocks.append(dict(
+            wq=(jax.random.normal(bk[0], (d, d)) * s).astype(dtype),
+            wk=(jax.random.normal(bk[1], (d, d)) * s).astype(dtype),
+            wv=(jax.random.normal(bk[2], (d, d)) * s).astype(dtype),
+            wo=(jax.random.normal(bk[3], (d, d)) * s).astype(dtype),
+            w1=(jax.random.normal(bk[4], (d, d)) * s).astype(dtype),
+            w2=(jax.random.normal(bk[5], (d, d)) * s).astype(dtype),
+            ln1_s=jnp.ones((d,), jnp.float32),
+            ln1_b=jnp.zeros((d,), jnp.float32),
+            ln2_s=jnp.ones((d,), jnp.float32),
+            ln2_b=jnp.zeros((d,), jnp.float32),
+        ))
+    return dict(
+        item_emb=init_table(ks[0], padded_rows(cfg.n_items + 1), d, dtype),  # 0 = pad
+        pos_emb=(jax.random.normal(ks[1], (cfg.seq_len, d)) * 0.01).astype(dtype),
+        blocks=blocks,
+    )
+
+
+def _attn(b, h, cfg):
+    bs, s, d = h.shape
+    nh = cfg.n_heads
+    dh = d // nh
+    q = (h @ b["wq"]).reshape(bs, s, nh, dh)
+    k = (h @ b["wk"]).reshape(bs, s, nh, dh)
+    v = (h @ b["wv"]).reshape(bs, s, nh, dh)
+    sc = jnp.einsum("bshd,bthd->bhst", q.astype(jnp.float32),
+                    k.astype(jnp.float32)) * dh ** -0.5
+    mask = jnp.arange(s)[None, :] <= jnp.arange(s)[:, None]
+    sc = jnp.where(mask, sc, -1e30)
+    p = jax.nn.softmax(sc, axis=-1)
+    o = jnp.einsum("bhst,bthd->bshd", p, v.astype(jnp.float32))
+    return o.reshape(bs, s, d).astype(h.dtype) @ b["wo"]
+
+
+def forward(params: dict, seq: jax.Array, cfg: RecsysConfig) -> jax.Array:
+    """seq [B, S] item ids (0 = pad) -> states [B, S, D]."""
+    h = lookup(params["item_emb"], seq) + params["pos_emb"][None]
+    pad = (seq == 0)[..., None]
+    h = jnp.where(pad, 0, h)
+    for b in params["blocks"]:
+        a = _attn(b, layer_norm(h, b["ln1_s"], b["ln1_b"]), cfg)
+        h = h + a
+        f = layer_norm(h, b["ln2_s"], b["ln2_b"])
+        h = h + jax.nn.relu(f @ b["w1"]) @ b["w2"]
+        h = jnp.where(pad, 0, h)
+    return h
+
+
+def loss_fn(params: dict, batch: dict, cfg: RecsysConfig) -> jax.Array:
+    """batch = {seq [B,S], pos [B,S], neg [B,S]}; pos/neg 0 = pad."""
+    h = forward(params, batch["seq"], cfg)
+    pe = lookup(params["item_emb"], batch["pos"])
+    ne = lookup(params["item_emb"], batch["neg"])
+    ps = (h * pe).sum(-1).astype(jnp.float32)
+    ns = (h * ne).sum(-1).astype(jnp.float32)
+    mask = (batch["pos"] != 0).astype(jnp.float32)
+    loss = -(jax.nn.log_sigmoid(ps) + jax.nn.log_sigmoid(-ns)) * mask
+    return loss.sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+def serve_step(params: dict, batch: dict, cfg: RecsysConfig) -> jax.Array:
+    """Score per-request candidates: batch = {seq [B,S], cand [B,C]}."""
+    h = forward(params, batch["seq"], cfg)[:, -1]           # [B, D]
+    ce = lookup(params["item_emb"], batch["cand"])          # [B, C, D]
+    return jnp.einsum("bd,bcd->bc", h.astype(jnp.float32),
+                      ce.astype(jnp.float32))
+
+
+def retrieval_step(params: dict, batch: dict, cfg: RecsysConfig) -> jax.Array:
+    """One user vs C item candidates: batch = {seq [1,S], cand [C]} —
+    a single [C, D] @ [D] MIPS (the Seismic-applicable cell)."""
+    h = forward(params, batch["seq"], cfg)[0, -1]
+    ce = lookup(params["item_emb"], batch["cand"])
+    return ce.astype(jnp.float32) @ h.astype(jnp.float32)

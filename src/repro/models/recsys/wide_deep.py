@@ -1,0 +1,56 @@
+"""Wide & Deep [arXiv:1606.07792]: wide linear over categorical fields
++ deep MLP over concatenated field embeddings and dense features."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import RecsysConfig
+from repro.models.common import bce_with_logits, mlp_apply, mlp_init
+from repro.models.recsys.embedding import (field_offsets, fielded_lookup,
+                                           init_table, lookup, padded_rows)
+
+
+def init_params(key, cfg: RecsysConfig) -> dict:
+    rows = padded_rows(sum(cfg.table_rows))
+    ks = jax.random.split(key, 3)
+    dtype = jnp.dtype(cfg.dtype)
+    d_in = cfg.n_sparse * cfg.embed_dim + cfg.n_dense_feat
+    return dict(
+        wide=init_table(ks[0], rows, 1, dtype),
+        wide_dense=jnp.zeros((cfg.n_dense_feat,), jnp.float32),
+        emb=init_table(ks[1], rows, cfg.embed_dim, dtype),
+        deep=mlp_init(ks[2], (d_in,) + cfg.mlp_dims + (1,), dtype),
+        b=jnp.zeros((), jnp.float32),
+    )
+
+
+def forward(params: dict, ids: jax.Array, dense: jax.Array,
+            cfg: RecsysConfig) -> jax.Array:
+    offs = jnp.asarray(field_offsets(cfg.table_rows))
+    wide = fielded_lookup(params["wide"], ids, offs)[..., 0].sum(-1)
+    emb = fielded_lookup(params["emb"], ids, offs)            # [B, F, D]
+    x = jnp.concatenate([emb.reshape(emb.shape[0], -1),
+                         dense.astype(emb.dtype)], axis=-1)
+    deep = mlp_apply(params["deep"], x, len(cfg.mlp_dims) + 1)[..., 0]
+    return (params["b"] + wide + dense @ params["wide_dense"]
+            + deep).astype(jnp.float32)
+
+
+def loss_fn(params: dict, batch: dict, cfg: RecsysConfig) -> jax.Array:
+    logits = forward(params, batch["ids"], batch["dense"], cfg)
+    return bce_with_logits(logits, batch["labels"])
+
+
+def retrieval_step(params: dict, batch: dict, cfg: RecsysConfig) -> jax.Array:
+    """Score C candidates in field 0 for one user context: the deep MLP
+    runs batched over candidates (bulk scorer — no factorization trick
+    exists for an MLP)."""
+    ids, dense, cand = batch["ids"], batch["dense"], batch["cand"]
+    c = cand.shape[0]
+    full_ids = jnp.concatenate(
+        [jnp.zeros((ids.shape[0], 1), ids.dtype), ids], axis=1)  # slot 0
+    full_ids = jnp.broadcast_to(full_ids, (c, full_ids.shape[1]))
+    full_ids = full_ids.at[:, 0].set(cand)
+    dense_b = jnp.broadcast_to(dense, (c, dense.shape[1]))
+    return forward(params, full_ids, dense_b, cfg)

@@ -1,0 +1,264 @@
+"""Attention layers: GQA (optionally sliding-window) and MLA.
+
+Two execution paths per layer:
+  * train/prefill — full-sequence attention. The XLA path is q-chunked
+    (lax.scan over query tiles, exact softmax per tile row) so the
+    [S, S] score matrix never materializes; the Pallas flash kernel is
+    the TPU fast path (``use_pallas``).
+  * decode       — one token against a KV cache. Cache updates use the
+    one-hot formulation (elementwise select instead of a dynamic-update
+    -slice) so a sequence-sharded cache partitions cleanly under SPMD.
+    MLA decode uses matrix absorption (q/out projected into the latent
+    space) so per-step cost is O(S * kv_lora_rank), the production
+    trick from the DeepSeek-V2 paper.
+
+GQA einsums keep kv heads un-expanded: q is grouped [B, S, KV, G, Dh]
+and scores contract against k [B, T, KV, Dh] directly.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TransformerConfig
+from repro.distributed.sharding import shard
+from repro.models.common import rms_norm
+from repro.models.transformer.rope import apply_rope
+
+NEG = -1e30
+
+
+# ----------------------------------------------------------------- init
+
+def init_gqa(key, cfg: TransformerConfig, dtype) -> dict:
+    d, h, kv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    ks = jax.random.split(key, 4)
+    s = d ** -0.5
+    return dict(
+        wq=(jax.random.normal(ks[0], (d, h * dh), jnp.float32) * s).astype(dtype),
+        wk=(jax.random.normal(ks[1], (d, kv * dh), jnp.float32) * s).astype(dtype),
+        wv=(jax.random.normal(ks[2], (d, kv * dh), jnp.float32) * s).astype(dtype),
+        wo=(jax.random.normal(ks[3], (h * dh, d), jnp.float32) * s).astype(dtype),
+    )
+
+
+def init_mla(key, cfg: TransformerConfig, dtype) -> dict:
+    d, h = cfg.d_model, cfg.n_heads
+    r, nd, rd, vd = (cfg.kv_lora_rank, cfg.qk_nope_dim, cfg.qk_rope_dim,
+                     cfg.v_head_dim)
+    ks = jax.random.split(key, 6)
+    s = d ** -0.5
+    return dict(
+        wq=(jax.random.normal(ks[0], (d, h * (nd + rd)), jnp.float32) * s).astype(dtype),
+        w_dkv=(jax.random.normal(ks[1], (d, r), jnp.float32) * s).astype(dtype),
+        w_kr=(jax.random.normal(ks[2], (d, rd), jnp.float32) * s).astype(dtype),
+        w_uk=(jax.random.normal(ks[3], (r, h * nd), jnp.float32) * r ** -0.5).astype(dtype),
+        w_uv=(jax.random.normal(ks[4], (r, h * vd), jnp.float32) * r ** -0.5).astype(dtype),
+        wo=(jax.random.normal(ks[5], (h * vd, d), jnp.float32) * s).astype(dtype),
+        kv_norm=jnp.zeros((r,), jnp.float32),
+    )
+
+
+# ----------------------------------------------------- chunked XLA sdpa
+
+def _sdpa_chunked(q, k, v, *, causal: bool, window: int, q_chunk: int = 512):
+    """q [B, S, KV, G, Dh], k/v [B, T, KV, Dh] -> [B, S, KV, G, Dh].
+
+    Exact softmax computed one query tile at a time; window > 0 applies
+    Gemma-style sliding-window masking on top of causality.
+    """
+    b, s, kvh, g, dh = q.shape
+    t = k.shape[1]
+    scale = dh ** -0.5
+    if s % q_chunk != 0:
+        q_chunk = s
+    nq = s // q_chunk
+    qs = q.reshape(b, nq, q_chunk, kvh, g, dh)
+    k32 = k.astype(jnp.float32)
+    v32 = v.astype(jnp.float32)
+
+    def tile(i):
+        qc = qs[:, i].astype(jnp.float32)                  # [B,C,KV,G,Dh]
+        sc = jnp.einsum("bckgd,btkd->bkgct", qc, k32) * scale
+        q_pos = i * q_chunk + jnp.arange(q_chunk)
+        k_pos = jnp.arange(t)
+        mask = jnp.ones((q_chunk, t), bool)
+        if causal:
+            mask &= k_pos[None, :] <= q_pos[:, None]
+        if window > 0:
+            mask &= k_pos[None, :] > q_pos[:, None] - window
+        sc = jnp.where(mask, sc, NEG)
+        p = jax.nn.softmax(sc, axis=-1)
+        return jnp.einsum("bkgct,btkd->bckgd", p, v32)
+
+    if nq == 1:
+        # single tile: stay in the entry computation (keeps the program
+        # analyzable by cost_analysis and avoids a trip-1 while loop)
+        return tile(0).reshape(b, s, kvh, g, dh).astype(q.dtype)
+    out = jax.lax.map(tile, jnp.arange(nq))                # [nq,B,C,KV,G,Dh]
+    out = jnp.moveaxis(out, 0, 1).reshape(b, s, kvh, g, dh)
+    return out.astype(q.dtype)
+
+
+# ------------------------------------------------------------ GQA layer
+
+def gqa_forward(p: dict, x: jax.Array, positions: jax.Array,
+                cfg: TransformerConfig, *, window: int = 0,
+                use_pallas: bool = False) -> jax.Array:
+    """Full-sequence GQA. x [B, S, d] -> [B, S, d]."""
+    b, s, d = x.shape
+    h, kv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    g = h // kv
+    q = (x @ p["wq"]).reshape(b, s, h, dh)
+    k = (x @ p["wk"]).reshape(b, s, kv, dh)
+    v = (x @ p["wv"]).reshape(b, s, kv, dh)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    # TP coherence: kv heads < tp in several assigned archs, so the
+    # grouped [B,S,KV,G,Dh] layout cannot shard on the model axis.
+    # Expand K/V to H heads AFTER the (replicated) projections; all of
+    # q/k/v then shard on H and attention is fully head-parallel with
+    # zero resharding. Per-device expanded K/V is H/tp heads — the same
+    # footprint as q.
+    if g > 1:
+        k = jnp.repeat(k, g, axis=2)
+        v = jnp.repeat(v, g, axis=2)
+    tp = "tp" if cfg.sharding_mode == "tp" else None
+    bx = ("dp", "tp") if cfg.sharding_mode == "fsdp" else "dp"
+    q = shard(q, bx, None, tp, None)
+    k = shard(k, bx, None, tp, None)
+    v = shard(v, bx, None, tp, None)
+    if use_pallas:
+        from repro.kernels.flash_attention.ops import flash_attention
+        o = flash_attention(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                            v.transpose(0, 2, 1, 3), causal=True,
+                            window=window if window > 0 else None)
+        o = o.transpose(0, 2, 1, 3).reshape(b, s, h * dh)
+    else:
+        qg = q.reshape(b, s, h, 1, dh)
+        o = _sdpa_chunked(qg, k, v, causal=True, window=window,
+                          q_chunk=cfg.attn_q_chunk)
+        o = o.reshape(b, s, h * dh)
+    return o @ p["wo"]
+
+
+def gqa_decode(p: dict, x: jax.Array, pos: jax.Array, cache_k: jax.Array,
+               cache_v: jax.Array, cfg: TransformerConfig, *,
+               window: int = 0):
+    """One-token GQA against a cache.
+
+    x [B, 1, d]; pos [] scalar step index; cache_k/v [B, T, KV, Dh]
+    (T = max seq or ring-buffer window). Returns (out [B,1,d], new caches).
+
+    Ring-buffer semantics when T < pos+1: slot = pos % T, and all T
+    slots are within the window once warm (window == T).
+    """
+    b, _, d = x.shape
+    h, kv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    g = h // kv
+    t = cache_k.shape[1]
+    q = (x @ p["wq"]).reshape(b, 1, h, dh)
+    k_new = (x @ p["wk"]).reshape(b, 1, kv, dh)
+    v_new = (x @ p["wv"]).reshape(b, 1, kv, dh)
+    pos_b = jnp.broadcast_to(pos, (b, 1))
+    q = apply_rope(q, pos_b, cfg.rope_theta)
+    k_new = apply_rope(k_new, pos_b, cfg.rope_theta)
+
+    slot = pos % t
+    onehot = (jnp.arange(t) == slot).astype(cache_k.dtype)  # [T]
+    cache_k = cache_k * (1 - onehot)[None, :, None, None] \
+        + k_new * onehot[None, :, None, None]
+    cache_v = cache_v * (1 - onehot)[None, :, None, None] \
+        + v_new * onehot[None, :, None, None]
+
+    qg = q.reshape(b, kv, g, dh)
+    sc = jnp.einsum("bkgd,btkd->bkgt", qg.astype(jnp.float32),
+                    cache_k.astype(jnp.float32)) * dh ** -0.5
+    # validity: slots written so far; ring buffers are fully valid once warm
+    slot_pos = jnp.arange(t)
+    if window > 0 and t <= window:
+        valid = (slot_pos <= pos) | (pos >= t)   # ring buffer
+    else:
+        valid = slot_pos <= pos
+        if window > 0:
+            valid &= slot_pos > pos - window     # windowed full-length cache
+    sc = jnp.where(valid[None, None, None, :], sc, NEG)
+    pr = jax.nn.softmax(sc, axis=-1)
+    o = jnp.einsum("bkgt,btkd->bkgd", pr, cache_v.astype(jnp.float32))
+    o = o.reshape(b, 1, h * dh).astype(x.dtype)
+    return o @ p["wo"], cache_k, cache_v
+
+
+# ------------------------------------------------------------ MLA layer
+
+def mla_forward(p: dict, x: jax.Array, positions: jax.Array,
+                cfg: TransformerConfig) -> jax.Array:
+    """Full-sequence MLA (DeepSeek-V2). x [B, S, d] -> [B, S, d]."""
+    b, s, d = x.shape
+    h = cfg.n_heads
+    nd, rd, vd, r = (cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim,
+                     cfg.kv_lora_rank)
+    q = (x @ p["wq"]).reshape(b, s, h, nd + rd)
+    q_nope, q_rope = q[..., :nd], q[..., nd:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    c_kv = rms_norm(x @ p["w_dkv"], p["kv_norm"], cfg.norm_eps)  # [B,S,r]
+    k_rope = apply_rope((x @ p["w_kr"])[:, :, None, :], positions,
+                        cfg.rope_theta)                          # [B,S,1,rd]
+    k_nope = (c_kv @ p["w_uk"]).reshape(b, s, h, nd)
+    v = (c_kv @ p["w_uv"]).reshape(b, s, h, vd)
+
+    scale = (nd + rd) ** -0.5
+    sc = (jnp.einsum("bshd,bthd->bhst", q_nope.astype(jnp.float32),
+                     k_nope.astype(jnp.float32))
+          + jnp.einsum("bshd,btxd->bhst", q_rope.astype(jnp.float32),
+                       k_rope.astype(jnp.float32))) * scale
+    mask = jnp.arange(s)[None, :] <= jnp.arange(s)[:, None]
+    sc = jnp.where(mask, sc, NEG)
+    pr = jax.nn.softmax(sc, axis=-1)
+    o = jnp.einsum("bhst,bthd->bshd", pr, v.astype(jnp.float32))
+    o = o.reshape(b, s, h * vd).astype(x.dtype)
+    return o @ p["wo"]
+
+
+def mla_decode(p: dict, x: jax.Array, pos: jax.Array, cache_ckv: jax.Array,
+               cache_kr: jax.Array, cfg: TransformerConfig):
+    """Absorbed MLA decode: O(S * r) per step, caching only
+    (c_kv [B, T, r], k_rope [B, T, rd])."""
+    b, _, d = x.shape
+    h = cfg.n_heads
+    nd, rd, vd, r = (cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim,
+                     cfg.kv_lora_rank)
+    t = cache_ckv.shape[1]
+    q = (x @ p["wq"]).reshape(b, 1, h, nd + rd)
+    q_nope, q_rope = q[..., :nd], q[..., nd:]
+    pos_b = jnp.broadcast_to(pos, (b, 1))
+    q_rope = apply_rope(q_rope, pos_b, cfg.rope_theta)[:, 0]     # [B,h,rd]
+
+    c_new = rms_norm(x @ p["w_dkv"], p["kv_norm"], cfg.norm_eps)  # [B,1,r]
+    kr_new = apply_rope((x @ p["w_kr"])[:, :, None, :], pos_b,
+                        cfg.rope_theta)[:, :, 0, :]               # [B,1,rd]
+    onehot = (jnp.arange(t) == pos).astype(cache_ckv.dtype)
+    cache_ckv = cache_ckv * (1 - onehot)[None, :, None] \
+        + c_new * onehot[None, :, None]
+    cache_kr = cache_kr * (1 - onehot)[None, :, None] \
+        + kr_new * onehot[None, :, None]
+
+    # absorb W_uk into q: q_lat [B, h, r]
+    w_uk = p["w_uk"].reshape(r, h, nd)
+    q_lat = jnp.einsum("bhd,rhd->bhr", q_nope[:, 0].astype(jnp.float32),
+                       w_uk.astype(jnp.float32))
+    scale = (nd + rd) ** -0.5
+    sc = (jnp.einsum("bhr,btr->bht", q_lat,
+                     cache_ckv.astype(jnp.float32))
+          + jnp.einsum("bhd,btd->bht", q_rope.astype(jnp.float32),
+                       cache_kr.astype(jnp.float32))) * scale
+    valid = jnp.arange(t) <= pos
+    sc = jnp.where(valid[None, None, :], sc, NEG)
+    pr = jax.nn.softmax(sc, axis=-1)
+    o_lat = jnp.einsum("bht,btr->bhr", pr,
+                       cache_ckv.astype(jnp.float32))             # [B,h,r]
+    w_uv = p["w_uv"].reshape(r, h, vd)
+    o = jnp.einsum("bhr,rhd->bhd", o_lat, w_uv.astype(jnp.float32))
+    o = o.reshape(b, 1, h * vd).astype(x.dtype)
+    return o @ p["wo"], cache_ckv, cache_kr

@@ -1,0 +1,262 @@
+"""FFN layers: SwiGLU dense and top-k MoE with sort-based dispatch.
+
+MoE design (DESIGN.md §4):
+  * router: softmax over expert logits, top-k selection, probs
+    renormalized over the selected experts; load-balance aux loss
+    (Switch-style) returned alongside.
+  * dispatch: sort-based (no [T, E, C] one-hot): flatten (token, k)
+    assignments, stable-sort by expert, rank-within-expert via the
+    sorted layout, drop tokens past the per-expert capacity
+    C = ceil(T * k / E * capacity_factor).
+  * compute: gathered [E, C, d] buffers hit the experts as one batched
+    einsum (MXU grouped-GEMM analog).
+  * expert parallelism: under an active mesh the layer runs in
+    shard_map — tokens sharded over (pod, data, model), experts over
+    model; dispatch/return are ragged all_to_alls over the model axis.
+    Without a mesh the same local path runs unsharded (smoke tests).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import TransformerConfig
+from repro.distributed.sharding import dp_axes, mesh_axis_size, tp_axis
+
+
+# ------------------------------------------------------------- SwiGLU
+
+def init_swiglu(key, d: int, ff: int, dtype) -> dict:
+    ks = jax.random.split(key, 3)
+    s = d ** -0.5
+    return dict(
+        w1=(jax.random.normal(ks[0], (d, ff), jnp.float32) * s).astype(dtype),
+        w3=(jax.random.normal(ks[1], (d, ff), jnp.float32) * s).astype(dtype),
+        w2=(jax.random.normal(ks[2], (ff, d), jnp.float32) * ff ** -0.5).astype(dtype),
+    )
+
+
+def swiglu(p: dict, x: jax.Array) -> jax.Array:
+    return (jax.nn.silu(x @ p["w1"]) * (x @ p["w3"])) @ p["w2"]
+
+
+# ---------------------------------------------------------------- MoE
+
+def init_moe(key, cfg: TransformerConfig, dtype) -> dict:
+    d, e, ff = cfg.d_model, cfg.n_experts, cfg.moe_d_ff
+    ks = jax.random.split(key, 5)
+    s = d ** -0.5
+    p = dict(
+        router=(jax.random.normal(ks[0], (d, e), jnp.float32) * s).astype(jnp.float32),
+        w1=(jax.random.normal(ks[1], (e, d, ff), jnp.float32) * s).astype(dtype),
+        w3=(jax.random.normal(ks[2], (e, d, ff), jnp.float32) * s).astype(dtype),
+        w2=(jax.random.normal(ks[3], (e, ff, d), jnp.float32) * ff ** -0.5).astype(dtype),
+    )
+    if cfg.n_shared_experts:
+        p["shared"] = init_swiglu(ks[4], d,
+                                  cfg.moe_d_ff * cfg.n_shared_experts, dtype)
+    return p
+
+
+def _route(router_w: jax.Array, x: jax.Array, top_k: int):
+    """x [T, d] -> (expert_idx [T,k], weights [T,k], aux_loss)."""
+    logits = x.astype(jnp.float32) @ router_w           # [T, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    w, idx = jax.lax.top_k(probs, top_k)
+    w = w / jnp.maximum(w.sum(-1, keepdims=True), 1e-9)
+    # Switch-style load-balance loss: E * sum_e f_e * p_e
+    e = logits.shape[-1]
+    me = probs.mean(0)                                   # mean prob per expert
+    ce = jnp.zeros((e,), jnp.float32).at[idx.reshape(-1)].add(1.0)
+    ce = ce / jnp.maximum(ce.sum(), 1.0)
+    aux = e * jnp.sum(me * ce)
+    return idx, w, aux
+
+
+def _dispatch_compute(x, idx, w, w1, w3, w2, capacity: int):
+    """Sort-based dispatch + batched expert einsum + combine.
+
+    x [T, d]; idx/w [T, k]; w1/w3 [El, d, ff], w2 [El, ff, d] where El
+    is the LOCAL expert count and idx is already local-expert-indexed
+    (callers offset & mask foreign experts to El => dropped).
+    """
+    t, k = idx.shape
+    el = w1.shape[0]
+    flat_e = idx.reshape(-1)                             # [T*k]
+    flat_t = jnp.repeat(jnp.arange(t), k)
+    flat_w = w.reshape(-1)
+    order = jnp.argsort(flat_e, stable=True)             # group by expert
+    se, st_, sw = flat_e[order], flat_t[order], flat_w[order]
+    # rank within expert via segment-relative position
+    start = jnp.searchsorted(se, jnp.arange(el + 1))
+    rank = jnp.arange(t * k) - jnp.take(start, se, mode="clip")
+    keep = (rank < capacity) & (se < el)
+    slot_e = jnp.where(keep, se, el)                     # drop -> sentinel
+    slot_c = jnp.where(keep, rank, 0)
+    # gather tokens into [El+1, C, d] (sentinel row absorbs drops)
+    buf = jnp.zeros((el + 1, capacity, x.shape[1]), x.dtype)
+    buf = buf.at[slot_e, slot_c].set(jnp.take(x, st_, axis=0))
+    hidden = buf[:el]
+    h = jnp.einsum("ecd,edf->ecf", hidden, w1)
+    g = jnp.einsum("ecd,edf->ecf", hidden, w3)
+    out_e = jnp.einsum("ecf,efd->ecd", jax.nn.silu(h) * g, w2)
+    # combine back to tokens
+    out_pad = jnp.concatenate(
+        [out_e, jnp.zeros((1, capacity, x.shape[1]), out_e.dtype)], axis=0)
+    contrib = out_pad[slot_e, slot_c] * sw[:, None].astype(out_e.dtype)
+    contrib = jnp.where(keep[:, None], contrib, 0)
+    out = jnp.zeros_like(x).at[st_].add(contrib)
+    return out
+
+
+def moe_local(p: dict, x: jax.Array, cfg: TransformerConfig):
+    """Single-device MoE (also the per-shard body of the EP path)."""
+    t = x.shape[0]
+    cap = max(1, math.ceil(t * cfg.moe_top_k / cfg.n_experts
+                           * cfg.capacity_factor))
+    idx, w, aux = _route(p["router"], x, cfg.moe_top_k)
+    out = _dispatch_compute(x, idx, w, p["w1"], p["w3"], p["w2"], cap)
+    if "shared" in p:
+        out = out + swiglu(p["shared"], x)
+    return out, aux
+
+
+def moe_ep(p: dict, x: jax.Array, cfg: TransformerConfig):
+    """Expert-parallel MoE under shard_map on the ambient mesh.
+
+    x is [B, S, d] (train/prefill — B shards over dp, S over model: no
+    cross-shard reshape at the shard_map boundary, which is what caused
+    SPMD's 'involuntary full rematerialization' all-gathers in the flat
+    [T, d] formulation) or [T, d] (decode). Experts shard over model;
+    dispatch/return are all_to_alls. Token-poor decode batches fall
+    back to redundant routing + local expert slice + psum (all_to_all
+    volume would exceed the redundant-compute cost there).
+    """
+    tp = tp_axis()
+    ep = mesh_axis_size("model") if tp else 1
+    if ep <= 1 or cfg.n_experts % ep != 0:
+        if x.ndim == 3:
+            b, s, d = x.shape
+            out, aux = moe_local(p, x.reshape(b * s, d), cfg)
+            return out.reshape(b, s, d), aux
+        return moe_local(p, x, cfg)
+
+    dp_size = 1
+    for a in dp_axes():
+        dp_size *= mesh_axis_size(a)
+    e = cfg.n_experts
+
+    three_d = (x.ndim == 3 and x.shape[0] % max(dp_size, 1) == 0
+               and x.shape[1] % ep == 0)
+    if not three_d:
+        xf = x.reshape(-1, x.shape[-1])
+        if dp_size > 1 and xf.shape[0] % dp_size == 0:
+            out, aux = _moe_ep_token_poor(p, xf, cfg, dp_axes(), ep)
+        else:
+            out, aux = _moe_ep_token_poor(p, xf, cfg, (), ep)
+        return out.reshape(x.shape), aux
+
+    token_axes = dp_axes() + ("model",)
+
+    def body(p_sh, x_loc3):
+        bl, sl, d = x_loc3.shape
+        x_loc = x_loc3.reshape(bl * sl, d)     # local reshape: no comm
+        t_loc = x_loc.shape[0]
+        cap = max(1, math.ceil(t_loc * cfg.moe_top_k / e
+                               * cfg.capacity_factor))
+        idx, w, aux = _route(p_sh["router"], x_loc, cfg.moe_top_k)
+        # build the global [E, C, d] send buffer
+        t, k = idx.shape
+        flat_e = idx.reshape(-1)
+        flat_t = jnp.repeat(jnp.arange(t), k)
+        flat_w = w.reshape(-1)
+        order = jnp.argsort(flat_e, stable=True)
+        se, st_, sw = flat_e[order], flat_t[order], flat_w[order]
+        start = jnp.searchsorted(se, jnp.arange(e + 1))
+        rank = jnp.arange(t * k) - jnp.take(start, se, mode="clip")
+        keep = rank < cap
+        slot_e = jnp.where(keep, se, e)
+        slot_c = jnp.where(keep, rank, 0)
+        buf = jnp.zeros((e + 1, cap, d), x_loc.dtype)
+        buf = buf.at[slot_e, slot_c].set(jnp.take(x_loc, st_, axis=0))
+        buf = buf[:e]                                     # [E, C, d]
+        # dispatch: E split over model -> [E/P, C*P, d]
+        recv = jax.lax.all_to_all(buf, "model", split_axis=0,
+                                  concat_axis=1, tiled=True)
+        h = jnp.einsum("ecd,edf->ecf", recv, p_sh["w1"])
+        g = jnp.einsum("ecd,edf->ecf", recv, p_sh["w3"])
+        out_e = jnp.einsum("ecf,efd->ecd", jax.nn.silu(h) * g, p_sh["w2"])
+        # return trip: [E/P, C*P, d] -> [E, C, d]
+        back = jax.lax.all_to_all(out_e, "model", split_axis=1,
+                                  concat_axis=0, tiled=True)
+        back_pad = jnp.concatenate(
+            [back, jnp.zeros((1, cap, d), back.dtype)], axis=0)
+        contrib = back_pad[slot_e, slot_c] * sw[:, None].astype(back.dtype)
+        contrib = jnp.where(keep[:, None], contrib, 0)
+        out = jnp.zeros_like(x_loc).at[st_].add(contrib)
+        if "shared" in p_sh:
+            out = out + swiglu(p_sh["shared"], x_loc)
+        aux = jax.lax.pmean(aux, token_axes)   # replicate the aux loss
+        return out.reshape(bl, sl, d), aux
+
+    expert_specs = dict(router=P(), w1=P("model"), w3=P("model"),
+                        w2=P("model"))
+    if "shared" in p:
+        expert_specs["shared"] = dict(w1=P(), w2=P(), w3=P())
+    dp = dp_axes()
+    x_spec = P(dp if dp else None, "model", None)
+    fn = jax.shard_map(
+        body,
+        in_specs=(expert_specs, x_spec),
+        out_specs=(x_spec, P()),
+        check_vma=False)
+    out, aux = fn(p, x)
+    return out, aux
+
+
+def _moe_ep_token_poor(p: dict, x: jax.Array, cfg: TransformerConfig,
+                       token_axes: tuple, ep: int):
+    """Decode-batch EP: redundant routing per model rank, local expert
+    slice, psum(model) combine."""
+    e = cfg.n_experts
+    el = e // ep
+
+    def body(p_sh, x_loc):
+        t_loc = x_loc.shape[0]
+        cap = max(1, math.ceil(t_loc * cfg.moe_top_k / e
+                               * cfg.capacity_factor))
+        idx, w, aux = _route(p_sh["router"], x_loc, cfg.moe_top_k)
+        my = jax.lax.axis_index("model")
+        # re-index experts to the local chunk; foreign -> sentinel el
+        local_idx = idx - my * el
+        local_idx = jnp.where((local_idx >= 0) & (local_idx < el),
+                              local_idx, el)
+        out = _dispatch_compute(x_loc, local_idx, w, p_sh["w1"],
+                                p_sh["w3"], p_sh["w2"], cap)
+        out = jax.lax.psum(out, ("model",))
+        if "shared" in p_sh:
+            out = out + swiglu(p_sh["shared"], x_loc)
+        if token_axes:
+            aux = jax.lax.pmean(aux, token_axes)
+        return out, aux
+
+    expert_specs = dict(router=P(), w1=P("model"), w3=P("model"),
+                        w2=P("model"))
+    if "shared" in p:
+        expert_specs["shared"] = dict(w1=P(), w2=P(), w3=P())
+    x_spec = P(token_axes) if token_axes else P()
+    fn = jax.shard_map(
+        body,
+        in_specs=(expert_specs, x_spec),
+        out_specs=(x_spec, P()),
+        check_vma=False)
+    return fn(p, x)
+
+
+def moe_forward(p: dict, x: jax.Array, cfg: TransformerConfig):
+    """x [T, d] -> ([T, d], aux). Chooses EP vs local off the mesh."""
+    return moe_ep(p, x, cfg)

@@ -1,0 +1,430 @@
+"""Decoder-only LM supporting the five assigned architectures.
+
+One code base covers:
+  * GQA (phi3 / llama3 / kimi) and MLA (deepseek-v2) attention,
+  * dense SwiGLU and MoE (sort-dispatch, EP under a mesh) FFNs with an
+    optional leading dense layer (kimi / deepseek stacks),
+  * Gemma-3's 5:1 local:global pattern — per-layer window values in the
+    scanned stack for train/prefill, and a dual-cache decode (ring
+    buffers for local layers, full-length caches for global layers),
+  * scan-over-layers with configurable remat policy (HLO stays flat at
+    61+ layers).
+
+Train entry: ``loss_fn(params, batch, cfg)``;
+decode entry: ``decode_step(params, cache, tokens, pos, cfg)``.
+"""
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TransformerConfig
+from repro.distributed.sharding import shard
+from repro.models.common import cross_entropy, rms_norm
+from repro.models.transformer.attention import (gqa_decode, gqa_forward,
+                                                init_gqa, init_mla,
+                                                mla_decode, mla_forward)
+from repro.models.transformer.ffn import (init_moe, init_swiglu, moe_forward,
+                                          swiglu)
+
+AUX_COEF = 0.01
+
+
+# ----------------------------------------------------------------- init
+
+def _init_layer(key, cfg: TransformerConfig, moe_layer: bool, dtype) -> dict:
+    k1, k2 = jax.random.split(key)
+    attn = init_mla(k1, cfg, dtype) if cfg.mla else init_gqa(k1, cfg, dtype)
+    if moe_layer:
+        ffn = init_moe(k2, cfg, dtype)
+    else:
+        ffn = init_swiglu(k2, cfg.d_model, cfg.d_ff, dtype)
+    return dict(attn=attn, attn_norm=jnp.zeros((cfg.d_model,), jnp.float32),
+                ffn=ffn, ffn_norm=jnp.zeros((cfg.d_model,), jnp.float32))
+
+
+def init_params(key, cfg: TransformerConfig) -> dict:
+    dtype = jnp.dtype(cfg.dtype)
+    k_emb, k_out, k_dense, k_layers = jax.random.split(key, 4)
+    d, v = cfg.d_model, cfg.vocab
+    params = dict(
+        embed=(jax.random.normal(k_emb, (v, d), jnp.float32)
+               * d ** -0.5).astype(dtype),
+        out_embed=(jax.random.normal(k_out, (v, d), jnp.float32)
+                   * d ** -0.5).astype(dtype),
+        final_norm=jnp.zeros((d,), jnp.float32),
+    )
+    n_scan = cfg.n_layers - (cfg.n_dense_layers if cfg.moe else 0)
+    layer_keys = jax.random.split(k_layers, n_scan)
+    params["layers"] = jax.vmap(
+        lambda k: _init_layer(k, cfg, cfg.moe, dtype))(layer_keys)
+    if cfg.moe and cfg.n_dense_layers:
+        params["dense0"] = _init_layer(k_dense, cfg, False, dtype)
+    return params
+
+
+def layer_windows(cfg: TransformerConfig) -> np.ndarray:
+    """Per-layer sliding window (0 = global). Gemma pattern: every
+    (local_per_global+1)-th layer is global."""
+    n_scan = cfg.n_layers - (cfg.n_dense_layers if cfg.moe else 0)
+    if cfg.local_per_global <= 0:
+        return np.zeros(n_scan, np.int32)
+    idx = np.arange(n_scan)
+    is_global = (idx + 1) % (cfg.local_per_global + 1) == 0
+    return np.where(is_global, 0, cfg.local_window).astype(np.int32)
+
+
+# -------------------------------------------------------------- forward
+
+def _batch_axes(cfg: TransformerConfig):
+    """FSDP shards the batch over EVERY mesh axis (the model axis holds
+    no tensor parallelism there); Megatron TP keeps batch on dp only."""
+    return ("dp", "tp") if cfg.sharding_mode == "fsdp" else "dp"
+
+
+def _block(layer, x, positions, window, cfg: TransformerConfig,
+           use_pallas: bool):
+    if cfg.moe and not cfg.seq_parallel:
+        # the MoE shard_map emits (dp, model)-sharded (B, S); re-replicate
+        # S ONCE here (one [B,S,d] all-gather) so the attention head
+        # constraints don't trigger SPMD's replicate-then-repartition on
+        # every projected tensor (the 'involuntary full remat' path)
+        x = shard(x, _batch_axes(cfg), None, None)
+    h = rms_norm(x, layer["attn_norm"], cfg.norm_eps)
+    if cfg.mla:
+        a = mla_forward(layer["attn"], h, positions, cfg)
+    else:
+        a = gqa_forward(layer["attn"], h, positions, cfg,
+                        window=int(window) if isinstance(window, int) else 0,
+                        use_pallas=use_pallas)
+    x = x + a
+    h = rms_norm(x, layer["ffn_norm"], cfg.norm_eps)
+    h = shard(h, _batch_axes(cfg), None, None)
+    if cfg.moe and "router" in layer["ffn"]:
+        out, aux = moe_forward(layer["ffn"], h, cfg)   # 3D in, 3D out
+    else:
+        out, aux = swiglu(layer["ffn"], h), jnp.zeros((), jnp.float32)
+    y = x + out
+    if cfg.seq_parallel:
+        # sequence-parallel residual stream: the saved boundary
+        # activation shards over (dp, tp); SPMD turns the per-layer
+        # all-reduces into reduce-scatter + all-gather pairs
+        y = shard(y, "dp", "tp", None)
+    return y, aux
+
+
+def _block_windowed(layer, x, positions, window, cfg, use_pallas):
+    """Variant taking a traced per-layer window (Gemma scan): the window
+    is applied inside the mask, one code path for local+global."""
+    h = rms_norm(x, layer["attn_norm"], cfg.norm_eps)
+    a = _gqa_forward_dyn_window(layer["attn"], h, positions, cfg, window)
+    x = x + a
+    h = rms_norm(x, layer["ffn_norm"], cfg.norm_eps)
+    out = swiglu(layer["ffn"], h)
+    return x + out, jnp.zeros((), jnp.float32)
+
+
+def _gqa_forward_dyn_window(p, x, positions, cfg, window):
+    """GQA with a traced window scalar (0 = unbounded)."""
+    from repro.models.transformer.attention import _sdpa_chunked
+    from repro.models.transformer.rope import apply_rope
+    b, s, d = x.shape
+    h, kv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    g = h // kv
+    q = (x @ p["wq"]).reshape(b, s, h, dh)
+    k = (x @ p["wk"]).reshape(b, s, kv, dh)
+    v = (x @ p["wv"]).reshape(b, s, kv, dh)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    if g > 1:  # expand for TP head-sharding (see attention.gqa_forward)
+        k = jnp.repeat(k, g, axis=2)
+        v = jnp.repeat(v, g, axis=2)
+    tp = "tp" if cfg.sharding_mode == "tp" else None
+    bx = _batch_axes(cfg)
+    q = shard(q, bx, None, tp, None)
+    k = shard(k, bx, None, tp, None)
+    v = shard(v, bx, None, tp, None)
+    # dynamic window mask folded into the chunked sdpa via a huge window
+    win = jnp.where(window > 0, window, s + 1)
+    qg = q.reshape(b, s, h, 1, dh)
+    out = _sdpa_dyn(qg, k, v, win, q_chunk=cfg.attn_q_chunk)
+    return out.reshape(b, s, h * dh) @ p["wo"]
+
+
+def _sdpa_dyn(q, k, v, win, q_chunk: int = 512):
+    b, s, kvh, g, dh = q.shape
+    t = k.shape[1]
+    scale = dh ** -0.5
+    if s % q_chunk != 0:
+        q_chunk = s
+    nq = s // q_chunk
+    qs = q.reshape(b, nq, q_chunk, kvh, g, dh)
+    k32, v32 = k.astype(jnp.float32), v.astype(jnp.float32)
+
+    def tile(i):
+        qc = qs[:, i].astype(jnp.float32)
+        sc = jnp.einsum("bckgd,btkd->bkgct", qc, k32) * scale
+        q_pos = i * q_chunk + jnp.arange(q_chunk)
+        k_pos = jnp.arange(t)
+        mask = (k_pos[None, :] <= q_pos[:, None]) \
+            & (k_pos[None, :] > q_pos[:, None] - win)
+        sc = jnp.where(mask, sc, -1e30)
+        p = jax.nn.softmax(sc, axis=-1)
+        return jnp.einsum("bkgct,btkd->bckgd", p, v32)
+
+    if nq == 1:
+        return tile(0).reshape(b, s, kvh, g, dh).astype(q.dtype)
+    out = jax.lax.map(tile, jnp.arange(nq))
+    return jnp.moveaxis(out, 0, 1).reshape(b, s, kvh, g, dh).astype(q.dtype)
+
+
+def _remat(fn, cfg: TransformerConfig):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "full":
+        return jax.checkpoint(fn, policy=jax.checkpoint_policies.nothing_saveable)
+    return jax.checkpoint(fn, policy=jax.checkpoint_policies.dots_saveable)
+
+
+def forward(params: dict, tokens: jax.Array, cfg: TransformerConfig, *,
+            use_pallas: bool = False) -> tuple[jax.Array, jax.Array]:
+    """tokens [B, S] -> (logits [B, S, V], moe aux loss)."""
+    b, s = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x = shard(x, _batch_axes(cfg), None, None)
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    aux_total = jnp.zeros((), jnp.float32)
+
+    if cfg.moe and cfg.n_dense_layers:
+        blk = _remat(functools.partial(_block, cfg=cfg, window=0,
+                                       use_pallas=use_pallas), cfg)
+        x, _ = blk(params["dense0"], x, positions)
+
+    windows_np = layer_windows(cfg)
+    n_scan = len(windows_np)
+    if cfg.unroll_layers:
+        # probe mode: every layer in the entry computation; static
+        # per-layer windows (exact local/global masks for Gemma)
+        for i in range(n_scan):
+            lyr = jax.tree.map(lambda p: p[i], params["layers"])
+            x, a = _block(lyr, x, positions, int(windows_np[i]), cfg,
+                          use_pallas)
+            aux_total = aux_total + a
+    elif cfg.local_per_global > 0:
+        windows = jnp.asarray(windows_np)
+        body = _remat(lambda lyr, xx, w: _block_windowed(
+            lyr, xx, positions, w, cfg, use_pallas), cfg)
+
+        def step(carry, inp):
+            lyr, w = inp
+            xx, aux = carry
+            xx, a = body(lyr, xx, w)
+            return (xx, aux + a), None
+        (x, aux_total), _ = jax.lax.scan(
+            step, (x, aux_total), (params["layers"], windows))
+    else:
+        body = _remat(lambda lyr, xx: _block(
+            lyr, xx, positions, 0, cfg, use_pallas), cfg)
+
+        def step(carry, lyr):
+            xx, aux = carry
+            xx, a = body(lyr, xx)
+            return (xx, aux + a), None
+        (x, aux_total), _ = jax.lax.scan(step, (x, aux_total),
+                                         params["layers"])
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,vd->bsv", x, params["out_embed"])
+    logits = shard(logits, "dp", None, "tp")  # vocab-parallel head in BOTH modes
+    return logits, aux_total
+
+
+def loss_fn(params: dict, batch: dict, cfg: TransformerConfig, *,
+            use_pallas: bool = False) -> jax.Array:
+    """batch = {"tokens": [B, S], "labels": [B, S]} (labels -1 = pad)."""
+    logits, aux = forward(params, batch["tokens"], cfg,
+                          use_pallas=use_pallas)
+    return cross_entropy(logits, batch["labels"]) + AUX_COEF * aux
+
+
+# --------------------------------------------------------------- decode
+
+def init_cache(cfg: TransformerConfig, batch: int, max_seq: int) -> dict:
+    """Decode cache pytree. Gemma gets ring buffers for local layers."""
+    dtype = jnp.dtype(cfg.dtype)
+    n_scan = cfg.n_layers - (cfg.n_dense_layers if cfg.moe else 0)
+    kv, dh = cfg.n_kv_heads, cfg.d_head
+    cache: dict = {}
+    if cfg.mla:
+        r, rd = cfg.kv_lora_rank, cfg.qk_rope_dim
+        cache["ckv"] = jnp.zeros((n_scan, batch, max_seq, r), dtype)
+        cache["kr"] = jnp.zeros((n_scan, batch, max_seq, rd), dtype)
+    elif cfg.local_per_global > 0:
+        wins = layer_windows(cfg)
+        n_local = int((wins > 0).sum())
+        n_global = int((wins == 0).sum())
+        w = cfg.local_window
+        cache["k_local"] = jnp.zeros((n_local, batch, w, kv, dh), dtype)
+        cache["v_local"] = jnp.zeros((n_local, batch, w, kv, dh), dtype)
+        cache["k_global"] = jnp.zeros((n_global, batch, max_seq, kv, dh), dtype)
+        cache["v_global"] = jnp.zeros((n_global, batch, max_seq, kv, dh), dtype)
+    else:
+        cache["k"] = jnp.zeros((n_scan, batch, max_seq, kv, dh), dtype)
+        cache["v"] = jnp.zeros((n_scan, batch, max_seq, kv, dh), dtype)
+    if cfg.moe and cfg.n_dense_layers:
+        if cfg.mla:
+            cache["ckv0"] = jnp.zeros((batch, max_seq, cfg.kv_lora_rank), dtype)
+            cache["kr0"] = jnp.zeros((batch, max_seq, cfg.qk_rope_dim), dtype)
+        else:
+            cache["k0"] = jnp.zeros((batch, max_seq, kv, dh), dtype)
+            cache["v0"] = jnp.zeros((batch, max_seq, kv, dh), dtype)
+    return cache
+
+
+def _ffn_decode(layer, x, cfg):
+    h = rms_norm(x, layer["ffn_norm"], cfg.norm_eps)
+    if cfg.moe and "router" in layer["ffn"]:
+        b = h.shape[0]
+        out, _ = moe_forward(layer["ffn"], h.reshape(b, -1), cfg)
+        return x + out.reshape(h.shape)
+    return x + swiglu(layer["ffn"], h)
+
+
+def decode_step(params: dict, cache: dict, tokens: jax.Array,
+                pos: jax.Array, cfg: TransformerConfig):
+    """One decode step. tokens [B, 1] int32, pos scalar int32 (same for
+    all sequences; per-sequence offsets belong to the serving engine).
+    Returns (logits [B, V], new_cache)."""
+    b = tokens.shape[0]
+    x = jnp.take(params["embed"], tokens, axis=0)       # [B, 1, d]
+    x = shard(x, "dp", None, None)
+
+    if cfg.moe and cfg.n_dense_layers:
+        lyr = params["dense0"]
+        h = rms_norm(x, lyr["attn_norm"], cfg.norm_eps)
+        if cfg.mla:
+            a, cache["ckv0"], cache["kr0"] = mla_decode(
+                lyr["attn"], h, pos, cache["ckv0"], cache["kr0"], cfg)
+        else:
+            a, cache["k0"], cache["v0"] = gqa_decode(
+                lyr["attn"], h, pos, cache["k0"], cache["v0"], cfg)
+        x = _ffn_decode(lyr, x + a, cfg)
+
+    if cfg.unroll_layers:
+        x, cache = _decode_unrolled(params, cache, x, pos, cfg)
+    elif cfg.mla:
+        def step(carry, inp):
+            xx = carry
+            lyr, ckv, kr = inp
+            h = rms_norm(xx, lyr["attn_norm"], cfg.norm_eps)
+            a, ckv, kr = mla_decode(lyr["attn"], h, pos, ckv, kr, cfg)
+            xx = _ffn_decode(lyr, xx + a, cfg)
+            return xx, (ckv, kr)
+        x, (cache["ckv"], cache["kr"]) = jax.lax.scan(
+            step, x, (params["layers"], cache["ckv"], cache["kr"]))
+    elif cfg.local_per_global > 0:
+        x, cache = _decode_gemma(params, cache, x, pos, cfg)
+    else:
+        win = 0
+
+        def step(carry, inp):
+            xx = carry
+            lyr, ck, cv = inp
+            h = rms_norm(xx, lyr["attn_norm"], cfg.norm_eps)
+            a, ck, cv = gqa_decode(lyr["attn"], h, pos, ck, cv, cfg,
+                                   window=win)
+            xx = _ffn_decode(lyr, xx + a, cfg)
+            return xx, (ck, cv)
+        x, (cache["k"], cache["v"]) = jax.lax.scan(
+            step, x, (params["layers"], cache["k"], cache["v"]))
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,vd->bsv", x, params["out_embed"])[:, 0]
+    return shard(logits, "dp", "tp"), cache
+
+
+def _decode_unrolled(params, cache, x, pos, cfg):
+    """Probe-mode decode: python loop, static per-layer windows."""
+    wins = layer_windows(cfg)
+    n_scan = len(wins)
+    if cfg.local_per_global > 0:
+        is_local = wins > 0
+        slots = np.where(is_local, np.cumsum(is_local) - 1,
+                         np.cumsum(~is_local) - 1)
+    new_slices: dict = {k: [] for k in ("k", "v", "ckv", "kr")}
+    kl, vl = cache.get("k_local"), cache.get("v_local")
+    kg, vg = cache.get("k_global"), cache.get("v_global")
+    for i in range(n_scan):
+        lyr = jax.tree.map(lambda p: p[i], params["layers"])
+        h = rms_norm(x, lyr["attn_norm"], cfg.norm_eps)
+        if cfg.mla:
+            a, ckv, kr = mla_decode(lyr["attn"], h, pos, cache["ckv"][i],
+                                    cache["kr"][i], cfg)
+            new_slices["ckv"].append(ckv)
+            new_slices["kr"].append(kr)
+        elif cfg.local_per_global > 0:
+            sl = int(slots[i])
+            if wins[i] > 0:
+                a, ck, cv = gqa_decode(lyr["attn"], h, pos, kl[sl], vl[sl],
+                                       cfg, window=cfg.local_window)
+                kl, vl = kl.at[sl].set(ck), vl.at[sl].set(cv)
+            else:
+                a, ck, cv = gqa_decode(lyr["attn"], h, pos, kg[sl], vg[sl],
+                                       cfg, window=0)
+                kg, vg = kg.at[sl].set(ck), vg.at[sl].set(cv)
+        else:
+            a, ck, cv = gqa_decode(lyr["attn"], h, pos, cache["k"][i],
+                                   cache["v"][i], cfg, window=0)
+            new_slices["k"].append(ck)
+            new_slices["v"].append(cv)
+        x = _ffn_decode(lyr, x + a, cfg)
+    cache = dict(cache)
+    for name, sl in new_slices.items():
+        if sl:
+            cache[name] = jnp.stack(sl)
+    if cfg.local_per_global > 0:
+        cache.update(k_local=kl, v_local=vl, k_global=kg, v_global=vg)
+    return x, cache
+
+
+def _decode_gemma(params, cache, x, pos, cfg):
+    """Dual-cache decode: ring buffers (window W) for local layers,
+    full-length caches for global layers; one scan over all layers with
+    a cond on the layer kind."""
+    wins = layer_windows(cfg)
+    is_local = wins > 0
+    slot_idx = np.where(is_local, np.cumsum(is_local) - 1,
+                        np.cumsum(~is_local) - 1).astype(np.int32)
+    kl, vl = cache["k_local"], cache["v_local"]
+    kg, vg = cache["k_global"], cache["v_global"]
+
+    def step(carry, inp):
+        xx, kl, vl, kg, vg = carry
+        lyr, loc, sl = inp
+        h = rms_norm(xx, lyr["attn_norm"], cfg.norm_eps)
+
+        def local_branch(op):
+            h, kl, vl, kg, vg = op
+            a, ck, cv = gqa_decode(lyr["attn"], h, pos, kl[sl], vl[sl],
+                                   cfg, window=cfg.local_window)
+            return a, kl.at[sl].set(ck), vl.at[sl].set(cv), kg, vg
+
+        def global_branch(op):
+            h, kl, vl, kg, vg = op
+            a, ck, cv = gqa_decode(lyr["attn"], h, pos, kg[sl], vg[sl],
+                                   cfg, window=0)
+            return a, kl, vl, kg.at[sl].set(ck), vg.at[sl].set(cv)
+
+        a, kl, vl, kg, vg = jax.lax.cond(loc, local_branch, global_branch,
+                                         (h, kl, vl, kg, vg))
+        xx = _ffn_decode(lyr, xx + a, cfg)
+        return (xx, kl, vl, kg, vg), None
+
+    (x, kl, vl, kg, vg), _ = jax.lax.scan(
+        step, (x, kl, vl, kg, vg),
+        (params["layers"], jnp.asarray(is_local), jnp.asarray(slot_idx)))
+    cache = dict(cache, k_local=kl, v_local=vl, k_global=kg, v_global=vg)
+    return x, cache

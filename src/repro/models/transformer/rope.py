@@ -1,0 +1,28 @@
+"""Rotary position embeddings."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rope_freqs(dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x [B, S, ..., D] with positions [B, S]; any number of axes (e.g.
+    heads) between S and the even last axis D.
+
+    Layout: split halves (x1 = x[..., :D/2], x2 = x[..., D/2:]), the
+    llama convention."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                       # [D/2]
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [..., S, D/2]
+    # broadcast ang over any axes between S and D (e.g. heads)
+    while ang.ndim < x.ndim:
+        ang = ang[..., None, :]
+    cos = jnp.cos(ang).astype(x.dtype)
+    sin = jnp.sin(ang).astype(x.dtype)
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate([x1 * cos - x2 * sin,
+                            x2 * cos + x1 * sin], axis=-1)

@@ -1,0 +1,94 @@
+"""Serving engines.
+
+``LMDecoder``       — KV-cache decode loop around decode_step (greedy or
+                      temperature sampling) with batched requests.
+``SeismicServer``   — batched approximate retrieval over a (optionally
+                      doc-sharded) Seismic index; pads request batches
+                      to a fixed size so the jitted search never
+                      recompiles; reports docs-evaluated telemetry.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TransformerConfig
+from repro.core.query import SearchParams, search_batch
+from repro.core.types import SeismicIndex
+from repro.models.transformer import lm
+from repro.sparse.ops import PaddedSparse
+
+
+class LMDecoder:
+    def __init__(self, params, cfg: TransformerConfig, batch: int,
+                 max_seq: int):
+        self.params = params
+        self.cfg = cfg
+        self.max_seq = max_seq
+        self.cache = lm.init_cache(cfg, batch, max_seq)
+        self._step = jax.jit(
+            lambda p, c, t, pos: lm.decode_step(p, c, t, pos, cfg))
+
+    def generate(self, prompts: np.ndarray, n_steps: int, *,
+                 greedy: bool = True, seed: int = 0) -> np.ndarray:
+        """prompts [B, P] int32 -> tokens [B, P + n_steps]."""
+        b, plen = prompts.shape
+        key = jax.random.PRNGKey(seed)
+        toks = [prompts[:, i] for i in range(plen)]
+        # prefill by stepping (keeps one compiled program)
+        logits = None
+        for i in range(plen):
+            logits, self.cache = self._step(
+                self.params, self.cache,
+                jnp.asarray(toks[i][:, None], jnp.int32),
+                jnp.asarray(i, jnp.int32))
+        for j in range(n_steps):
+            if greedy:
+                nxt = jnp.argmax(logits, axis=-1)
+            else:
+                key, sub = jax.random.split(key)
+                nxt = jax.random.categorical(sub, logits)
+            toks.append(np.asarray(nxt, np.int32))
+            logits, self.cache = self._step(
+                self.params, self.cache,
+                jnp.asarray(nxt[:, None], jnp.int32),
+                jnp.asarray(plen + j, jnp.int32))
+        return np.stack(toks, axis=1)
+
+
+@dataclasses.dataclass
+class RetrievalResult:
+    ids: np.ndarray
+    scores: np.ndarray
+    docs_evaluated: np.ndarray
+
+
+class SeismicServer:
+    """Fixed-batch jitted retrieval front-end."""
+
+    def __init__(self, index: SeismicIndex, params: SearchParams,
+                 max_batch: int = 256):
+        self.index = index
+        self.params = params
+        self.max_batch = max_batch
+
+    def search(self, queries: PaddedSparse) -> RetrievalResult:
+        q = queries
+        n = q.coords.shape[0]
+        pad = (-n) % self.max_batch
+        if pad:
+            coords = jnp.pad(q.coords, ((0, pad), (0, 0)))
+            vals = jnp.pad(q.vals, ((0, pad), (0, 0)))
+            q = PaddedSparse(coords, vals, q.dim)
+        outs = []
+        for s in range(0, q.coords.shape[0], self.max_batch):
+            chunk = PaddedSparse(q.coords[s:s + self.max_batch],
+                                 q.vals[s:s + self.max_batch], q.dim)
+            outs.append(search_batch(self.index, chunk, self.params))
+        scores = np.concatenate([np.asarray(o[0]) for o in outs])[:n]
+        ids = np.concatenate([np.asarray(o[1]) for o in outs])[:n]
+        ev = np.concatenate([np.asarray(o[2]) for o in outs])[:n]
+        return RetrievalResult(ids=ids, scores=scores, docs_evaluated=ev)

@@ -1,0 +1,22 @@
+from repro.sparse.ops import (
+    PaddedSparse,
+    densify,
+    sparsify,
+    alpha_mass_subvector,
+    top_cut,
+    inner_product_padded,
+    l1_mass_fraction,
+)
+from repro.sparse.quant import quantize_u8, dequantize_u8
+
+__all__ = [
+    "PaddedSparse",
+    "densify",
+    "sparsify",
+    "alpha_mass_subvector",
+    "top_cut",
+    "inner_product_padded",
+    "l1_mass_fraction",
+    "quantize_u8",
+    "dequantize_u8",
+]

@@ -1,0 +1,46 @@
+"""8-bit affine scalar quantization for summary vectors (paper §5.3).
+
+The paper subtracts the minimum value m, splits the range into equal
+sub-intervals, and stores the interval id; reconstruction is
+``id * scale + m``. We quantize per summary (per block) so the
+dequantization constants ride along with each block and fuse into the
+routing inner product.
+
+Deviation for padded layouts: level 0 is reserved for padding (exact
+zero on reconstruction); real values occupy levels 1..255 over the
+[vmin, vmax] range of the positive entries. This keeps the scoring
+path mask-free.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_LEVELS = 254.0  # real values map to 1..255 -> 254 intervals
+
+
+def quantize_u8(vals: jax.Array) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """vals [..., S] (padding == 0) -> (q uint8 [..., S], scale [...], zero [...]).
+
+    Quantizes over the last axis; only positive entries define the
+    range. q == 0 always means padding.
+    """
+    valid = vals > 0
+    big = jnp.finfo(jnp.float32).max
+    v32 = vals.astype(jnp.float32)
+    vmin = jnp.min(jnp.where(valid, v32, big), axis=-1)
+    vmin = jnp.where(vmin < big, vmin, 0.0)
+    vmax = jnp.max(jnp.where(valid, v32, 0.0), axis=-1)
+    scale = jnp.maximum(vmax - vmin, 1e-12) / _LEVELS
+    q = jnp.round((v32 - vmin[..., None]) / scale[..., None]) + 1.0
+    q = jnp.clip(q, 1, 255)
+    q = jnp.where(valid, q, 0).astype(jnp.uint8)
+    return q, scale, vmin
+
+
+def dequantize_u8(q: jax.Array, scale: jax.Array, zero: jax.Array,
+                  dtype=jnp.float32) -> jax.Array:
+    """Reconstruct values; level 0 (padding) maps to exactly 0."""
+    v = (q.astype(dtype) - 1.0) * scale[..., None].astype(dtype) \
+        + zero[..., None].astype(dtype)
+    return jnp.where(q > 0, v, 0.0).astype(dtype)

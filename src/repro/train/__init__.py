@@ -1,0 +1,4 @@
+from repro.train.optimizer import AdamWConfig, adamw_update, init_opt_state
+from repro.train.train_step import make_train_step
+
+__all__ = ["AdamWConfig", "adamw_update", "init_opt_state", "make_train_step"]

@@ -1,0 +1,48 @@
+"""Generic train step: value_and_grad -> AdamW, with optional
+microbatched gradient accumulation (the accumulation scan is also the
+compute/collective overlap lever: per-microbatch DP reductions overlap
+the next microbatch's compute under XLA async collectives)."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.train.optimizer import AdamWConfig, adamw_update
+
+
+def make_train_step(loss_fn, opt_cfg: AdamWConfig, *, microbatches: int = 1,
+                    donate: bool = True):
+    """loss_fn(params, batch) -> scalar. Returns jit-able
+    train_step(params, opt_state, batch) -> (params, opt_state, metrics).
+    """
+
+    def step(params, opt_state, batch):
+        if microbatches > 1:
+            def split(x):
+                b = x.shape[0]
+                assert b % microbatches == 0
+                return x.reshape(microbatches, b // microbatches, *x.shape[1:])
+            mb = jax.tree.map(split, batch)
+
+            def acc_fn(carry, micro):
+                loss_acc, grad_acc = carry
+                loss, grads = jax.value_and_grad(loss_fn)(params, micro)
+                grad_acc = jax.tree.map(jnp.add, grad_acc, grads)
+                return (loss_acc + loss, grad_acc), None
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (loss, grads), _ = jax.lax.scan(
+                acc_fn, (jnp.zeros((), jnp.float32), zeros), mb)
+            loss = loss / microbatches
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+        else:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        params, opt_state, metrics = adamw_update(grads, opt_state, params,
+                                                  opt_cfg)
+        metrics["loss"] = loss
+        return params, opt_state, metrics
+
+    return step

@@ -1,0 +1,25 @@
+"""Run a python snippet in a subprocess with a forced device count.
+
+Multi-device tests must not set XLA_FLAGS in this process (jax locks
+the device count on first init), so they shell out.
+"""
+import os
+import subprocess
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_with_devices(code: str, n_devices: int = 8, timeout: int = 900):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + f" --xla_force_host_platform_device_count={n_devices}")
+    env["PYTHONPATH"] = os.path.join(REPO, "src") + os.pathsep \
+        + env.get("PYTHONPATH", "")
+    proc = subprocess.run([sys.executable, "-c", code], env=env,
+                          capture_output=True, text=True, timeout=timeout)
+    if proc.returncode != 0:
+        raise AssertionError(
+            f"subprocess failed (rc={proc.returncode})\n--- stdout ---\n"
+            f"{proc.stdout}\n--- stderr ---\n{proc.stderr}")
+    return proc.stdout

@@ -1,0 +1,54 @@
+"""Distributed (doc-sharded) Seismic vs single-shard reference.
+
+Runs in a subprocess with 8 forced host devices (the main test process
+must keep the real single-device view).
+"""
+from helpers import run_with_devices
+
+CODE = r"""
+import numpy as np, jax, jax.numpy as jnp
+from repro.data import SyntheticSparseConfig, make_collection
+from repro.core import SeismicConfig, SearchParams
+from repro.core.distributed import build_sharded_index, make_distributed_search
+from repro.core.baselines import exact_search
+from repro.core.oracle import recall_at_k
+from repro.sparse.ops import PaddedSparse
+
+assert len(jax.devices()) == 8
+cfg = SyntheticSparseConfig(dim=512, n_docs=1024, n_queries=16, doc_nnz=32,
+                            query_nnz=12, n_topics=16, topic_coords=96, seed=3)
+docs_np, queries_np, _ = make_collection(cfg)
+docs = PaddedSparse(jnp.asarray(docs_np.coords), jnp.asarray(docs_np.vals), docs_np.dim)
+queries = PaddedSparse(jnp.asarray(queries_np.coords), jnp.asarray(queries_np.vals), queries_np.dim)
+
+mesh = jax.make_mesh((2, 4), ("data", "model"),
+                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+scfg = SeismicConfig(lam=96, beta=8, alpha=0.4, block_cap=24, summary_nnz=24)
+stacked = build_sharded_index(docs, scfg, n_shards=4)
+p = SearchParams(k=10, cut=8, block_budget=32, policy="adaptive")
+search = make_distributed_search(mesh, p, doc_axes=("model",), data_axis="data")
+with jax.set_mesh(mesh):
+    s, ids = jax.jit(search)(stacked, queries.coords, queries.vals)
+es, eids = exact_search(docs, queries, 10)
+recalls = [recall_at_k(np.asarray(ids[q]), np.asarray(eids[q])) for q in range(16)]
+assert np.mean(recalls) >= 0.9, np.mean(recalls)
+
+# global ids must be valid and scores exact IPs
+q_dense = np.zeros((16, docs.dim))
+rows = np.arange(16)[:, None]
+np.add.at(q_dense, (rows, queries_np.coords), queries_np.vals)
+for q in range(16):
+    for j in range(10):
+        doc = int(ids[q, j])
+        if doc < 0:
+            continue
+        assert 0 <= doc < docs.n
+        ip = (q_dense[q][docs_np.coords[doc]] * docs_np.vals[doc]).sum()
+        assert abs(float(s[q, j]) - ip) < 1e-3 * max(1.0, abs(ip)), (q, j)
+print("OK distributed")
+"""
+
+
+def test_distributed_search_8dev():
+    out = run_with_devices(CODE, n_devices=8)
+    assert "OK distributed" in out

@@ -1,0 +1,159 @@
+"""Per-kernel validation: interpret-mode Pallas vs pure-jnp oracle,
+shape/dtype sweeps + hypothesis property tests."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.flash_attention.flash_attention import flash_attention_pallas
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.gather_dot.gather_dot import gather_dot_pallas
+from repro.kernels.gather_dot.ops import gather_dot
+from repro.kernels.gather_dot.ref import gather_dot_ref
+from repro.kernels.summary_dot.ops import summary_dot
+from repro.kernels.summary_dot.ref import summary_dot_ref
+from repro.sparse.quant import quantize_u8
+
+
+# ------------------------------------------------------------- gather_dot
+
+@pytest.mark.parametrize("n,nnz,d", [(128, 16, 512), (256, 96, 4096),
+                                     (384, 33, 1000), (5, 8, 64)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_gather_dot_sweep(n, nnz, d, dtype):
+    rng = np.random.default_rng(n + nnz)
+    q = jnp.asarray(rng.lognormal(0, 1, d), dtype)
+    coords = jnp.asarray(rng.integers(0, d, (n, nnz)), jnp.int32)
+    vals = jnp.asarray(rng.lognormal(0, 1, (n, nnz)), dtype)
+    got = gather_dot(q, coords, vals)
+    want = gather_dot_ref(q, coords, vals)
+    rtol = 1e-6 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), rtol=rtol)
+
+
+def test_gather_dot_tile_exact():
+    """Direct pallas call on an exact tile multiple (no ops padding)."""
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.random(256), jnp.float32)
+    coords = jnp.asarray(rng.integers(0, 256, (256, 24)), jnp.int32)
+    vals = jnp.asarray(rng.random((256, 24)), jnp.float32)
+    got = gather_dot_pallas(q, coords, vals, tile_n=128, interpret=True)
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(gather_dot_ref(q, coords, vals)),
+                               rtol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 300), st.integers(1, 40), st.integers(2, 600),
+       st.integers(0, 2 ** 31 - 1))
+def test_gather_dot_property(n, nnz, d, seed):
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.standard_normal(d), jnp.float32)
+    coords = jnp.asarray(rng.integers(0, d, (n, nnz)), jnp.int32)
+    vals = jnp.asarray(rng.standard_normal((n, nnz)), jnp.float32)
+    got = gather_dot(q, coords, vals)
+    want = gather_dot_ref(q, coords, vals)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ------------------------------------------------------------ summary_dot
+
+@pytest.mark.parametrize("cut,nb,s,d", [(8, 12, 32, 1024), (1, 4, 8, 128),
+                                        (16, 20, 64, 4096)])
+def test_summary_dot_sweep(cut, nb, s, d):
+    rng = np.random.default_rng(cut * nb)
+    q = jnp.asarray(rng.lognormal(0, 1, d), jnp.float32)
+    coords = jnp.asarray(rng.integers(0, d, (cut, nb, s)), jnp.int32)
+    vals = rng.lognormal(0, 1, (cut, nb, s)).astype(np.float32)
+    vals[rng.random((cut, nb, s)) < 0.3] = 0.0  # padding
+    q8, scale, zero = quantize_u8(jnp.asarray(vals))
+    got = summary_dot(q, coords, q8, scale, zero)
+    want = summary_dot_ref(q, coords, q8, scale, zero)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_summary_dot_matches_unquantized_closely():
+    """Fused dequant routing ~ float routing within quantization error."""
+    rng = np.random.default_rng(1)
+    d = 2048
+    q = jnp.asarray(rng.lognormal(0, 1, d), jnp.float32)
+    coords = jnp.asarray(rng.integers(0, d, (4, 8, 32)), jnp.int32)
+    vals = jnp.asarray(rng.lognormal(0, 1, (4, 8, 32)), jnp.float32)
+    q8, scale, zero = quantize_u8(vals)
+    got = np.asarray(summary_dot(q, coords, q8, scale, zero))
+    exact = np.asarray((jnp.take(q, coords, axis=0) * vals).sum(-1))
+    rel = np.abs(got - exact) / np.maximum(np.abs(exact), 1e-9)
+    assert rel.max() < 0.02
+
+
+# -------------------------------------------------------- flash_attention
+
+@pytest.mark.parametrize("b,h,hkv,s,dh", [(1, 4, 4, 128, 64),
+                                          (2, 8, 2, 256, 64),
+                                          (1, 2, 1, 200, 128)])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_sweep(b, h, hkv, s, dh, causal):
+    rng = np.random.default_rng(s + h)
+    q = jnp.asarray(rng.standard_normal((b, h, s, dh)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, hkv, s, dh)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, hkv, s, dh)), jnp.float32)
+    got = flash_attention(q, k, v, causal=causal, tile_q=128, tile_k=128)
+    kk = jnp.repeat(k, h // hkv, axis=1).reshape(b * h, s, dh)
+    vv = jnp.repeat(v, h // hkv, axis=1).reshape(b * h, s, dh)
+    want = attention_ref(q.reshape(b * h, s, dh), kk, vv,
+                         sm_scale=dh ** -0.5, causal=causal,
+                         kv_len=s).reshape(b, h, s, dh)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attention_sliding_window():
+    """Gemma-style local attention: window masking agrees with ref."""
+    rng = np.random.default_rng(5)
+    b, h, s, dh = 1, 2, 256, 64
+    q = jnp.asarray(rng.standard_normal((b, h, s, dh)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, h, s, dh)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, h, s, dh)), jnp.float32)
+    got = flash_attention(q, k, v, causal=True, window=64)
+    want = attention_ref(q.reshape(b * h, s, dh), k.reshape(b * h, s, dh),
+                         v.reshape(b * h, s, dh), sm_scale=dh ** -0.5,
+                         causal=True, window=64, kv_len=s)
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(want).reshape(b, h, s, dh),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attention_bf16():
+    rng = np.random.default_rng(9)
+    b, h, s, dh = 1, 2, 128, 64
+    mk = lambda: jnp.asarray(rng.standard_normal((b, h, s, dh)), jnp.bfloat16)
+    q, k, v = mk(), mk(), mk()
+    got = flash_attention(q, k, v, causal=True)
+    want = attention_ref(q.reshape(b * h, s, dh), k.reshape(b * h, s, dh),
+                         v.reshape(b * h, s, dh), sm_scale=dh ** -0.5,
+                         causal=True, kv_len=s)
+    np.testing.assert_allclose(np.asarray(got, np.float32).reshape(-1),
+                               np.asarray(want, np.float32).reshape(-1),
+                               rtol=0.05, atol=0.05)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 2), st.sampled_from([1, 2, 4]),
+       st.integers(10, 300), st.sampled_from([32, 64]),
+       st.integers(0, 2 ** 31 - 1))
+def test_flash_attention_property(b, h, s, dh, seed):
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.standard_normal((b, h, s, dh)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, h, s, dh)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, h, s, dh)), jnp.float32)
+    got = flash_attention(q, k, v, causal=True)
+    want = attention_ref(q.reshape(b * h, s, dh), k.reshape(b * h, s, dh),
+                         v.reshape(b * h, s, dh), sm_scale=dh ** -0.5,
+                         causal=True, kv_len=s).reshape(b, h, s, dh)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=3e-5, atol=3e-5)

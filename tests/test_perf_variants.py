@@ -1,0 +1,167 @@
+"""Correctness of the §Perf optimization variants: compact forward
+index, fixed blocking, centroid summaries, FSDP sharding, node-sharded
+GIN aggregation."""
+import dataclasses
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.core import SeismicConfig, SearchParams, build_index, search_batch
+from repro.core.baselines import exact_search
+from repro.core.oracle import recall_at_k
+from repro.sparse.ops import PaddedSparse
+from helpers import run_with_devices
+
+
+@pytest.fixture(scope="module")
+def coll():
+    from repro.data import SyntheticSparseConfig, make_collection
+    cfg = SyntheticSparseConfig(dim=1024, n_docs=2048, n_queries=24,
+                                doc_nnz=48, query_nnz=16, n_topics=32,
+                                topic_coords=128, seed=5)
+    docs_np, queries_np, _ = make_collection(cfg)
+    docs = PaddedSparse(jnp.asarray(docs_np.coords),
+                        jnp.asarray(docs_np.vals), docs_np.dim)
+    queries = PaddedSparse(jnp.asarray(queries_np.coords),
+                           jnp.asarray(queries_np.vals), queries_np.dim)
+    _, eids = exact_search(docs, queries, 10)
+    return docs, queries, np.asarray(eids)
+
+
+BASE = SeismicConfig(lam=128, beta=8, alpha=0.4, block_cap=32,
+                     summary_nnz=32)
+
+
+def _recall(idx, queries, eids, policy="adaptive", budget=32):
+    p = SearchParams(k=10, cut=8, block_budget=budget, policy=policy)
+    _, ids, ev = search_batch(idx, queries, p)
+    return np.mean([recall_at_k(np.asarray(ids[q]), eids[q])
+                    for q in range(queries.n)]), ev
+
+
+def test_fwd_quant_recall_and_size(coll):
+    """Compact (u16/u8) forward index: same recall, smaller, u16 coords."""
+    docs, queries, eids = coll
+    idx_f = build_index(docs, BASE, list_chunk=16)
+    idx_q = build_index(docs, dataclasses.replace(BASE, fwd_quant=True),
+                        list_chunk=16)
+    rf, _ = _recall(idx_f, queries, eids)
+    rq, _ = _recall(idx_q, queries, eids)
+    assert abs(rf - rq) < 0.02
+    assert idx_q.fwd.coords.dtype == jnp.uint16
+    assert idx_q.fwd.vals.dtype == jnp.uint8
+    assert idx_q.fwd_scale is not None
+    bytes_f = idx_f.fwd.coords.nbytes + idx_f.fwd.vals.nbytes
+    bytes_q = (idx_q.fwd.coords.nbytes + idx_q.fwd.vals.nbytes
+               + idx_q.fwd_scale.nbytes + idx_q.fwd_zero.nbytes)
+    assert bytes_q < 0.5 * bytes_f
+
+
+def test_fwd_quant_scores_close(coll):
+    """Quantized forward scores within ~1% of float scores."""
+    docs, queries, eids = coll
+    idx_f = build_index(docs, BASE, list_chunk=16)
+    idx_q = build_index(docs, dataclasses.replace(BASE, fwd_quant=True),
+                        list_chunk=16)
+    p = SearchParams(k=10, cut=8, block_budget=32, policy="budget")
+    sf, idf, _ = search_batch(idx_f, queries, p)
+    sq, idq, _ = search_batch(idx_q, queries, p)
+    # compare scores of shared results
+    for q in range(queries.n):
+        f = {int(i): float(s) for i, s in zip(idf[q], sf[q]) if i >= 0}
+        qd = {int(i): float(s) for i, s in zip(idq[q], sq[q]) if i >= 0}
+        common = set(f) & set(qd)
+        assert len(common) >= 5
+        for doc in common:
+            assert abs(f[doc] - qd[doc]) / max(abs(f[doc]), 1e-6) < 0.02
+
+
+def test_fixed_blocking_builds_and_searches(coll):
+    docs, queries, eids = coll
+    idx = build_index(docs, dataclasses.replace(BASE, blocking="fixed"),
+                      list_chunk=16)
+    r, _ = _recall(idx, queries, eids, policy="budget", budget=48)
+    assert r > 0.8  # works, geometrically weaker (see fig5 bench)
+    # fixed blocks are impact-ordered contiguous chunks of size <= cap
+    ln = np.asarray(idx.block_len)
+    assert (ln <= BASE.block_cap).all()
+
+
+def test_centroid_summaries_build_and_search(coll):
+    docs, queries, eids = coll
+    idx = build_index(docs, dataclasses.replace(BASE,
+                                                summary_kind="centroid"),
+                      list_chunk=16)
+    r, _ = _recall(idx, queries, eids, budget=48)
+    assert r > 0.8
+
+
+FSDP_CODE = r"""
+import dataclasses
+import numpy as np, jax, jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.models.api import get_bundle
+from repro.distributed.param_sharding import lm_param_specs
+from repro.models.transformer import lm
+
+bundle = get_bundle("llama3-8b")
+# reduced cfg with dims divisible by the 2x4 mesh world (8)
+cfg = dataclasses.replace(bundle.reduced, sharding_mode="fsdp",
+                          d_model=64, d_ff=128, vocab=256)
+mesh = jax.make_mesh((2, 4), ("data", "model"),
+                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+with jax.set_mesh(mesh):
+    params = bundle.init(jax.random.PRNGKey(0), cfg, {})
+    specs = lm_param_specs(params, mode="fsdp")
+    psh = jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                       is_leaf=lambda x: isinstance(x, P))
+    params_sh = jax.tree.map(jax.device_put, params, psh)
+    toks = jnp.asarray(np.random.default_rng(0).integers(0, cfg.vocab,
+                                                         (8, 16)), jnp.int32)
+    logits_sh, _ = jax.jit(lambda p, t: lm.forward(p, t, cfg))(params_sh, toks)
+
+# reference: unsharded tp-mode forward with identical params
+cfg_ref = dataclasses.replace(cfg, sharding_mode="tp")
+logits_ref, _ = lm.forward(params, toks, cfg_ref)
+np.testing.assert_allclose(np.asarray(logits_sh, np.float32),
+                           np.asarray(logits_ref, np.float32),
+                           rtol=2e-2, atol=2e-2)
+print("OK fsdp")
+"""
+
+
+def test_fsdp_forward_matches_unsharded():
+    out = run_with_devices(FSDP_CODE, n_devices=8)
+    assert "OK fsdp" in out
+
+
+GIN_SHARD_CODE = r"""
+import dataclasses
+import numpy as np, jax, jax.numpy as jnp
+from repro.configs.base import GNNConfig
+from repro.models.gnn import gin
+
+rng = np.random.default_rng(0)
+n, e, f = 512, 2048, 8
+feats = jnp.asarray(rng.standard_normal((n, f)), jnp.float32)
+edges = jnp.asarray(rng.integers(0, n, (e, 2)), jnp.int32)
+cfg_ps = GNNConfig(name="t", n_layers=3, d_hidden=16, n_classes=4)
+cfg_sh = dataclasses.replace(cfg_ps, aggregate_mode="shard")
+params = gin.init_params(jax.random.PRNGKey(0), cfg_ps, f, 4)
+
+mesh = jax.make_mesh((2, 4), ("data", "model"),
+                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+with jax.set_mesh(mesh):
+    h_ps = jax.jit(lambda p: gin.forward(p, feats, edges, cfg_ps))(params)
+    h_sh = jax.jit(lambda p: gin.forward(p, feats, edges, cfg_sh))(params)
+np.testing.assert_allclose(np.asarray(h_ps), np.asarray(h_sh),
+                           rtol=1e-4, atol=1e-4)
+print("OK gin shard")
+"""
+
+
+def test_gin_sharded_aggregation_matches_psum():
+    out = run_with_devices(GIN_SHARD_CODE, n_devices=8)
+    assert "OK gin shard" in out

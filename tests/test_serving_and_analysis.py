@@ -1,0 +1,137 @@
+"""Serving engines, data generators, and the HLO/roofline analysis
+utilities."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.hlo_analysis import (collective_bytes, hlo_dot_flops,
+                                            _shape_bytes)
+from repro.distributed.roofline import Roofline, model_flops_train
+
+
+# ------------------------------------------------------------- serving
+
+def test_seismic_server_batching():
+    from repro.core import SeismicConfig, SearchParams, build_index
+    from repro.data import SyntheticSparseConfig, make_collection
+    from repro.serve.engine import SeismicServer
+    from repro.sparse.ops import PaddedSparse
+    cfg = SyntheticSparseConfig(dim=512, n_docs=1024, n_queries=70,
+                                doc_nnz=32, query_nnz=12, n_topics=16,
+                                topic_coords=96)
+    docs_np, queries_np, _ = make_collection(cfg)
+    docs = PaddedSparse(jnp.asarray(docs_np.coords),
+                        jnp.asarray(docs_np.vals), docs_np.dim)
+    queries = PaddedSparse(jnp.asarray(queries_np.coords),
+                           jnp.asarray(queries_np.vals), queries_np.dim)
+    idx = build_index(docs, SeismicConfig(lam=96, beta=8, alpha=0.4,
+                                          block_cap=24, summary_nnz=24),
+                      list_chunk=16)
+    server = SeismicServer(idx, SearchParams(k=5, cut=8, block_budget=16),
+                           max_batch=32)   # 70 queries -> 3 padded batches
+    res = server.search(queries)
+    assert res.ids.shape == (70, 5)
+    assert res.scores.shape == (70, 5)
+    assert (res.docs_evaluated > 0).all()
+    # padding queries must not leak into results
+    assert res.ids.max() < docs.n
+
+
+def test_lm_decoder_generates():
+    from repro.models.api import get_bundle
+    from repro.serve.engine import LMDecoder
+    bundle = get_bundle("phi3-medium-14b")
+    cfg = bundle.reduced
+    params = bundle.init(jax.random.PRNGKey(0), cfg, {})
+    dec = LMDecoder(params, cfg, batch=2, max_seq=32)
+    prompts = np.random.default_rng(0).integers(
+        0, cfg.vocab, (2, 4)).astype(np.int32)
+    out = dec.generate(prompts, n_steps=6, greedy=True)
+    assert out.shape == (2, 10)
+    np.testing.assert_array_equal(out[:, :4], prompts)
+
+
+# ---------------------------------------------------------- generators
+
+def test_recsys_log_stream_shapes():
+    from repro.data.pipeline import recsys_log_stream
+    from repro.models.api import get_bundle
+    for arch in ("fm", "sasrec", "bst"):
+        cfg = get_bundle(arch).reduced
+        gen = recsys_log_stream(cfg, batch=16)()
+        batch = next(gen)
+        for k, v in batch.items():
+            assert v.shape[0] == 16, (arch, k)
+
+
+def test_random_graph_homophily():
+    from repro.data.pipeline import random_graph
+    g = random_graph(400, 4000, d_feat=12, n_classes=4, seed=0)
+    labels, edges = g["labels"], g["edges"]
+    src_l, dst_l = labels[edges[:, 0]], labels[edges[:, 1]]
+    valid = (src_l >= 0) & (dst_l >= 0)
+    same = (src_l == dst_l)[valid].mean()
+    assert same > 0.5   # homophilous by construction (~0.7)
+
+
+# ------------------------------------------------------------ analysis
+
+def test_shape_bytes():
+    assert _shape_bytes("f32[16,8]") == 512
+    assert _shape_bytes("bf16[4]{0}") == 8
+    assert _shape_bytes("(f32[2,2], u8[3])") == 19
+    assert _shape_bytes("pred[]") == 1
+
+
+def test_collective_bytes_parser():
+    hlo = """
+ENTRY %main {
+  %ar = f32[128]{0} all-reduce(%x), replica_groups={}
+  %ag.1 = bf16[64,2]{1,0} all-gather(%y), dimensions={0}
+  %rs = (f32[8]{0}, f32[8]{0}) reduce-scatter(%a, %b), dimensions={0}
+  %done = f32[128]{0} all-reduce-done(%start)
+}
+"""
+    out = collective_bytes(hlo)
+    assert out["all-reduce"] == 512
+    assert out["all-gather"] == 256
+    assert out["reduce-scatter"] == 64
+    assert out["total"] == 832
+    assert out["total_wire"] == 832 + 512   # AR weighted 2x on the wire
+
+
+def test_hlo_dot_flops_counter():
+    hlo = """
+%fused_computation {
+  %p0 = f32[16,32]{1,0} parameter(0)
+  %p1 = f32[32,8]{1,0} parameter(1)
+  %dot.1 = f32[16,8]{1,0} dot(%p0, %p1), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+}
+ENTRY %main {
+  %a = bf16[4,8,16]{2,1,0} parameter(0)
+  %b = bf16[4,16,2]{2,1,0} parameter(1)
+  %dot.2 = bf16[4,8,2]{2,1,0} dot(%a, %b), lhs_batch_dims={0}, lhs_contracting_dims={2}, rhs_batch_dims={0}, rhs_contracting_dims={1}
+}
+"""
+    out = hlo_dot_flops(hlo)
+    assert out["n_dots"] == 2
+    # dot.1: 2*16*8*32 = 8192 ; dot.2: 2*(4*8*2)*16 = 2048
+    assert out["dot_flops"] == 8192 + 2048
+    assert out["n_while"] == 0
+
+
+def test_roofline_terms():
+    r = Roofline(flops=197e12, hbm_bytes=819e9, coll_bytes=25e9)
+    assert r.t_compute == pytest.approx(1.0)
+    assert r.t_memory == pytest.approx(1.0)
+    assert r.t_collective == pytest.approx(0.5)
+    assert r.bottleneck in ("compute", "memory")
+    assert r.compute_fraction() == pytest.approx(1.0)
+    assert model_flops_train(8e9, 1e6) == pytest.approx(4.8e16)
+
+
+def test_roofline_bottleneck_pick():
+    r = Roofline(flops=1e12, hbm_bytes=1e9, coll_bytes=500e9)
+    assert r.bottleneck == "collective"
+    assert r.compute_fraction() < 0.01

@@ -1,0 +1,122 @@
+"""Unit + property tests for the padded-sparse substrate."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.sparse.ops import (PaddedSparse, alpha_mass_subvector, densify,
+                              densify_one, inner_product_padded,
+                              l1_mass_fraction, sparsify, top_cut)
+from repro.sparse.quant import dequantize_u8, quantize_u8
+
+
+def _rand_sparse(rng, n, nnz, dim):
+    coords = np.stack([rng.choice(dim, nnz, replace=False) for _ in range(n)])
+    vals = rng.lognormal(0, 1, (n, nnz)).astype(np.float32)
+    return PaddedSparse(jnp.asarray(coords.astype(np.int32)),
+                        jnp.asarray(vals), dim)
+
+
+def test_densify_sparsify_roundtrip():
+    rng = np.random.default_rng(0)
+    ps = _rand_sparse(rng, 8, 16, 128)
+    dense = densify(ps)
+    ps2 = sparsify(dense, 16)
+    np.testing.assert_allclose(np.asarray(densify(ps2)), np.asarray(dense),
+                               rtol=1e-6)
+
+
+def test_padding_contributes_zero():
+    coords = jnp.array([[3, 0, 0], [5, 7, 0]], jnp.int32)
+    vals = jnp.array([[2.0, 0.0, 0.0], [1.0, 3.0, 0.0]])
+    ps = PaddedSparse(coords, vals, 10)
+    q = jnp.arange(10, dtype=jnp.float32)
+    out = inner_product_padded(q, ps.coords, ps.vals)
+    np.testing.assert_allclose(np.asarray(out), [6.0, 26.0])
+
+
+def test_alpha_mass_definition():
+    # Definition 3.1 on a known vector
+    coords = jnp.arange(5, dtype=jnp.int32)
+    vals = jnp.array([5.0, 3.0, 1.0, 0.5, 0.5])  # L1 = 10
+    sc, sv = alpha_mass_subvector(coords, vals, alpha=0.8, out_nnz=5)
+    # cumsums: 5, 8, 9 -> keep 5,3 (<=8) ; 9 > 8 stops
+    kept = sorted(float(v) for v in np.asarray(sv) if v > 0)
+    assert kept == [3.0, 5.0]
+
+
+def test_alpha_mass_never_empty():
+    coords = jnp.arange(3, dtype=jnp.int32)
+    vals = jnp.array([4.0, 3.0, 2.0])
+    sc, sv = alpha_mass_subvector(coords, vals, alpha=0.01, out_nnz=3)
+    assert (np.asarray(sv) > 0).sum() == 1
+    assert float(sv[0]) == 4.0
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(1, 30), st.floats(0.1, 1.0), st.integers(0, 2 ** 31 - 1))
+def test_alpha_mass_property(nnz, alpha, seed):
+    """alpha-mass subvector keeps <= alpha * L1 (or exactly one entry)
+    and always keeps the largest entries first."""
+    rng = np.random.default_rng(seed)
+    vals = jnp.asarray(rng.lognormal(0, 1, nnz).astype(np.float32))
+    coords = jnp.arange(nnz, dtype=jnp.int32)
+    sc, sv = alpha_mass_subvector(coords, vals, alpha, max(nnz, 1))
+    kept = np.asarray(sv)
+    mass = kept.sum()
+    total = float(np.abs(np.asarray(vals)).sum())
+    n_kept = (kept > 0).sum()
+    assert n_kept >= 1
+    if n_kept > 1:
+        assert mass <= alpha * total + 1e-4
+    # kept set == the n_kept largest values
+    top = np.sort(np.asarray(vals))[::-1][:n_kept]
+    np.testing.assert_allclose(np.sort(kept[kept > 0])[::-1], top, rtol=1e-6)
+
+
+def test_top_cut():
+    coords = jnp.array([7, 3, 9, 1], jnp.int32)
+    vals = jnp.array([0.5, 2.0, 1.0, 0.1])
+    c, v = top_cut(coords, vals, 2)
+    assert set(np.asarray(c).tolist()) == {3, 9}
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(2, 64), st.integers(0, 2 ** 31 - 1))
+def test_quant_roundtrip_property(nnz, seed):
+    """u8 quantization reconstructs within scale/2; padding -> exact 0."""
+    rng = np.random.default_rng(seed)
+    vals = rng.lognormal(0, 1, nnz).astype(np.float32)
+    vals[rng.random(nnz) < 0.3] = 0.0  # padding
+    v = jnp.asarray(vals)[None, :]
+    q, scale, zero = quantize_u8(v)
+    rec = np.asarray(dequantize_u8(q, scale, zero))[0]
+    err_tol = float(scale[0]) * 0.51 + 1e-6
+    valid = vals > 0
+    if valid.any():
+        assert np.abs(rec[valid] - vals[valid]).max() <= err_tol
+    assert (rec[~valid] == 0).all()
+
+
+def test_quant_summary_ip_error_small():
+    """Quantized summary IP stays within ~1% of the float IP (the §7.3
+    'quantization does not hinder effectiveness' claim)."""
+    rng = np.random.default_rng(3)
+    vals = jnp.asarray(rng.lognormal(0, 1, (16, 64)).astype(np.float32))
+    q8, scale, zero = quantize_u8(vals)
+    rec = dequantize_u8(q8, scale, zero)
+    qv = jnp.asarray(rng.lognormal(0, 1, (64,)).astype(np.float32))
+    ip_f = np.asarray(vals @ qv)
+    ip_q = np.asarray(rec @ qv)
+    rel = np.abs(ip_q - ip_f) / np.abs(ip_f)
+    assert rel.max() < 0.01
+
+
+def test_l1_mass_fraction_monotone():
+    rng = np.random.default_rng(0)
+    vals = rng.lognormal(0, 1.2, (32, 100))
+    f10 = l1_mass_fraction(vals, 10)
+    f50 = l1_mass_fraction(vals, 50)
+    assert (f50 >= f10 - 1e-9).all()
+    assert (l1_mass_fraction(vals, 100) > 0.999).all()

@@ -1,0 +1,106 @@
+"""Optimizer, schedules, data pipeline, and training-loop behaviour."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.train import AdamWConfig, adamw_update, init_opt_state, make_train_step
+from repro.train.optimizer import global_norm, schedule
+
+
+def _quad_loss(params, batch):
+    return jnp.sum((params["w"] - batch["target"]) ** 2)
+
+
+def test_adamw_converges_quadratic():
+    params = dict(w=jnp.ones((8,)) * 5.0)
+    opt = init_opt_state(params)
+    cfg = AdamWConfig(lr=0.2, weight_decay=0.0, warmup_steps=0,
+                      total_steps=200, clip_norm=100.0)
+    batch = dict(target=jnp.zeros((8,)))
+    step = jax.jit(make_train_step(_quad_loss, cfg))
+    for _ in range(150):
+        params, opt, m = step(params, opt, batch)
+    assert float(jnp.abs(params["w"]).max()) < 0.1
+
+
+def test_clipping_bounds_update():
+    params = dict(w=jnp.zeros((4,)))
+    opt = init_opt_state(params)
+    cfg = AdamWConfig(lr=1.0, clip_norm=1e-3, warmup_steps=0, total_steps=10)
+    grads = dict(w=jnp.ones((4,)) * 1e6)
+    p2, opt2, m = adamw_update(grads, opt, params, cfg)
+    assert float(m["grad_norm"]) > 1e5
+    assert float(jnp.abs(p2["w"]).max()) < 2.0  # clip tamed the step
+
+
+def test_schedule_shape():
+    cfg = AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100,
+                      min_lr_frac=0.1)
+    lrs = [float(schedule(cfg, jnp.asarray(s))) for s in range(0, 101, 5)]
+    assert lrs[0] == 0.0
+    assert abs(lrs[2] - 1.0) < 0.01          # end of warmup
+    assert lrs[-1] == pytest.approx(0.1, rel=0.05)
+    assert all(b <= a + 1e-6 for a, b in zip(lrs[2:], lrs[3:]))  # decay
+
+
+def test_microbatched_grad_accum_matches_full():
+    rng = np.random.default_rng(0)
+    w = jnp.asarray(rng.standard_normal((6, 3)), jnp.float32)
+    x = jnp.asarray(rng.standard_normal((8, 6)), jnp.float32)
+    y = jnp.asarray(rng.standard_normal((8, 3)), jnp.float32)
+
+    def loss(params, batch):
+        return jnp.mean((batch["x"] @ params["w"] - batch["y"]) ** 2)
+
+    cfg = AdamWConfig(lr=1e-2, warmup_steps=0, total_steps=10)
+    s1 = make_train_step(loss, cfg, microbatches=1)
+    s4 = make_train_step(loss, cfg, microbatches=4)
+    p1, _, m1 = jax.jit(s1)(dict(w=w), init_opt_state(dict(w=w)),
+                            dict(x=x, y=y))
+    p4, _, m4 = jax.jit(s4)(dict(w=w), init_opt_state(dict(w=w)),
+                            dict(x=x, y=y))
+    np.testing.assert_allclose(np.asarray(p1["w"]), np.asarray(p4["w"]),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(float(m1["loss"]), float(m4["loss"]),
+                               rtol=1e-5)
+
+
+def test_lm_loss_descends_on_structured_stream():
+    """End-to-end: tiny llama on the synthetic n-gram stream must beat
+    its initial loss within a few dozen steps."""
+    from repro.data.pipeline import PrefetchLoader, lm_token_stream
+    from repro.models.api import get_bundle
+    bundle = get_bundle("llama3-8b")
+    cfg = bundle.reduced
+    dims = dict(global_batch=8, seq_len=32)
+    params = bundle.init(jax.random.PRNGKey(0), cfg, dims)
+    loss_fn = bundle.step(cfg, dims, "train")
+    step = jax.jit(make_train_step(loss_fn, AdamWConfig(
+        lr=3e-3, warmup_steps=5, total_steps=100)))
+    opt = init_opt_state(params)
+    loader = PrefetchLoader(lm_token_stream(cfg.vocab, 8, 32), prefetch=2)
+    losses = []
+    for i, batch in enumerate(loader):
+        batch = {k: jnp.asarray(v) for k, v in batch.items()}
+        params, opt, m = step(params, opt, batch)
+        losses.append(float(m["loss"]))
+        if i >= 40:
+            break
+    loader.close()
+    assert np.mean(losses[-5:]) < np.mean(losses[:3]) - 0.3, losses[:3] + losses[-5:]
+
+
+def test_prefetch_loader_order_and_close():
+    from repro.data.pipeline import PrefetchLoader
+
+    def make():
+        return iter(range(10))
+
+    out = list(PrefetchLoader(make, prefetch=3))
+    assert out == list(range(10))
+
+
+def test_global_norm():
+    t = dict(a=jnp.asarray([3.0]), b=jnp.asarray([4.0]))
+    assert float(global_norm(t)) == pytest.approx(5.0)
