@@ -1,0 +1,17 @@
+PY ?= python
+
+.PHONY: test test-fast bench dev
+
+dev:
+	$(PY) -m pip install -r requirements-dev.txt
+
+# tier-1 verification command (ROADMAP.md)
+test:
+	PYTHONPATH=src $(PY) -m pytest -x -q
+
+test-fast:
+	PYTHONPATH=src $(PY) -m pytest -q tests/test_retrieval.py \
+		tests/test_seismic_core.py tests/test_sparse_ops.py
+
+bench:
+	PYTHONPATH=src $(PY) -m benchmarks.run

@@ -1,0 +1,89 @@
+"""Per-stage throughput of the staged retrieval pipeline
+(repro.retrieval): prep -> router -> selector -> scorer -> merge.
+
+Each stage is jitted standalone on materialized inputs of the previous
+stage, so the numbers isolate where a query batch spends its time.
+Derived metrics:
+
+  router   routed_blocks_s  — summary inner products / second
+                              (Q * cut * n_blocks per batch)
+  scorer   scored_docs_s    — exact forward-index scorings / second
+                              (deduped candidates, sentinels excluded)
+  e2e      qps + recall@10  — whole-pipeline sanity per policy
+
+Run all three registry policies (budget / adaptive / global_threshold);
+the adaptive selector's time includes its stage-1 scoring bootstrap.
+
+    PYTHONPATH=src python -m benchmarks.pipeline_throughput
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks.common import (built_index, collection, mean_recall, row,
+                               timeit_us)
+from repro.retrieval import (SearchParams, merge_topk, prep_queries,
+                             route_batch, score_selection, search_pipeline,
+                             get_selector)
+
+POLICIES = ("budget", "adaptive", "global_threshold")
+
+
+def _stage_fns(idx, p):
+    """Standalone-jitted stage functions (index and params closed over)."""
+    prep = jax.jit(lambda c, v: prep_queries(c, v, idx.dim, p.cut))
+    route = jax.jit(lambda qd, ls: route_batch(idx, qd, ls, p.use_kernel))
+    select = jax.jit(lambda b: get_selector(p.policy)(idx, b, p))
+    score = jax.jit(lambda b, s: score_selection(idx, b, s, p.use_kernel))
+    merge = jax.jit(lambda c, s: merge_topk(c, s, p.k, idx.n_docs))
+    return prep, route, select, score, merge
+
+
+def run():
+    _, queries, _, _, eids = collection()
+    idx, _ = built_index()
+    qn = queries.n
+    nb = idx.config.n_blocks
+
+    for policy in POLICIES:
+        p = SearchParams(k=10, cut=8, block_budget=32, policy=policy)
+        prep, route, select, score, merge = _stage_fns(idx, p)
+
+        # materialize stage inputs once
+        q_dense, lists, _ = jax.block_until_ready(
+            prep(queries.coords, queries.vals))
+        batch = jax.block_until_ready(route(q_dense, lists))
+        sel = jax.block_until_ready(select(batch))
+        cand, scores = jax.block_until_ready(score(batch, sel))
+        _, ids, ev = jax.block_until_ready(merge(cand, scores))
+
+        us_prep = timeit_us(prep, queries.coords, queries.vals)
+        us_route = timeit_us(route, q_dense, lists)
+        us_select = timeit_us(select, batch)
+        us_score = timeit_us(score, batch, sel)
+        us_merge = timeit_us(merge, cand, scores)
+
+        routed = qn * p.cut * nb
+        scored = int(np.asarray(ev).sum())
+        yield row(f"pipe_prep_{policy}", us_prep, q=qn)
+        yield row(f"pipe_router_{policy}", us_route,
+                  routed_blocks_s=f"{routed / (us_route * 1e-6):.3g}")
+        yield row(f"pipe_selector_{policy}", us_select,
+                  blocks=p.block_budget)
+        yield row(f"pipe_scorer_{policy}", us_score,
+                  scored_docs_s=f"{scored / (us_score * 1e-6):.3g}")
+        yield row(f"pipe_merge_{policy}", us_merge, k=p.k)
+
+        us_e2e = timeit_us(lambda: search_pipeline(idx, queries, p))
+        _, ids, ev = search_pipeline(idx, queries, p)
+        yield row(f"pipe_e2e_{policy}", us_e2e,
+                  qps=f"{qn / (us_e2e * 1e-6):.3g}",
+                  recall10=f"{mean_recall(np.asarray(ids), eids):.3f}",
+                  docs_eval=int(np.asarray(ev).mean()))
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    for line in run():
+        print(line)

@@ -10,7 +10,10 @@ collective volume is O(k * n_doc_shards) — independent of corpus size.
 
 The stacked index (leading axis = doc shard) is a regular pytree, so
 ``jax.jit`` + ``shard_map`` drive the whole thing; the same function is
-what the multi-pod dry-run lowers for the retrieval cells.
+what the multi-pod dry-run lowers for the retrieval cells. Each
+shard's local search is the shared batch-first staged pipeline
+(``repro.retrieval``) — the exact code path of local and served
+search.
 """
 from __future__ import annotations
 
@@ -19,8 +22,8 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.core.build import build_index
-from repro.core.query import SearchParams, _search_one
 from repro.core.types import SeismicConfig
+from repro.retrieval import SearchParams, run_pipeline
 from repro.sparse.ops import PaddedSparse
 
 
@@ -65,11 +68,9 @@ def make_distributed_search(mesh, p: SearchParams,
         local = jax.tree.map(lambda x: x[0], index_shard)
         per_shard = local.fwd.coords.shape[0]
 
-        def one(c, v):
-            s, ids, _ = _search_one(local, c, v, p)
-            return s, ids
-
-        scores, ids = jax.vmap(one)(q_coords, q_vals)          # [Ql, k]
+        # the shared batch-first pipeline runs on the whole local
+        # query batch at once (same code as local + served search)
+        scores, ids, _ = run_pipeline(local, q_coords, q_vals, p)  # [Ql, k]
 
         # globalize ids with the shard offset (row-major over doc axes)
         shard_id = jax.lax.axis_index(doc_axes[0])

@@ -1,166 +1,30 @@
-"""Seismic query processing (Algorithm 2), batched for TPU.
+"""Seismic query processing — compatibility shim.
 
-The paper's coordinate-at-a-time heap traversal is re-scheduled as a
-two-phase batched computation (the §6 "Routing ... in one go" design):
-
-  phase R (routing)  score ALL summaries of the ``cut`` probed lists
-                     with one quantized gather-dot contraction
-                     -> [cut, n_blocks] block scores
-  phase S (scoring)  select blocks, gather their docs, dedupe, compute
-                     exact inner products against the forward index,
-                     one final top-k
-
-Two block-selection policies:
-
-  * ``budget``   — top ``block_budget`` blocks by summary score
-                   (pure IVF-style routing, one pass)
-  * ``adaptive`` — two-stage emulation of Alg. 2's heap_factor: stage 1
-                   fully scores the top ``probe_budget`` blocks to
-                   bootstrap a k-th-best estimate theta, stage 2 keeps
-                   only blocks with summary >= theta / heap_factor
-                   (capped at block_budget). This recovers the paper's
-                   dynamic pruning without a serial heap.
-
-Everything is vmapped over the query batch.
+The execution path lives in :mod:`repro.retrieval`: an explicit staged
+batch-first pipeline (prep -> router -> selector -> scorer -> merge)
+where every stage operates on whole ``[Q, ...]`` batches and the hot
+phases R and S are single batched Pallas kernel launches. Local,
+served (``repro.serve.engine.SeismicServer``), and distributed
+(``repro.core.distributed``) search all route through that one
+pipeline; this module re-exports the historical entry points so
+existing imports (``from repro.core.query import SearchParams,
+search_batch``) keep working.
 """
 from __future__ import annotations
 
-import dataclasses
-from functools import partial
-
-import jax
-import jax.numpy as jnp
-
-from repro.core.types import SeismicIndex
-from repro.sparse.ops import PaddedSparse, densify_one, top_cut
-from repro.sparse.quant import dequantize_u8
-
-NEG = -jnp.inf
+from repro.retrieval.params import SearchParams
+from repro.retrieval.pipeline import run_pipeline, search_pipeline
+from repro.retrieval.router import NEG
+from repro.sparse.ops import PaddedSparse
 
 
-@dataclasses.dataclass(frozen=True)
-class SearchParams:
-    """Query-time hyper-parameters (paper's cut, heap_factor)."""
-
-    k: int = 10
-    cut: int = 8                  # probed query coordinates
-    block_budget: int = 32        # max fully-evaluated blocks
-    heap_factor: float = 0.9      # summary over-estimate correction
-    policy: str = "adaptive"      # "budget" | "adaptive"
-    probe_budget: int = 8         # stage-1 blocks for the adaptive policy
-    use_kernel: bool = False      # Pallas gather_dot/summary_dot path
-
-
-def _score_fwd(index: SeismicIndex, q_dense: jax.Array, cand: jax.Array,
-               use_kernel: bool) -> jax.Array:
-    """<q, doc> for candidate ids (sentinel-masked to -inf). With a
-    compact (fwd_quant) index the per-doc u8 dequant fuses into the
-    gather-dot; scores stay 'exact' up to ~0.4% value quantization."""
-    c = jnp.take(index.fwd.coords, cand, axis=0, mode="clip").astype(jnp.int32)
-    v = jnp.take(index.fwd.vals, cand, axis=0, mode="clip")
-    if index.fwd_scale is not None:
-        from repro.sparse.quant import dequantize_u8
-        scale = jnp.take(index.fwd_scale, cand, mode="clip")
-        zero = jnp.take(index.fwd_zero, cand, mode="clip")
-        v = dequantize_u8(v, scale, zero)
-    else:
-        v = v.astype(jnp.float32)
-    if use_kernel:
-        from repro.kernels.gather_dot.ops import gather_dot
-        scores = gather_dot(q_dense, c, v)
-    else:
-        scores = (q_dense[c] * v).sum(axis=-1)
-    return jnp.where(cand < index.n_docs, scores, NEG)
-
-
-def _route(index: SeismicIndex, q_dense: jax.Array, lists: jax.Array,
-           use_kernel: bool) -> jax.Array:
-    """Summary inner products for all blocks of the probed lists
-    -> [cut, n_blocks]; unused blocks are -inf."""
-    sc = index.sum_coords[lists]            # [cut, nb, S]
-    sq = index.sum_q[lists]                 # [cut, nb, S] u8
-    scale = index.sum_scale[lists]
-    zero = index.sum_zero[lists]
-    if use_kernel:
-        from repro.kernels.summary_dot.ops import summary_dot
-        r = summary_dot(q_dense, sc, sq, scale, zero)
-    else:
-        sv = dequantize_u8(sq, scale, zero)
-        r = (q_dense[sc] * sv).sum(axis=-1)
-    alive = index.block_len[lists] > 0
-    return jnp.where(alive, r, NEG)
-
-
-def _gather_block_docs(index: SeismicIndex, lists: jax.Array,
-                       flat_blocks: jax.Array) -> jax.Array:
-    """Doc ids of selected (list, block) pairs -> [n_sel, block_cap]."""
-    nb = index.config.n_blocks
-    li = flat_blocks // nb                  # index into `lists`
-    bi = flat_blocks % nb
-    coord = lists[li]
-    off = index.block_off[coord, bi]        # [n_sel]
-    ln = index.block_len[coord, bi]
-    ar = jnp.arange(index.config.block_cap)
-    pos = off[:, None] + ar[None, :]
-    docs = jnp.take_along_axis(index.list_docs[coord],
-                               jnp.clip(pos, 0, index.config.lam - 1), axis=1)
-    return jnp.where(ar[None, :] < ln[:, None], docs, index.n_docs)
-
-
-def _dedupe(cand: jax.Array, n_docs: int) -> jax.Array:
-    """Sort candidate ids and mask duplicates to the sentinel."""
-    s = jnp.sort(cand)
-    dup = jnp.concatenate([jnp.zeros(1, bool), s[1:] == s[:-1]])
-    return jnp.where(dup, n_docs, s)
-
-
-def _search_one(index: SeismicIndex, q_coords: jax.Array, q_vals: jax.Array,
-                p: SearchParams):
-    q_dense = densify_one(q_coords, q_vals.astype(jnp.float32), index.dim)
-    qc, qv = top_cut(q_coords, q_vals.astype(jnp.float32), p.cut)
-    # probing coord 0 repeatedly for padded queries is harmless: its
-    # routing scores are finite but the same blocks dedupe later.
-    r = _route(index, q_dense, qc, p.use_kernel)          # [cut, nb]
-    r_flat = r.reshape(-1)
-
-    if p.policy == "adaptive":
-        # ---- stage 1: bootstrap theta from the top probe_budget blocks
-        r1, b1 = jax.lax.top_k(r_flat, p.probe_budget)
-        cand1 = _gather_block_docs(index, qc, b1).reshape(-1)
-        cand1 = _dedupe(cand1, index.n_docs)
-        s1 = _score_fwd(index, q_dense, cand1, p.use_kernel)
-        theta = jax.lax.top_k(s1, p.k)[0][-1]
-        theta = jnp.where(jnp.isfinite(theta), theta, NEG)
-        # ---- stage 2: Alg.2 line 6 -> keep blocks w/ r >= theta/heap_factor
-        r_flat2 = r_flat.at[b1].set(NEG)  # already evaluated
-        passing = r_flat2 >= theta / p.heap_factor
-        r_flat2 = jnp.where(passing, r_flat2, NEG)
-        n2 = p.block_budget - p.probe_budget
-        r2, b2 = jax.lax.top_k(r_flat2, n2)
-        cand2 = _gather_block_docs(index, qc, b2)
-        cand2 = jnp.where(jnp.isfinite(r2)[:, None], cand2,
-                          index.n_docs).reshape(-1)
-        cand = jnp.concatenate([cand1, _dedupe(cand2, index.n_docs)])
-        cand = _dedupe(cand, index.n_docs)
-        scores = _score_fwd(index, q_dense, cand, p.use_kernel)
-    else:
-        _, bsel = jax.lax.top_k(r_flat, p.block_budget)
-        cand = _gather_block_docs(index, qc, bsel).reshape(-1)
-        cand = _dedupe(cand, index.n_docs)
-        scores = _score_fwd(index, q_dense, cand, p.use_kernel)
-
-    top_s, pos = jax.lax.top_k(scores, p.k)
-    top_ids = cand[pos]
-    top_ids = jnp.where(jnp.isfinite(top_s), top_ids, -1)
-    docs_evaluated = (cand < index.n_docs).sum()
-    return top_s, top_ids.astype(jnp.int32), docs_evaluated
-
-
-@partial(jax.jit, static_argnames=("p",))
-def search_batch(index: SeismicIndex, queries: PaddedSparse, p: SearchParams):
-    """Batched Seismic search.
+def search_batch(index, queries: PaddedSparse, p: SearchParams):
+    """Batched Seismic search (the shared retrieval pipeline).
 
     Returns (scores [Q,k], ids [Q,k] with -1 padding, docs_evaluated [Q]).
     """
-    return jax.vmap(lambda c, v: _search_one(index, c, v, p))(
-        queries.coords, queries.vals)
+    return search_pipeline(index, queries, p)
+
+
+__all__ = ["SearchParams", "search_batch", "search_pipeline",
+           "run_pipeline", "NEG"]

@@ -1,3 +1,3 @@
-from repro.kernels.gather_dot.ops import gather_dot
+from repro.kernels.gather_dot.ops import gather_dot, gather_dot_batch
 
-__all__ = ["gather_dot"]
+__all__ = ["gather_dot", "gather_dot_batch"]

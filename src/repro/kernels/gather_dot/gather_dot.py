@@ -1,27 +1,33 @@
-"""Pallas TPU kernel: batched sparse·dense inner products.
+"""Pallas TPU kernel: natively query-batched sparse·dense inner
+products (Seismic phase S, Alg. 2 line 9).
 
-The forward-index scoring hot-spot of Seismic (Alg. 2 line 9): for a
-tile of candidate documents in padded-CSR layout, compute
+For a whole query batch and its per-query candidate tiles in padded-CSR
+layout, computes
 
-    scores[n] = sum_j q_dense[coords[n, j]] * vals[n, j]
+    scores[q, n] = sum_j q_dense[q, coords[q, n, j]] * vals[q, n, j]
 
-This is the op the paper engineers around x86 cache misses with
-prefetch intrinsics (§5.4); the TPU analog is streaming candidate
-tiles HBM->VMEM while the dense query stays VMEM-resident.
+in ONE kernel launch. This is the op the paper engineers around x86
+cache misses with prefetch intrinsics (§5.4); the TPU analog streams
+candidate tiles HBM->VMEM while the dense query tile stays
+VMEM-resident across the inner grid axis.
 
-Tiling:
-  grid  = (ceil(N / tile_n),)
-  coords/vals blocks: [tile_n, nnz]   (one VMEM tile per grid step)
-  q: full [d] in VMEM (d*4B <= ~1 MiB for a 30522-term SPLADE
-     vocabulary after fp32; vocab chunking in ops.py keeps larger
-     vocabularies under the cap)
-  out block: [tile_n]
+When the forward index is compact (u8 values, ``fwd_quant=True``) the
+per-doc affine dequantization ((level-1)*scale + zero, level 0 = pad)
+fuses into the multiply — candidate values cross HBM as one byte each
+and are never materialized as floats.
 
-The per-lane dynamic gather ``q[coords_tile]`` lowers through the TPU
-gather/scatter unit on current Mosaic; the documented fallback for
-lowerings that reject it is a one-hot contraction per 128-wide
-coordinate chunk (same math, MXU-friendly). Kernel semantics are
-validated in interpret mode against ref.py.
+Tiling (ops.py pads Q to tile_q and N to tile_n — the row width nnz
+and vocab d pass through as-is, so non-interpret Mosaic lowering
+expects lane-aligned nnz/d; off-TPU coverage is interpret-mode only):
+  grid = (Q / tile_q, N / tile_n)   — queries x candidate tiles
+  q block       [tile_q, d]         VMEM-resident dense query tile
+  coords/vals   [tile_q, tile_n, nnz]
+  scale/zero    [tile_q, tile_n]    (quantized variant only)
+  out           [tile_q, tile_n]
+
+The per-row dynamic gather lowers through the TPU gather/scatter unit
+on current Mosaic; interpret mode (auto-selected off-TPU by ops.py)
+runs the same program on CPU for the ref.py parity tests.
 """
 from __future__ import annotations
 
@@ -32,35 +38,72 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
+def _gather(q, coords):
+    tq, tn, nnz = coords.shape
+    return jnp.take_along_axis(
+        q, coords.reshape(tq, tn * nnz), axis=1).reshape(tq, tn, nnz)
+
+
 def _gather_dot_kernel(q_ref, coords_ref, vals_ref, out_ref):
-    q = q_ref[...]                      # [d] resident
-    coords = coords_ref[...]            # [tile_n, nnz] int32
-    vals = vals_ref[...]                # [tile_n, nnz]
-    gathered = jnp.take(q, coords, axis=0)      # per-lane gather
-    out_ref[...] = (gathered * vals.astype(q.dtype)).sum(axis=-1)
+    q = q_ref[...]                              # [tq, d]
+    coords = coords_ref[...]                    # [tq, tn, nnz]
+    vals = vals_ref[...].astype(q.dtype)
+    out_ref[...] = (_gather(q, coords) * vals).sum(axis=-1)
 
 
-@functools.partial(jax.jit, static_argnames=("tile_n", "interpret"))
+def _gather_dot_quant_kernel(q_ref, coords_ref, vals_ref, scale_ref,
+                             zero_ref, out_ref):
+    q = q_ref[...]                              # [tq, d]
+    coords = coords_ref[...]                    # [tq, tn, nnz]
+    u8 = vals_ref[...].astype(q.dtype)          # [tq, tn, nnz]
+    scale = scale_ref[...].astype(q.dtype)      # [tq, tn]
+    zero = zero_ref[...].astype(q.dtype)
+    deq = (u8 - 1.0) * scale[..., None] + zero[..., None]
+    deq = jnp.where(u8 > 0, deq, 0.0)           # level 0 == padding
+    out_ref[...] = (_gather(q, coords) * deq).sum(axis=-1)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("tile_q", "tile_n", "interpret"))
+def gather_dot_batch_pallas(q_dense: jax.Array, coords: jax.Array,
+                            vals: jax.Array, scale: jax.Array | None = None,
+                            zero: jax.Array | None = None, *,
+                            tile_q: int = 8, tile_n: int = 128,
+                            interpret: bool = True) -> jax.Array:
+    """scores [Q, N] = sum_j q_dense[q, coords[q, :, j]] * vals[q, :, j].
+
+    Q must be a multiple of tile_q and N of tile_n (ops.py pads). With
+    (scale, zero) given, vals is u8 and dequant fuses into the dot.
+    """
+    qn, n, nnz = coords.shape
+    d = q_dense.shape[1]
+    assert q_dense.shape[0] == qn and qn % tile_q == 0 and n % tile_n == 0, (
+        q_dense.shape, coords.shape, tile_q, tile_n)
+    grid = (qn // tile_q, n // tile_n)
+    q_spec = pl.BlockSpec((tile_q, d), lambda i, j: (i, 0))
+    row_spec = pl.BlockSpec((tile_q, tile_n, nnz), lambda i, j: (i, j, 0))
+    sz_spec = pl.BlockSpec((tile_q, tile_n), lambda i, j: (i, j))
+    quant = scale is not None
+    kernel = _gather_dot_quant_kernel if quant else _gather_dot_kernel
+    in_specs = [q_spec, row_spec, row_spec] + ([sz_spec, sz_spec] if quant
+                                               else [])
+    args = (q_dense, coords, vals) + ((scale, zero) if quant else ())
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=sz_spec,
+        out_shape=jax.ShapeDtypeStruct((qn, n), q_dense.dtype),
+        interpret=interpret,
+    )(*args)
+
+
 def gather_dot_pallas(q_dense: jax.Array, coords: jax.Array,
                       vals: jax.Array, *, tile_n: int = 128,
                       interpret: bool = True) -> jax.Array:
-    """scores [N] = sum_j q_dense[coords[:, j]] * vals[:, j].
-
-    N must be a multiple of tile_n (ops.py pads).
-    """
-    n, nnz = coords.shape
-    d = q_dense.shape[0]
-    assert n % tile_n == 0, (n, tile_n)
-    grid = (n // tile_n,)
-    return pl.pallas_call(
-        _gather_dot_kernel,
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((d,), lambda i: (0,)),            # q: whole vector
-            pl.BlockSpec((tile_n, nnz), lambda i: (i, 0)),  # coords tile
-            pl.BlockSpec((tile_n, nnz), lambda i: (i, 0)),  # vals tile
-        ],
-        out_specs=pl.BlockSpec((tile_n,), lambda i: (i,)),
-        out_shape=jax.ShapeDtypeStruct((n,), q_dense.dtype),
-        interpret=interpret,
-    )(q_dense, coords, vals)
+    """Single-query compatibility shim: scores [N] via the batched
+    kernel with Q=1 (kept for callers/tests of the pre-batch API).
+    N must be a multiple of tile_n (ops.py pads)."""
+    from repro.kernels.gather_dot.ops import _pad_batch_call
+    return _pad_batch_call(q_dense[None], coords[None], vals[None],
+                           None, None, tile_n=tile_n, interpret=interpret)[0]

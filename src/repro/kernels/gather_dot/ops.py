@@ -1,32 +1,65 @@
-"""jit'd public wrapper for the gather_dot kernel: pads N to the tile
-size, picks interpret mode off-TPU, falls back to ref on any platform
-where neither applies."""
+"""Public wrappers for gather_dot: pad to tile multiples, pick
+interpret mode off-TPU.
+
+``gather_dot_batch``  [Q, N, nnz] candidates -> [Q, N] exact scores,
+                      one kernel launch per batch; optional fused u8
+                      dequant via (scale, zero)
+``gather_dot``        single-query [N, nnz] compatibility API
+"""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.gather_dot.gather_dot import gather_dot_pallas
-from repro.kernels.gather_dot.ref import gather_dot_ref
+from repro.kernels.gather_dot.gather_dot import (gather_dot_batch_pallas,
+                                                 gather_dot_pallas)
+from repro.kernels.gather_dot.ref import gather_dot_batch_ref, gather_dot_ref
 
-_TILE = 128
+_TILE_Q = 8     # f32 sublane width
+_TILE_N = 128   # lane width
 
 
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
+def _pad_batch_call(q_dense, coords, vals, scale, zero, *,
+                    tile_n=_TILE_N, interpret=True):
+    """Pad Q to _TILE_Q and N to tile_n, launch, slice back."""
+    qn, n, _ = coords.shape
+    pq = (-qn) % _TILE_Q
+    pn = (-n) % tile_n
+    if pq or pn:
+        q_dense = jnp.pad(q_dense, ((0, pq), (0, 0)))
+        coords = jnp.pad(coords, ((0, pq), (0, pn), (0, 0)))
+        vals = jnp.pad(vals, ((0, pq), (0, pn), (0, 0)))
+        if scale is not None:
+            scale = jnp.pad(scale, ((0, pq), (0, pn)))
+            zero = jnp.pad(zero, ((0, pq), (0, pn)))
+    out = gather_dot_batch_pallas(q_dense, coords, vals, scale, zero,
+                                  tile_q=_TILE_Q, tile_n=tile_n,
+                                  interpret=interpret)
+    return out[:qn, :n]
+
+
+def gather_dot_batch(q_dense: jax.Array, coords: jax.Array,
+                     vals: jax.Array, scale: jax.Array | None = None,
+                     zero: jax.Array | None = None) -> jax.Array:
+    """Batched sparse·dense scoring [Q, N, nnz] -> [Q, N].
+
+    With (scale, zero) given, ``vals`` is uint8 and the per-doc affine
+    dequantization fuses into the kernel (compact forward index)."""
+    return _pad_batch_call(q_dense, coords, vals, scale, zero,
+                           interpret=not _on_tpu())
+
+
 def gather_dot(q_dense: jax.Array, coords: jax.Array,
                vals: jax.Array) -> jax.Array:
-    """Batched sparse·dense scoring with tile padding. [N,nnz] -> [N]."""
-    n = coords.shape[0]
-    pad = (-n) % _TILE
-    if pad:
-        coords = jnp.pad(coords, ((0, pad), (0, 0)))
-        vals = jnp.pad(vals, ((0, pad), (0, 0)))
-    out = gather_dot_pallas(q_dense, coords, vals, tile_n=_TILE,
-                            interpret=not _on_tpu())
-    return out[:n]
+    """Single-query sparse·dense scoring [N, nnz] -> [N] (pre-batch
+    compatibility API)."""
+    return gather_dot_pallas(q_dense, coords, vals,
+                             interpret=not _on_tpu())
 
 
-__all__ = ["gather_dot", "gather_dot_ref"]
+__all__ = ["gather_dot", "gather_dot_batch", "gather_dot_ref",
+           "gather_dot_batch_ref"]

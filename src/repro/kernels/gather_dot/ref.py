@@ -1,10 +1,30 @@
-"""Pure-jnp oracle for the gather_dot kernel."""
+"""Pure-jnp oracles for the gather_dot kernels."""
 import jax
 import jax.numpy as jnp
 
 
 def gather_dot_ref(q_dense: jax.Array, coords: jax.Array,
                    vals: jax.Array) -> jax.Array:
-    """scores[n] = sum_j q_dense[coords[n, j]] * vals[n, j]."""
+    """Single query: scores[n] = sum_j q_dense[coords[n, j]] * vals[n, j]."""
     return (jnp.take(q_dense, coords, axis=0)
             * vals.astype(q_dense.dtype)).sum(axis=-1)
+
+
+def gather_dot_batch_ref(q_dense: jax.Array, coords: jax.Array,
+                         vals: jax.Array, scale: jax.Array | None = None,
+                         zero: jax.Array | None = None) -> jax.Array:
+    """Query batch: scores[q, n] = <q_dense[q], candidate[q, n]>.
+
+    With (scale, zero), vals is u8 and dequantized first (level 0 -> 0),
+    mirroring the fused-quant kernel variant."""
+    qn, n, nnz = coords.shape
+    gathered = jnp.take_along_axis(
+        q_dense, coords.reshape(qn, n * nnz), axis=1).reshape(qn, n, nnz)
+    if scale is not None:
+        v = vals.astype(q_dense.dtype)
+        deq = (v - 1.0) * scale[..., None].astype(q_dense.dtype) \
+            + zero[..., None].astype(q_dense.dtype)
+        v = jnp.where(vals > 0, deq, 0.0)
+    else:
+        v = vals.astype(q_dense.dtype)
+    return (gathered * v).sum(axis=-1)

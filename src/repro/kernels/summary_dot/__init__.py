@@ -1,3 +1,3 @@
-from repro.kernels.summary_dot.ops import summary_dot
+from repro.kernels.summary_dot.ops import summary_dot, summary_dot_batch
 
-__all__ = ["summary_dot"]
+__all__ = ["summary_dot", "summary_dot_batch"]

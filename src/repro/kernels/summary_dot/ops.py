@@ -1,21 +1,60 @@
-"""jit'd public wrapper for summary_dot."""
+"""Public wrappers for summary_dot: pad to tile multiples, pick
+interpret mode off-TPU.
+
+``summary_dot_batch``  [Q, L, S] summaries -> [Q, L] routing scores
+                       (one kernel launch for the whole query batch)
+``summary_dot``        single-query [cut, nb, S] compatibility API
+"""
 from __future__ import annotations
 
 import jax
+import jax.numpy as jnp
 
-from repro.kernels.summary_dot.ref import summary_dot_ref
-from repro.kernels.summary_dot.summary_dot import summary_dot_pallas
+from repro.kernels.summary_dot.ref import (summary_dot_batch_ref,
+                                           summary_dot_ref)
+from repro.kernels.summary_dot.summary_dot import (summary_dot_batch_pallas,
+                                                   summary_dot_pallas)
+
+_TILE_Q = 8     # f32 sublane width
+_TILE_L = 128   # lane width
 
 
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
+def _pad_batch_call(q_dense, sum_coords, sum_q, sum_scale, sum_zero, *,
+                    interpret):
+    """Pad Q to _TILE_Q and L to _TILE_L, launch, slice back."""
+    qn, l, s = sum_coords.shape
+    pq = (-qn) % _TILE_Q
+    pls = (-l) % _TILE_L
+    if pq or pls:
+        q_dense = jnp.pad(q_dense, ((0, pq), (0, 0)))
+        sum_coords = jnp.pad(sum_coords, ((0, pq), (0, pls), (0, 0)))
+        sum_q = jnp.pad(sum_q, ((0, pq), (0, pls), (0, 0)))
+        sum_scale = jnp.pad(sum_scale, ((0, pq), (0, pls)))
+        sum_zero = jnp.pad(sum_zero, ((0, pq), (0, pls)))
+    out = summary_dot_batch_pallas(q_dense, sum_coords, sum_q, sum_scale,
+                                   sum_zero, tile_q=_TILE_Q, tile_l=_TILE_L,
+                                   interpret=interpret)
+    return out[:qn, :l]
+
+
+def summary_dot_batch(q_dense: jax.Array, sum_coords: jax.Array,
+                      sum_q: jax.Array, sum_scale: jax.Array,
+                      sum_zero: jax.Array) -> jax.Array:
+    """Batched quantized routing scores [Q, L]; dequant fused in-kernel."""
+    return _pad_batch_call(q_dense, sum_coords, sum_q, sum_scale, sum_zero,
+                           interpret=not _on_tpu())
+
+
 def summary_dot(q_dense: jax.Array, sum_coords: jax.Array, sum_q: jax.Array,
                 sum_scale: jax.Array, sum_zero: jax.Array) -> jax.Array:
-    """Quantized routing scores [cut, nb]; dequant fused in-kernel."""
+    """Single-query routing scores [cut, nb] (pre-batch compatibility)."""
     return summary_dot_pallas(q_dense, sum_coords, sum_q, sum_scale,
                               sum_zero, interpret=not _on_tpu())
 
 
-__all__ = ["summary_dot", "summary_dot_ref"]
+__all__ = ["summary_dot", "summary_dot_batch", "summary_dot_ref",
+           "summary_dot_batch_ref"]

@@ -1,4 +1,4 @@
-"""Pure-jnp oracle for the summary_dot kernel."""
+"""Pure-jnp oracles for the summary_dot kernels."""
 import jax
 import jax.numpy as jnp
 
@@ -8,6 +8,17 @@ from repro.sparse.quant import dequantize_u8
 def summary_dot_ref(q_dense: jax.Array, sum_coords: jax.Array,
                     sum_q: jax.Array, sum_scale: jax.Array,
                     sum_zero: jax.Array) -> jax.Array:
-    """r[l, b] = <q, dequant(summary[l, b])>."""
+    """Single query: r[l, b] = <q, dequant(summary[l, b])>."""
     sv = dequantize_u8(sum_q, sum_scale, sum_zero, dtype=q_dense.dtype)
     return (jnp.take(q_dense, sum_coords, axis=0) * sv).sum(axis=-1)
+
+
+def summary_dot_batch_ref(q_dense: jax.Array, sum_coords: jax.Array,
+                          sum_q: jax.Array, sum_scale: jax.Array,
+                          sum_zero: jax.Array) -> jax.Array:
+    """Query batch: r[q, l] = <q_dense[q], dequant(summary[q, l])>."""
+    qn, l, s = sum_coords.shape
+    sv = dequantize_u8(sum_q, sum_scale, sum_zero, dtype=q_dense.dtype)
+    gathered = jnp.take_along_axis(
+        q_dense, sum_coords.reshape(qn, l * s), axis=1).reshape(qn, l, s)
+    return (gathered * sv).sum(axis=-1)

@@ -1,17 +1,33 @@
-"""Pallas TPU kernel: quantized summary routing (Seismic phase R).
+"""Pallas TPU kernel: natively query-batched quantized summary routing
+(Seismic phase R).
 
-Computes, for every (probed list l, block b):
+For a whole query batch at once, computes
 
-    r[l, b] = sum_s q_dense[sum_coords[l,b,s]] * dequant(sum_q[l,b,s])
+    r[q, l] = sum_s q_dense[q, sum_coords[q, l, s]] * dequant(sum_q[q, l, s])
 
-with the u8 affine dequantization ((q-1)*scale + zero, level 0 = pad)
-FUSED into the multiply — the paper's "matrix multiplication against
-all quantized summaries of an inverted list" (§7.1), done without ever
-materializing the dequantized summaries in HBM.
+where ``l`` runs over the flattened (probed list, block) axis and the
+u8 affine dequantization ((level-1)*scale + zero, level 0 = padding)
+is FUSED into the multiply — the paper's "matrix multiplication
+against all quantized summaries of an inverted list" (§7.1), done for
+the entire batch in ONE kernel launch and without ever materializing
+the dequantized summaries in HBM.
 
-Tiling:
-  grid = (cut,)  — one grid step per probed list
-  blocks: coords/q [1, nb, S] tiles, scale/zero [1, nb], q resident [d]
+Tiling (every block is >= 2-D; ops.py pads Q to tile_q and L to
+tile_l — the summary width S and vocab d pass through as-is, so
+non-interpret Mosaic lowering expects lane-aligned S/d; off-TPU
+coverage is interpret-mode only, see ROADMAP "TPU validation"):
+
+  grid = (Q / tile_q, L / tile_l)   — queries x summary tiles
+  q block      [tile_q, d]          dense query tile, VMEM-resident
+                                    across the inner (summary) grid axis
+  coords/sq    [tile_q, tile_l, S]  one summary tile per grid step
+  scale/zero   [tile_q, tile_l]
+  out          [tile_q, tile_l]
+
+The per-row dynamic gather ``take_along_axis(q, coords)`` lowers
+through the TPU gather/scatter unit on current Mosaic; interpret mode
+(selected automatically off-TPU by ops.py) executes the same program
+on CPU and is what the parity tests pin against ref.py.
 """
 from __future__ import annotations
 
@@ -24,36 +40,61 @@ from jax.experimental import pallas as pl
 
 def _summary_dot_kernel(q_ref, coords_ref, sq_ref, scale_ref, zero_ref,
                         out_ref):
-    q = q_ref[...]                                  # [d]
-    coords = coords_ref[0]                          # [nb, S]
-    sq = sq_ref[0].astype(q.dtype)                  # [nb, S] u8 -> f
-    scale = scale_ref[0].astype(q.dtype)            # [nb]
-    zero = zero_ref[0].astype(q.dtype)              # [nb]
-    gathered = jnp.take(q, coords, axis=0)          # [nb, S]
-    deq = (sq - 1.0) * scale[:, None] + zero[:, None]
+    q = q_ref[...]                                  # [tq, d]
+    coords = coords_ref[...]                        # [tq, tl, S]
+    sq = sq_ref[...].astype(q.dtype)                # [tq, tl, S] u8 -> f
+    scale = scale_ref[...].astype(q.dtype)          # [tq, tl]
+    zero = zero_ref[...].astype(q.dtype)            # [tq, tl]
+    tq, tl, s = coords.shape
+    gathered = jnp.take_along_axis(
+        q, coords.reshape(tq, tl * s), axis=1).reshape(tq, tl, s)
+    deq = (sq - 1.0) * scale[..., None] + zero[..., None]
     deq = jnp.where(sq > 0, deq, 0.0)               # level 0 == padding
-    out_ref[0] = (gathered * deq).sum(axis=-1)
+    out_ref[...] = (gathered * deq).sum(axis=-1)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
+@functools.partial(jax.jit,
+                   static_argnames=("tile_q", "tile_l", "interpret"))
+def summary_dot_batch_pallas(q_dense: jax.Array, sum_coords: jax.Array,
+                             sum_q: jax.Array, sum_scale: jax.Array,
+                             sum_zero: jax.Array, *, tile_q: int = 8,
+                             tile_l: int = 128,
+                             interpret: bool = True) -> jax.Array:
+    """r [Q, L] from quantized summaries [Q, L, S]; one launch per batch.
+
+    Q must be a multiple of tile_q and L of tile_l (ops.py pads).
+    """
+    qn, l, s = sum_coords.shape
+    d = q_dense.shape[1]
+    assert q_dense.shape[0] == qn and qn % tile_q == 0 and l % tile_l == 0, (
+        q_dense.shape, sum_coords.shape, tile_q, tile_l)
+    grid = (qn // tile_q, l // tile_l)
+    return pl.pallas_call(
+        _summary_dot_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_q, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((tile_q, tile_l, s), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((tile_q, tile_l, s), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((tile_q, tile_l), lambda i, j: (i, j)),
+            pl.BlockSpec((tile_q, tile_l), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((tile_q, tile_l), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((qn, l), q_dense.dtype),
+        interpret=interpret,
+    )(q_dense, sum_coords, sum_q, sum_scale, sum_zero)
+
+
 def summary_dot_pallas(q_dense: jax.Array, sum_coords: jax.Array,
                        sum_q: jax.Array, sum_scale: jax.Array,
                        sum_zero: jax.Array, *,
                        interpret: bool = True) -> jax.Array:
-    """r [cut, nb] from quantized summaries [cut, nb, S]."""
+    """Single-query compatibility shim: r [cut, nb] via the batched
+    kernel with Q=1 (kept for callers/tests of the pre-batch API)."""
+    from repro.kernels.summary_dot.ops import _pad_batch_call
     cut, nb, s = sum_coords.shape
-    d = q_dense.shape[0]
-    return pl.pallas_call(
-        _summary_dot_kernel,
-        grid=(cut,),
-        in_specs=[
-            pl.BlockSpec((d,), lambda i: (0,)),
-            pl.BlockSpec((1, nb, s), lambda i: (i, 0, 0)),
-            pl.BlockSpec((1, nb, s), lambda i: (i, 0, 0)),
-            pl.BlockSpec((1, nb), lambda i: (i, 0)),
-            pl.BlockSpec((1, nb), lambda i: (i, 0)),
-        ],
-        out_specs=pl.BlockSpec((1, nb), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((cut, nb), q_dense.dtype),
-        interpret=interpret,
-    )(q_dense, sum_coords, sum_q, sum_scale, sum_zero)
+    r = _pad_batch_call(q_dense[None], sum_coords.reshape(1, cut * nb, s),
+                        sum_q.reshape(1, cut * nb, s),
+                        sum_scale.reshape(1, cut * nb),
+                        sum_zero.reshape(1, cut * nb), interpret=interpret)
+    return r[0].reshape(cut, nb)

@@ -1,0 +1,69 @@
+"""Batch-first staged retrieval pipeline (the Seismic execution path).
+
+Architecture
+============
+
+Every search — local ``search_batch``, served ``SeismicServer.search``,
+and each doc shard of the distributed ``shard_map`` search — executes
+the SAME staged pipeline. Each stage is a pure function over whole
+``[Q, ...]`` query batches (no vmap over a scalar-query function), so
+the hot phases lower to one natively-batched Pallas kernel launch per
+batch and every stage can be timed, swapped, or sharded independently:
+
+    prep      queries [Q, nnz]  ->  q_dense [Q, d], probed lists [Q, cut]
+              (batch densify + top-``cut`` coordinate selection,
+              Alg. 2 line 1)
+    router    probed lists      ->  r [Q, cut * n_blocks]
+              (quantized summary inner products, paper phase R;
+              ``kernels/summary_dot`` batched kernel, u8 dequant fused)
+    selector  r                 ->  Selection(blocks [Q, B], scores)
+              (pluggable block-selection policy — the decisive
+              accuracy/cost lever; see the registry below)
+    scorer    blocks            ->  cand [Q, C], exact scores [Q, C]
+              (forward-index gather + dedupe + exact inner products,
+              paper phase S; ``kernels/gather_dot`` batched kernel,
+              compact-index u8 dequant fused)
+    merge     cand, scores      ->  top-k ids/scores + docs_evaluated
+
+Stage contract
+--------------
+
+* Stages are jit-traceable pure functions of fixed-shape arrays; all
+  shapes are static given ``SearchParams`` (a hashable static arg).
+* Candidate padding uses the sentinel doc id ``index.n_docs``; dead or
+  masked blocks carry a ``-inf`` score and contribute only sentinels.
+* A selector is ``fn(index, batch: RoutedBatch, p) -> Selection`` and
+  is looked up from ``SearchParams.policy`` via the registry:
+
+      ``budget``            top block_budget blocks by summary score
+      ``adaptive``          two-stage heap_factor pruning (Alg. 2)
+      ``global_threshold``  BMP-style: keep blocks whose summary score
+                            clears a fraction of the per-query max
+                            (Block-Max Pruning, Mallia et al. 2024)
+
+  Register new policies with ``register_selector``; they become valid
+  ``SearchParams.policy`` values everywhere (local/served/distributed)
+  with no further wiring.
+
+Entry points
+------------
+
+``search_pipeline(index, queries, p)``  jitted batched search
+``run_pipeline(index, q_coords, q_vals, p)``  traceable core (use
+inside shard_map / larger jitted programs).
+"""
+from repro.retrieval.merge import merge_topk
+from repro.retrieval.params import SearchParams
+from repro.retrieval.pipeline import run_pipeline, search_pipeline
+from repro.retrieval.prep import prep_queries
+from repro.retrieval.router import route_batch, RoutedBatch
+from repro.retrieval.scorer import score_selection
+from repro.retrieval.selector import (Selection, get_selector,
+                                      register_selector, selector_names)
+
+__all__ = [
+    "SearchParams", "RoutedBatch", "Selection",
+    "prep_queries", "route_batch", "score_selection", "merge_topk",
+    "run_pipeline", "search_pipeline",
+    "get_selector", "register_selector", "selector_names",
+]

@@ -1,0 +1,16 @@
+"""Stage 5 — merge: final batched top-k over exact candidate scores."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def merge_topk(cand: jax.Array, scores: jax.Array, k: int, n_docs: int
+               ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """(cand [Q, C], scores [Q, C]) -> (top_s [Q, k], ids [Q, k] with -1
+    padding, docs_evaluated [Q])."""
+    top_s, pos = jax.lax.top_k(scores, k)
+    top_ids = jnp.take_along_axis(cand, pos, axis=1)
+    top_ids = jnp.where(jnp.isfinite(top_s), top_ids, -1)
+    docs_evaluated = (cand < n_docs).sum(axis=-1)
+    return top_s, top_ids.astype(jnp.int32), docs_evaluated

@@ -1,0 +1,24 @@
+"""Query-time hyper-parameters (paper's cut, heap_factor).
+
+``SearchParams`` is a frozen (hashable) dataclass so it can ride as a
+static jit argument; every pipeline stage shape is determined by it.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class SearchParams:
+    """Query-time hyper-parameters shared by every pipeline stage."""
+
+    k: int = 10
+    cut: int = 8                  # probed query coordinates
+    block_budget: int = 32        # max fully-evaluated blocks
+    heap_factor: float = 0.9      # summary over-estimate correction
+    policy: str = "adaptive"      # selector registry key ("budget" |
+    #                               "adaptive" | "global_threshold" | ...)
+    probe_budget: int = 8         # stage-1 blocks for the adaptive policy
+    threshold_factor: float = 0.75  # global_threshold: keep blocks with
+    #                                 summary >= factor * per-query max
+    use_kernel: bool = False      # batched Pallas gather/summary kernels

@@ -1,0 +1,49 @@
+"""Pipeline orchestration: prep -> router -> selector -> scorer -> merge.
+
+``run_pipeline`` is the traceable batch-first core shared by every
+execution surface (local search_batch, SeismicServer, the distributed
+shard_map search); ``search_pipeline`` is its jitted front door.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import TYPE_CHECKING
+
+import jax
+
+from repro.retrieval.merge import merge_topk
+from repro.retrieval.params import SearchParams
+from repro.retrieval.prep import prep_queries
+from repro.retrieval.router import route_batch
+from repro.retrieval.scorer import score_selection
+from repro.retrieval.selector import get_selector
+from repro.sparse.ops import PaddedSparse
+
+if TYPE_CHECKING:  # annotation-only: keeps repro.retrieval import-cycle-free
+    from repro.core.types import SeismicIndex
+
+
+def run_pipeline(index: SeismicIndex, q_coords: jax.Array,
+                 q_vals: jax.Array, p: SearchParams
+                 ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Batched staged search over padded-sparse queries [Q, nnz].
+
+    Returns (scores [Q, k], ids [Q, k] with -1 padding,
+    docs_evaluated [Q]). Traceable: safe inside jit / shard_map.
+    """
+    select = get_selector(p.policy)                 # static under jit
+    q_dense, lists, _ = prep_queries(q_coords, q_vals, index.dim, p.cut)
+    batch = route_batch(index, q_dense, lists, p.use_kernel)
+    sel = select(index, batch, p)
+    cand, scores = score_selection(index, batch, sel, p.use_kernel)
+    return merge_topk(cand, scores, p.k, index.n_docs)
+
+
+@partial(jax.jit, static_argnames=("p",))
+def search_pipeline(index: SeismicIndex, queries: PaddedSparse,
+                    p: SearchParams):
+    """Jitted batched Seismic search (the shared execution path).
+
+    Returns (scores [Q,k], ids [Q,k] with -1 padding, docs_evaluated [Q]).
+    """
+    return run_pipeline(index, queries.coords, queries.vals, p)

@@ -1,0 +1,55 @@
+"""Stage 2 — router: quantized summary scoring (paper phase R).
+
+Scores EVERY summary of every probed list for the whole query batch in
+one shot: the flattened (probed list, block) axis has length
+``cut * n_blocks`` and the result is ``r [Q, cut * n_blocks]`` with
+dead blocks at -inf. With ``use_kernel`` the batched summary_dot
+Pallas kernel (u8 dequant fused) does this in a single launch.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import TYPE_CHECKING
+
+import jax
+import jax.numpy as jnp
+
+from repro.sparse.quant import dequantize_u8
+
+if TYPE_CHECKING:  # annotation-only: keeps repro.retrieval import-cycle-free
+    from repro.core.types import SeismicIndex
+
+NEG = -jnp.inf
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class RoutedBatch:
+    """Everything the selector and scorer stages need, batched."""
+
+    q_dense: jax.Array   # f32 [Q, d]
+    lists: jax.Array     # i32 [Q, cut]     probed coordinate per slot
+    r: jax.Array         # f32 [Q, cut*nb]  block summary scores (-inf dead)
+
+
+def route_batch(index: SeismicIndex, q_dense: jax.Array, lists: jax.Array,
+                use_kernel: bool) -> RoutedBatch:
+    """Summary inner products for all blocks of the probed lists."""
+    qn, cut = lists.shape
+    nb = index.config.n_blocks
+    s = index.sum_coords.shape[-1]
+    sc = index.sum_coords[lists].reshape(qn, cut * nb, s)   # [Q, L, S]
+    sq = index.sum_q[lists].reshape(qn, cut * nb, s)
+    scale = index.sum_scale[lists].reshape(qn, cut * nb)
+    zero = index.sum_zero[lists].reshape(qn, cut * nb)
+    if use_kernel:
+        from repro.kernels.summary_dot.ops import summary_dot_batch
+        r = summary_dot_batch(q_dense, sc, sq, scale, zero)
+    else:
+        sv = dequantize_u8(sq, scale, zero)
+        gathered = jnp.take_along_axis(
+            q_dense, sc.reshape(qn, -1), axis=1).reshape(sc.shape)
+        r = (gathered * sv).sum(axis=-1)
+    alive = (index.block_len[lists] > 0).reshape(qn, cut * nb)
+    r = jnp.where(alive, r, NEG)
+    return RoutedBatch(q_dense=q_dense, lists=lists, r=r)

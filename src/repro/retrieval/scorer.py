@@ -1,0 +1,97 @@
+"""Stage 4 — scorer: forward-index exact scoring (paper phase S).
+
+Gathers the member docs of every selected block for the whole batch,
+dedupes candidates per query (sort + neighbor mask), and computes the
+exact inner products against the forward index. With ``use_kernel``
+the batched gather_dot Pallas kernel scores all [Q, C] candidates in
+one launch; a compact (u8) forward index dequantizes inside the
+kernel.
+"""
+from __future__ import annotations
+
+from typing import TYPE_CHECKING
+
+import jax
+import jax.numpy as jnp
+
+from repro.retrieval.router import NEG, RoutedBatch
+from repro.retrieval.selector import Selection
+from repro.sparse.quant import dequantize_u8
+
+if TYPE_CHECKING:  # annotation-only: keeps repro.retrieval import-cycle-free
+    from repro.core.types import SeismicIndex
+
+
+def gather_block_docs(index: SeismicIndex, lists: jax.Array,
+                      blocks: jax.Array) -> jax.Array:
+    """Member doc ids of selected flat blocks -> [Q, B, block_cap].
+
+    ``blocks`` indexes the flattened (cut, n_blocks) axis of the router
+    output; out-of-length slots pad with the sentinel ``n_docs``.
+    """
+    nb = index.config.n_blocks
+    li = blocks // nb                               # [Q, B] probed-slot id
+    bi = blocks % nb
+    coord = jnp.take_along_axis(lists, li, axis=1)  # [Q, B] coordinate
+    off = index.block_off[coord, bi]                # [Q, B]
+    ln = index.block_len[coord, bi]
+    ar = jnp.arange(index.config.block_cap)
+    pos = jnp.clip(off[..., None] + ar, 0, index.config.lam - 1)
+    docs = jnp.take_along_axis(index.list_docs[coord], pos, axis=2)
+    return jnp.where(ar < ln[..., None], docs, index.n_docs)
+
+
+def dedupe_batch(cand: jax.Array, n_docs: int) -> jax.Array:
+    """Sort each query's candidate ids and mask duplicates to the
+    sentinel. [Q, C] -> [Q, C]."""
+    s = jnp.sort(cand, axis=-1)
+    dup = jnp.concatenate(
+        [jnp.zeros((cand.shape[0], 1), bool), s[:, 1:] == s[:, :-1]], axis=1)
+    return jnp.where(dup, n_docs, s)
+
+
+def score_candidates(index: SeismicIndex, q_dense: jax.Array,
+                     cand: jax.Array, use_kernel: bool) -> jax.Array:
+    """Exact <q, doc> for candidate ids [Q, C] (sentinel -> -inf).
+
+    With a compact (fwd_quant) index the per-doc u8 dequant fuses into
+    the gather-dot; scores stay 'exact' up to ~0.4% value quantization.
+    """
+    c = jnp.take(index.fwd.coords, cand, axis=0,
+                 mode="clip").astype(jnp.int32)              # [Q, C, nnz]
+    v = jnp.take(index.fwd.vals, cand, axis=0, mode="clip")
+    quant = index.fwd_scale is not None
+    scale = zero = None
+    if quant:
+        scale = jnp.take(index.fwd_scale, cand, mode="clip")
+        zero = jnp.take(index.fwd_zero, cand, mode="clip")
+    if use_kernel:
+        from repro.kernels.gather_dot.ops import gather_dot_batch
+        scores = gather_dot_batch(q_dense, c, v, scale, zero)
+    else:
+        if quant:
+            v = dequantize_u8(v, scale, zero)
+        else:
+            v = v.astype(jnp.float32)
+        qn = cand.shape[0]
+        gathered = jnp.take_along_axis(
+            q_dense, c.reshape(qn, -1), axis=1).reshape(c.shape)
+        scores = (gathered * v).sum(axis=-1)
+    return jnp.where(cand < index.n_docs, scores, NEG)
+
+
+def score_selection(index: SeismicIndex, batch: RoutedBatch,
+                    sel: Selection, use_kernel: bool
+                    ) -> tuple[jax.Array, jax.Array]:
+    """Selected blocks -> (cand [Q, B*cap], exact scores [Q, B*cap]).
+
+    Blocks carrying a -inf selection score (dead / pruned / already
+    evaluated) contribute only sentinel candidates.
+    """
+    docs = gather_block_docs(index, batch.lists, sel.blocks)
+    docs = jnp.where(jnp.isfinite(sel.block_scores)[..., None], docs,
+                     index.n_docs)
+    qn = docs.shape[0]
+    cand = dedupe_batch(docs.reshape(qn, -1), index.n_docs)
+    scores = score_candidates(index, batch.q_dense, cand, use_kernel)
+    return cand, scores

@@ -16,8 +16,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import TransformerConfig
-from repro.core.query import SearchParams, search_batch
 from repro.core.types import SeismicIndex
+from repro.retrieval import SearchParams, search_pipeline
 from repro.models.transformer import lm
 from repro.sparse.ops import PaddedSparse
 
@@ -67,7 +67,9 @@ class RetrievalResult:
 
 
 class SeismicServer:
-    """Fixed-batch jitted retrieval front-end."""
+    """Fixed-batch jitted retrieval front-end over the shared staged
+    pipeline (repro.retrieval): pads request batches to ``max_batch``
+    so the jitted pipeline never recompiles."""
 
     def __init__(self, index: SeismicIndex, params: SearchParams,
                  max_batch: int = 256):
@@ -87,7 +89,7 @@ class SeismicServer:
         for s in range(0, q.coords.shape[0], self.max_batch):
             chunk = PaddedSparse(q.coords[s:s + self.max_batch],
                                  q.vals[s:s + self.max_batch], q.dim)
-            outs.append(search_batch(self.index, chunk, self.params))
+            outs.append(search_pipeline(self.index, chunk, self.params))
         scores = np.concatenate([np.asarray(o[0]) for o in outs])[:n]
         ids = np.concatenate([np.asarray(o[1]) for o in outs])[:n]
         ev = np.concatenate([np.asarray(o[2]) for o in outs])[:n]

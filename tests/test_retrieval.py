@@ -1,0 +1,245 @@
+"""The staged batch-first retrieval pipeline and its natively-batched
+Pallas kernels (interpret-mode parity vs refs; no hypothesis needed).
+"""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.gather_dot.ops import gather_dot, gather_dot_batch
+from repro.kernels.gather_dot.ref import gather_dot_batch_ref, gather_dot_ref
+from repro.kernels.summary_dot.ops import summary_dot, summary_dot_batch
+from repro.kernels.summary_dot.ref import (summary_dot_batch_ref,
+                                           summary_dot_ref)
+from repro.retrieval import (SearchParams, get_selector, register_selector,
+                             search_pipeline, selector_names)
+from repro.sparse.quant import quantize_u8
+
+
+# ------------------------------------------------- batched gather_dot
+
+@pytest.mark.parametrize("qn,n,nnz,d", [
+    (8, 128, 16, 512),     # exact tile multiples
+    (3, 37, 17, 300),      # neither Q nor N tile-aligned
+    (1, 5, 8, 64),         # tiny single-query batch
+    (13, 260, 33, 1000),   # N just past two tiles
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_gather_dot_batch_parity(qn, n, nnz, d, dtype):
+    rng = np.random.default_rng(qn * n + nnz)
+    q = jnp.asarray(rng.lognormal(0, 1, (qn, d)), dtype)
+    coords = jnp.asarray(rng.integers(0, d, (qn, n, nnz)), jnp.int32)
+    vals = jnp.asarray(rng.lognormal(0, 1, (qn, n, nnz)), dtype)
+    got = gather_dot_batch(q, coords, vals)
+    want = gather_dot_batch_ref(q, coords, vals)
+    rtol = 1e-6 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), rtol=rtol)
+
+
+def test_gather_dot_batch_fused_dequant_parity():
+    """Compact-forward-index path: u8 values + per-candidate (scale,
+    zero) dequantized inside the kernel."""
+    rng = np.random.default_rng(0)
+    qn, n, nnz, d = 5, 70, 24, 777
+    q = jnp.asarray(rng.lognormal(0, 1, (qn, d)), jnp.float32)
+    coords = jnp.asarray(rng.integers(0, d, (qn, n, nnz)), jnp.int32)
+    vals = rng.lognormal(0, 1, (qn, n, nnz)).astype(np.float32)
+    vals[rng.random((qn, n, nnz)) < 0.25] = 0.0    # padded entries
+    u8, scale, zero = quantize_u8(jnp.asarray(vals))
+    got = gather_dot_batch(q, coords, u8, scale, zero)
+    want = gather_dot_batch_ref(q, coords, u8, scale, zero)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_gather_dot_legacy_single_query_api():
+    """The pre-batch [N, nnz] API still matches its ref (Q=1 reshape)."""
+    rng = np.random.default_rng(1)
+    n, nnz, d = 37, 12, 400
+    q = jnp.asarray(rng.lognormal(0, 1, d), jnp.float32)
+    coords = jnp.asarray(rng.integers(0, d, (n, nnz)), jnp.int32)
+    vals = jnp.asarray(rng.lognormal(0, 1, (n, nnz)), jnp.float32)
+    np.testing.assert_allclose(np.asarray(gather_dot(q, coords, vals)),
+                               np.asarray(gather_dot_ref(q, coords, vals)),
+                               rtol=1e-6)
+
+
+# ------------------------------------------------ batched summary_dot
+
+@pytest.mark.parametrize("qn,l,s,d", [
+    (8, 128, 32, 1024),    # exact tile multiples
+    (3, 45, 12, 300),      # odd everything
+    (1, 1, 8, 64),         # single query, single block
+    (9, 200, 24, 2048),    # L between tile multiples
+])
+def test_summary_dot_batch_parity(qn, l, s, d):
+    rng = np.random.default_rng(qn + l)
+    q = jnp.asarray(rng.lognormal(0, 1, (qn, d)), jnp.float32)
+    coords = jnp.asarray(rng.integers(0, d, (qn, l, s)), jnp.int32)
+    vals = rng.lognormal(0, 1, (qn, l, s)).astype(np.float32)
+    vals[rng.random((qn, l, s)) < 0.3] = 0.0       # padding
+    u8, scale, zero = quantize_u8(jnp.asarray(vals))
+    got = summary_dot_batch(q, coords, u8, scale, zero)
+    want = summary_dot_batch_ref(q, coords, u8, scale, zero)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_summary_dot_batch_all_padding_rows():
+    """Summaries that are 100% padding (level 0) must score exactly 0."""
+    rng = np.random.default_rng(2)
+    qn, l, s, d = 4, 20, 16, 256
+    q = jnp.asarray(rng.lognormal(0, 1, (qn, d)), jnp.float32)
+    coords = jnp.asarray(rng.integers(0, d, (qn, l, s)), jnp.int32)
+    u8 = jnp.zeros((qn, l, s), jnp.uint8)
+    scale = jnp.asarray(rng.random((qn, l)), jnp.float32)
+    zero = jnp.asarray(rng.random((qn, l)), jnp.float32)
+    got = np.asarray(summary_dot_batch(q, coords, u8, scale, zero))
+    np.testing.assert_array_equal(got, np.zeros((qn, l), np.float32))
+
+
+def test_summary_dot_legacy_single_query_api():
+    rng = np.random.default_rng(3)
+    cut, nb, s, d = 5, 9, 16, 512
+    q = jnp.asarray(rng.lognormal(0, 1, d), jnp.float32)
+    coords = jnp.asarray(rng.integers(0, d, (cut, nb, s)), jnp.int32)
+    vals = rng.lognormal(0, 1, (cut, nb, s)).astype(np.float32)
+    u8, scale, zero = quantize_u8(jnp.asarray(vals))
+    got = summary_dot(q, coords, u8, scale, zero)
+    want = summary_dot_ref(q, coords, u8, scale, zero)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ------------------------------------------------- scorer stage masks
+
+def test_score_candidates_sentinel_padding(small_index):
+    """Sentinel candidate ids (== n_docs) must score -inf on both the
+    jnp and the kernel path; real ids must agree across paths."""
+    from repro.retrieval.scorer import score_candidates
+    idx, _ = small_index
+    rng = np.random.default_rng(4)
+    qn, c = 3, 40
+    q_dense = jnp.asarray(rng.lognormal(0, 1, (qn, idx.dim)), jnp.float32)
+    cand = rng.integers(0, idx.n_docs, (qn, c))
+    cand[:, ::3] = idx.n_docs                       # sentinel-padded slots
+    cand = jnp.asarray(cand, jnp.int32)
+    s_jnp = np.asarray(score_candidates(idx, q_dense, cand, False))
+    s_krn = np.asarray(score_candidates(idx, q_dense, cand, True))
+    assert (s_jnp[:, ::3] == -np.inf).all()
+    np.testing.assert_allclose(s_jnp, s_krn, rtol=1e-5, atol=1e-5)
+
+
+# ------------------------------------------ pipeline + selector registry
+
+def test_selector_registry():
+    assert set(selector_names()) >= {"budget", "adaptive",
+                                     "global_threshold"}
+    with pytest.raises(KeyError, match="unknown selector"):
+        get_selector("nope")
+
+    @register_selector("_test_probe")
+    def probe(index, batch, p):     # pragma: no cover - registry only
+        return None
+
+    assert get_selector("_test_probe") is probe
+
+
+@pytest.mark.parametrize("policy", ["budget", "adaptive",
+                                    "global_threshold"])
+def test_pipeline_policies_recall(small_index, small_collection, policy):
+    from repro.core.baselines import exact_search
+    from repro.core.oracle import recall_at_k
+    idx, _ = small_index
+    docs, queries, *_ = small_collection
+    p = SearchParams(k=10, cut=8, block_budget=48, policy=policy)
+    _, ids, ev = search_pipeline(idx, queries, p)
+    _, eids = exact_search(docs, queries, 10)
+    rec = np.mean([recall_at_k(np.asarray(ids[q]), np.asarray(eids[q]))
+                   for q in range(queries.n)])
+    assert rec >= 0.9, (policy, rec)
+    assert np.asarray(ev).mean() < 0.5 * docs.n
+
+
+def test_global_threshold_prunes_vs_budget(small_index, small_collection):
+    """The BMP-style selector must evaluate fewer docs than exhaustive
+    budget routing at the same block budget."""
+    idx, _ = small_index
+    _, queries, *_ = small_collection
+    pb = SearchParams(k=10, cut=8, block_budget=48, policy="budget")
+    pg = SearchParams(k=10, cut=8, block_budget=48,
+                      policy="global_threshold")
+    _, _, evb = search_pipeline(idx, queries, pb)
+    _, _, evg = search_pipeline(idx, queries, pg)
+    assert np.asarray(evg).mean() < np.asarray(evb).mean()
+
+
+def test_pipeline_kernel_path_matches_jnp(small_index, small_collection):
+    """use_kernel=True (batched Pallas, interpret mode on CPU) must
+    reproduce the jnp path bit-for-bit on ids and near-exactly on
+    scores."""
+    idx, _ = small_index
+    _, queries, *_ = small_collection
+    p0 = SearchParams(k=10, cut=8, block_budget=32, policy="adaptive")
+    p1 = SearchParams(k=10, cut=8, block_budget=32, policy="adaptive",
+                      use_kernel=True)
+    s0, i0, e0 = search_pipeline(idx, queries, p0)
+    s1, i1, e1 = search_pipeline(idx, queries, p1)
+    np.testing.assert_array_equal(np.asarray(i0), np.asarray(i1))
+    np.testing.assert_allclose(np.asarray(s0), np.asarray(s1),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(e0), np.asarray(e1))
+
+
+def test_adaptive_small_block_budget(small_index, small_collection):
+    """block_budget < probe_budget must degrade to pure budget routing,
+    not crash on a negative stage-2 top_k."""
+    idx, _ = small_index
+    _, queries, *_ = small_collection
+    p = SearchParams(k=5, cut=8, block_budget=4, probe_budget=8,
+                     policy="adaptive")
+    s, ids, ev = search_pipeline(idx, queries, p)
+    assert ids.shape == (queries.n, 5)
+    assert (np.asarray(ev) > 0).all()
+
+
+def test_pipeline_compact_fwd_index_kernel_parity():
+    """fwd_quant=True: the scorer's in-kernel u8 dequant must agree
+    with the jnp dequant path through the whole pipeline."""
+    from repro.core import SeismicConfig, build_index
+    from repro.data import SyntheticSparseConfig, make_collection
+    from repro.sparse.ops import PaddedSparse
+    cfg = SyntheticSparseConfig(dim=512, n_docs=1024, n_queries=8,
+                                doc_nnz=32, query_nnz=12, n_topics=16,
+                                topic_coords=96, seed=5)
+    docs_np, queries_np, _ = make_collection(cfg)
+    docs = PaddedSparse(jnp.asarray(docs_np.coords),
+                        jnp.asarray(docs_np.vals), docs_np.dim)
+    queries = PaddedSparse(jnp.asarray(queries_np.coords),
+                           jnp.asarray(queries_np.vals), queries_np.dim)
+    idx = build_index(docs, SeismicConfig(lam=96, beta=8, alpha=0.4,
+                                          block_cap=24, summary_nnz=24,
+                                          fwd_quant=True), list_chunk=16)
+    assert idx.fwd_scale is not None
+    p0 = SearchParams(k=10, cut=8, block_budget=32, policy="adaptive")
+    p1 = SearchParams(k=10, cut=8, block_budget=32, policy="adaptive",
+                      use_kernel=True)
+    s0, i0, _ = search_pipeline(idx, queries, p0)
+    s1, i1, _ = search_pipeline(idx, queries, p1)
+    np.testing.assert_array_equal(np.asarray(i0), np.asarray(i1))
+    np.testing.assert_allclose(np.asarray(s0), np.asarray(s1),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_search_batch_is_pipeline(small_index, small_collection):
+    """The core.query compatibility shim must be the shared pipeline."""
+    from repro.core import search_batch
+    idx, _ = small_index
+    _, queries, *_ = small_collection
+    p = SearchParams(k=5, cut=8, block_budget=16, policy="budget")
+    s0, i0, e0 = search_batch(idx, queries, p)
+    s1, i1, e1 = search_pipeline(idx, queries, p)
+    np.testing.assert_array_equal(np.asarray(i0), np.asarray(i1))
+    np.testing.assert_array_equal(np.asarray(s0), np.asarray(s1))
+    np.testing.assert_array_equal(np.asarray(e0), np.asarray(e1))
