@@ -1,6 +1,6 @@
 PY ?= python
 
-.PHONY: test test-fast bench dev
+.PHONY: test test-fast bench bench-serving dev
 
 dev:
 	$(PY) -m pip install -r requirements-dev.txt
@@ -11,7 +11,12 @@ test:
 
 test-fast:
 	PYTHONPATH=src $(PY) -m pytest -q tests/test_retrieval.py \
-		tests/test_seismic_core.py tests/test_sparse_ops.py
+		tests/test_seismic_core.py tests/test_sparse_ops.py \
+		tests/test_serve_async.py
 
 bench:
 	PYTHONPATH=src $(PY) -m benchmarks.run
+
+# serving-load smoke: tiny collection, async vs sync QPS (~3s)
+bench-serving:
+	PYTHONPATH=src $(PY) -m benchmarks.serving_load --smoke

@@ -23,21 +23,9 @@ import numpy as np
 
 from benchmarks.common import (built_index, collection, mean_recall, row,
                                timeit_us)
-from repro.retrieval import (SearchParams, merge_topk, prep_queries,
-                             route_batch, score_selection, search_pipeline,
-                             get_selector)
+from repro.retrieval import SearchParams, search_pipeline, stage_fns
 
 POLICIES = ("budget", "adaptive", "global_threshold")
-
-
-def _stage_fns(idx, p):
-    """Standalone-jitted stage functions (index and params closed over)."""
-    prep = jax.jit(lambda c, v: prep_queries(c, v, idx.dim, p.cut))
-    route = jax.jit(lambda qd, ls: route_batch(idx, qd, ls, p.use_kernel))
-    select = jax.jit(lambda b: get_selector(p.policy)(idx, b, p))
-    score = jax.jit(lambda b, s: score_selection(idx, b, s, p.use_kernel))
-    merge = jax.jit(lambda c, s: merge_topk(c, s, p.k, idx.n_docs))
-    return prep, route, select, score, merge
 
 
 def run():
@@ -48,7 +36,10 @@ def run():
 
     for policy in POLICIES:
         p = SearchParams(k=10, cut=8, block_budget=32, policy=policy)
-        prep, route, select, score, merge = _stage_fns(idx, p)
+        fns = stage_fns(idx, p)   # the retrieval-layer timing hooks
+        prep, route, select, score, merge = (
+            fns["prep"], fns["router"], fns["selector"], fns["scorer"],
+            fns["merge"])
 
         # materialize stage inputs once
         q_dense, lists, _ = jax.block_until_ready(

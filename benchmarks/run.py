@@ -10,7 +10,8 @@ import sys
 import time
 
 MODULES = ["fig1_concentration", "table1_tradeoff", "table2_space_build",
-           "fig5_blocking", "fig6_summaries", "pipeline_throughput"]
+           "fig5_blocking", "fig6_summaries", "pipeline_throughput",
+           "serving_load"]
 
 
 def main() -> None:

@@ -1,0 +1,150 @@
+"""Serving load generator: async micro-batcher vs the synchronous
+per-request facade, under online (one-query-at-a-time) traffic.
+
+Two load shapes per selector policy, same ``SearchParams`` (so recall
+is equal by construction — both run the identical jitted pipeline):
+
+  closed-loop sync    each arriving query is served immediately by
+                      ``SeismicServer.search`` — one fixed
+                      ``[max_batch, nnz]`` launch per query, occupancy
+                      1/max_batch (the padding waste this subsystem
+                      exists to remove)
+  open-loop async     Poisson arrivals at an offered rate above the
+                      sync capacity, submitted to
+                      ``AsyncSeismicServer``; the micro-batcher
+                      coalesces the backlog into high-occupancy
+                      launches
+
+Reported per policy: QPS, recall@10, and for the async server p50 /
+p95 / p99 request latency plus mean batch occupancy (from telemetry).
+
+    PYTHONPATH=src python -m benchmarks.serving_load [--smoke]
+
+``--smoke`` (also used by CI and ``make bench-serving``) shrinks the
+collection and runs one policy so the whole module finishes in a few
+seconds.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax.numpy as jnp
+
+from benchmarks.common import built_index, collection, mean_recall, row
+from repro.core import SeismicConfig, build_index
+from repro.core.baselines import exact_search
+from repro.data import SyntheticSparseConfig, make_collection
+from repro.retrieval import SearchParams
+from repro.serve import AsyncSeismicServer, SeismicServer
+from repro.sparse.ops import PaddedSparse
+
+POLICIES = ("budget", "adaptive", "global_threshold")
+
+SMOKE = SyntheticSparseConfig(dim=512, n_docs=2048, n_queries=24,
+                              doc_nnz=32, query_nnz=12, n_topics=16,
+                              topic_coords=96, seed=3)
+SMOKE_INDEX = SeismicConfig(lam=96, beta=8, alpha=0.4, block_cap=24,
+                            summary_nnz=24)
+
+
+def _smoke_fixture():
+    docs_np, queries_np, _ = make_collection(SMOKE)
+    docs = PaddedSparse(jnp.asarray(docs_np.coords),
+                        jnp.asarray(docs_np.vals), docs_np.dim)
+    queries = PaddedSparse(jnp.asarray(queries_np.coords),
+                           jnp.asarray(queries_np.vals), queries_np.dim)
+    idx = build_index(docs, SMOKE_INDEX, list_chunk=16)
+    _, eids = exact_search(docs, queries, 10)
+    return idx, queries, np.asarray(eids)
+
+
+def _sync_per_request(idx, queries, eids, p, max_batch, n_req):
+    """Closed-loop: one padded fixed-batch launch per arriving query."""
+    server = SeismicServer(idx, p, max_batch=max_batch)
+    qn = queries.n
+    one = queries[0:1]
+    server.search(one)                       # compile the launch shape
+    ids = np.empty((n_req, p.k), np.int32)
+    t0 = time.perf_counter()
+    for i in range(n_req):
+        ids[i] = server.search(queries[i % qn:i % qn + 1]).ids[0]
+    dt = time.perf_counter() - t0
+    recall = mean_recall(ids, eids[np.arange(n_req) % qn])
+    return n_req / dt, recall
+
+
+def _async_open_loop(idx, queries, eids, p, max_batch, n_req, rate,
+                     deadline_s):
+    """Open-loop: Poisson arrivals at ``rate`` qps, micro-batched."""
+    server = AsyncSeismicServer(idx, p, max_batch=max_batch,
+                                query_nnz=queries.nnz_max,
+                                deadline_s=deadline_s,
+                                queue_bound=max(n_req, 64),
+                                admission="reject")
+    qn = queries.n
+    coords = np.asarray(queries.coords)
+    vals = np.asarray(queries.vals)
+    arrivals = np.cumsum(
+        np.random.default_rng(0).exponential(1.0 / rate, n_req))
+    with server:
+        futs = []
+        t0 = time.perf_counter()
+        for i in range(n_req):
+            lag = arrivals[i] - (time.perf_counter() - t0)
+            if lag > 0:
+                time.sleep(lag)
+            futs.append(server.submit(coords[i % qn], vals[i % qn]))
+        for f in futs:
+            f.wait()
+        dt = time.perf_counter() - t0
+    ids = np.stack([f.result().ids for f in futs])
+    recall = mean_recall(ids, eids[np.arange(n_req) % qn])
+    tel = server.telemetry_export()
+    lat = tel["latency_s"]["request_e2e"]
+    return n_req / dt, recall, lat, tel["batch"]["mean_occupancy"]
+
+
+def run(smoke: bool = False):
+    if smoke:
+        idx, queries, eids = _smoke_fixture()
+        policies, max_batch, n_req = ("adaptive",), 8, 48
+        sp = dict(k=10, cut=8, block_budget=8)
+    else:
+        _, queries, _, _, eids = collection()
+        idx, _ = built_index()
+        policies, max_batch, n_req = POLICIES, 32, 128
+        sp = dict(k=10, cut=8, block_budget=32)
+
+    for policy in policies:
+        p = SearchParams(policy=policy, **sp)
+        sync_qps, sync_rec = _sync_per_request(
+            idx, queries, eids, p, max_batch, n_req)
+        yield row(f"serve_sync_{policy}", 1e6 / sync_qps,
+                  qps=f"{sync_qps:.3g}", recall10=f"{sync_rec:.3f}",
+                  occupancy="1")
+
+        # offer 3x the sync capacity: the backlog is what the
+        # micro-batcher coalesces into high-occupancy launches
+        rate = 3.0 * sync_qps
+        deadline_s = min(0.05, max(0.002, 4.0 / sync_qps))
+        qps, rec, lat, occ = _async_open_loop(
+            idx, queries, eids, p, max_batch, n_req, rate, deadline_s)
+        yield row(f"serve_async_{policy}", 1e6 / qps,
+                  qps=f"{qps:.3g}", recall10=f"{rec:.3f}",
+                  occupancy=f"{occ:.1f}",
+                  p50_ms=f"{lat['p50']*1e3:.2f}",
+                  p95_ms=f"{lat['p95']*1e3:.2f}",
+                  p99_ms=f"{lat['p99']*1e3:.2f}",
+                  speedup=f"{qps / sync_qps:.2f}x")
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny collection, one policy (CI smoke)")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    for line in run(smoke=args.smoke):
+        print(line)

@@ -1,5 +1,5 @@
-"""Serving demo: the SeismicServer batched retrieval front-end plus a
-small LMDecoder generation loop (the two serving engines).
+"""Serving demo: the synchronous SeismicServer facade, the async
+deadline micro-batching server, and a small LMDecoder generation loop.
 
     PYTHONPATH=src python examples/serve_retrieval.py
 """
@@ -14,12 +14,11 @@ from repro.core.baselines import exact_search
 from repro.core.oracle import recall_at_k
 from repro.data import SyntheticSparseConfig, make_collection
 from repro.models.api import get_bundle
-from repro.serve.engine import LMDecoder, SeismicServer
+from repro.serve import AsyncSeismicServer, LMDecoder, SeismicServer
 from repro.sparse.ops import PaddedSparse
 
 
-def retrieval_demo():
-    print("== SeismicServer: batched approximate retrieval ==")
+def build_demo_index():
     cfg = SyntheticSparseConfig(dim=2048, n_docs=8192, n_queries=300,
                                 doc_nnz=96, query_nnz=32)
     docs_np, queries_np, _ = make_collection(cfg)
@@ -30,6 +29,11 @@ def retrieval_demo():
     index = build_index(docs, SeismicConfig(lam=192, beta=12, alpha=0.4,
                                             block_cap=32, summary_nnz=48),
                         list_chunk=32)
+    return docs, queries, index
+
+
+def retrieval_demo(docs, queries, index):
+    print("== SeismicServer: batched approximate retrieval ==")
     server = SeismicServer(index, SearchParams(k=10, cut=10,
                                                block_budget=16,
                                                policy="adaptive"),
@@ -45,12 +49,49 @@ def retrieval_demo():
           f"mean docs evaluated={result.docs_evaluated.mean():.0f}")
 
 
+def async_demo(queries, index):
+    """Submit per-request traffic with dispatch deadlines; print the
+    occupancy / latency / cache telemetry the server exports."""
+    print("== AsyncSeismicServer: deadline micro-batching ==")
+    server = AsyncSeismicServer(
+        index, SearchParams(k=10, cut=10, block_budget=16,
+                            policy="adaptive"),
+        max_batch=32, query_nnz=queries.nnz_max, deadline_s=0.01,
+        queue_bound=512, admission="reject", cache_size=512)
+    coords = np.asarray(queries.coords)
+    vals = np.asarray(queries.vals)
+    rng = np.random.default_rng(0)
+    n_req = 2 * queries.n                 # every query twice: cache hits
+    with server:
+        futs = []
+        t0 = time.time()
+        for i in range(n_req):
+            q = i % queries.n
+            futs.append(server.submit(coords[q], vals[q],
+                                      deadline_s=0.01))
+            time.sleep(float(rng.exponential(2e-4)))   # ~5k qps offered
+        for f in futs:
+            f.wait()
+        dt = time.time() - t0
+    tel = server.telemetry_export()
+    lat = tel["latency_s"]["request_e2e"]
+    done = sum(f.status == "done" for f in futs)
+    print(f"   {done}/{n_req} requests in {dt*1000:.0f} ms "
+          f"({done/dt:.0f} qps)")
+    print(f"   launches={tel['batch']['launches']}  "
+          f"mean occupancy={tel['batch']['mean_occupancy']:.1f}/32  "
+          f"max queue depth={tel['queue']['depth_max']}")
+    print(f"   latency p50={lat['p50']*1e3:.1f}ms "
+          f"p95={lat['p95']*1e3:.1f}ms p99={lat['p99']*1e3:.1f}ms")
+    print(f"   cache hit-rate={tel['cache']['hit_rate']:.2f} "
+          f"({tel['cache']['hits']} hits)")
+
+
 def decode_demo():
     print("== LMDecoder: KV-cache batched generation ==")
     bundle = get_bundle("gemma3-27b")          # reduced: dual-cache path
     cfg = bundle.reduced
-    params = bundle.init(jax.random.PRNGKey(0), {}, cfg) \
-        if False else bundle.init(jax.random.PRNGKey(0), cfg, {})
+    params = bundle.init(jax.random.PRNGKey(0), cfg, {})
     dec = LMDecoder(params, cfg, batch=4, max_seq=64)
     prompts = np.random.default_rng(0).integers(0, cfg.vocab, (4, 8))
     t0 = time.time()
@@ -60,5 +101,7 @@ def decode_demo():
 
 
 if __name__ == "__main__":
-    retrieval_demo()
+    docs, queries, index = build_demo_index()
+    retrieval_demo(docs, queries, index)
+    async_demo(queries, index)
     decode_demo()

@@ -51,10 +51,15 @@ Entry points
 ``search_pipeline(index, queries, p)``  jitted batched search
 ``run_pipeline(index, q_coords, q_vals, p)``  traceable core (use
 inside shard_map / larger jitted programs).
+``stage_fns`` / ``run_pipeline_staged``  the same pipeline as five
+standalone-jitted stages with per-stage wall-time reporting — the
+timing hooks behind serving telemetry and the stage benchmark.
 """
 from repro.retrieval.merge import merge_topk
 from repro.retrieval.params import SearchParams
-from repro.retrieval.pipeline import run_pipeline, search_pipeline
+from repro.retrieval.pipeline import (STAGES, run_pipeline,
+                                      run_pipeline_staged, search_pipeline,
+                                      stage_fns)
 from repro.retrieval.prep import prep_queries
 from repro.retrieval.router import route_batch, RoutedBatch
 from repro.retrieval.scorer import score_selection
@@ -65,5 +70,6 @@ __all__ = [
     "SearchParams", "RoutedBatch", "Selection",
     "prep_queries", "route_batch", "score_selection", "merge_topk",
     "run_pipeline", "search_pipeline",
+    "STAGES", "stage_fns", "run_pipeline_staged",
     "get_selector", "register_selector", "selector_names",
 ]

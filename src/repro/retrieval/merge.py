@@ -8,9 +8,22 @@ import jax.numpy as jnp
 def merge_topk(cand: jax.Array, scores: jax.Array, k: int, n_docs: int
                ) -> tuple[jax.Array, jax.Array, jax.Array]:
     """(cand [Q, C], scores [Q, C]) -> (top_s [Q, k], ids [Q, k] with -1
-    padding, docs_evaluated [Q])."""
-    top_s, pos = jax.lax.top_k(scores, k)
+    padding, docs_evaluated [Q]).
+
+    ``k`` may exceed the candidate-axis width C (tiny
+    ``block_budget * block_cap`` configs): the top-k clamps to C and
+    the tail pads with -1 ids / -inf scores, keeping the [Q, k] output
+    contract.
+    """
+    kk = min(k, scores.shape[-1])
+    top_s, pos = jax.lax.top_k(scores, kk)
     top_ids = jnp.take_along_axis(cand, pos, axis=1)
     top_ids = jnp.where(jnp.isfinite(top_s), top_ids, -1)
+    if kk < k:
+        qn = scores.shape[0]
+        top_s = jnp.concatenate(
+            [top_s, jnp.full((qn, k - kk), -jnp.inf, top_s.dtype)], axis=1)
+        top_ids = jnp.concatenate(
+            [top_ids, jnp.full((qn, k - kk), -1, top_ids.dtype)], axis=1)
     docs_evaluated = (cand < n_docs).sum(axis=-1)
     return top_s, top_ids.astype(jnp.int32), docs_evaluated

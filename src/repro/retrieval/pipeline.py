@@ -3,11 +3,15 @@
 ``run_pipeline`` is the traceable batch-first core shared by every
 execution surface (local search_batch, SeismicServer, the distributed
 shard_map search); ``search_pipeline`` is its jitted front door.
+``stage_fns`` / ``run_pipeline_staged`` expose the same pipeline as
+five standalone-jitted stages for per-stage latency attribution (the
+serving telemetry and the stage-throughput benchmark both hook here).
 """
 from __future__ import annotations
 
+import time
 from functools import partial
-from typing import TYPE_CHECKING
+from typing import TYPE_CHECKING, Callable
 
 import jax
 
@@ -47,3 +51,58 @@ def search_pipeline(index: SeismicIndex, queries: PaddedSparse,
     Returns (scores [Q,k], ids [Q,k] with -1 padding, docs_evaluated [Q]).
     """
     return run_pipeline(index, queries.coords, queries.vals, p)
+
+
+STAGES = ("prep", "router", "selector", "scorer", "merge")
+
+
+def stage_fns(index: SeismicIndex, p: SearchParams
+              ) -> dict[str, Callable]:
+    """Standalone-jitted stage functions (index and params closed over).
+
+    These are the per-stage timing hooks: each stage compiles on its
+    own so a caller can ``block_until_ready`` between stages and
+    attribute wall time, at the cost of materializing inter-stage
+    arrays (slightly slower end-to-end than the fused
+    ``search_pipeline``). Keyed by ``STAGES`` name.
+    """
+    select = get_selector(p.policy)
+    return {
+        "prep": jax.jit(
+            lambda c, v: prep_queries(c, v, index.dim, p.cut)),
+        "router": jax.jit(
+            lambda qd, ls: route_batch(index, qd, ls, p.use_kernel)),
+        "selector": jax.jit(lambda b: select(index, b, p)),
+        "scorer": jax.jit(
+            lambda b, s: score_selection(index, b, s, p.use_kernel)),
+        "merge": jax.jit(lambda c, s: merge_topk(c, s, p.k, index.n_docs)),
+    }
+
+
+def run_pipeline_staged(index: SeismicIndex, q_coords: jax.Array,
+                        q_vals: jax.Array, p: SearchParams,
+                        fns: dict[str, Callable] | None = None,
+                        record: Callable[[str, float], None] | None = None
+                        ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Stage-by-stage pipeline with per-stage wall-time reporting.
+
+    ``record(stage_name, seconds)`` is called once per stage with the
+    blocking wall time. Pass a prebuilt ``fns`` (from ``stage_fns``) to
+    reuse compiled stages across calls; fixed input shapes never
+    recompile. Output matches ``search_pipeline``.
+    """
+    if fns is None:
+        fns = stage_fns(index, p)
+
+    def timed(name, fn, *args):
+        t0 = time.perf_counter()
+        out = jax.block_until_ready(fn(*args))
+        if record is not None:
+            record(name, time.perf_counter() - t0)
+        return out
+
+    q_dense, lists, _ = timed("prep", fns["prep"], q_coords, q_vals)
+    batch = timed("router", fns["router"], q_dense, lists)
+    sel = timed("selector", fns["selector"], batch)
+    cand, scores = timed("scorer", fns["scorer"], batch, sel)
+    return timed("merge", fns["merge"], cand, scores)

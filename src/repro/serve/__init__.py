@@ -1,0 +1,23 @@
+"""Serving subsystem: async deadline-based micro-batching over the
+staged retrieval pipeline (see README.md in this package).
+
+    engine      thin synchronous facades (SeismicServer, LMDecoder)
+    queue       bounded deadline request queue + admission control
+    batcher     AsyncSeismicServer (the micro-batching server)
+    cache       quantized-fingerprint LRU result cache
+    telemetry   latency histograms / counters exported as plain dicts
+"""
+from repro.serve.batcher import AsyncSeismicServer, ServeResult
+from repro.serve.cache import LRUCache, query_fingerprint
+from repro.serve.engine import LMDecoder, RetrievalResult, SeismicServer
+from repro.serve.queue import (ADMISSION_POLICIES, Request, RequestQueue,
+                               ServeFuture)
+from repro.serve.telemetry import Histogram, ServerTelemetry
+
+__all__ = [
+    "AsyncSeismicServer", "ServeResult",
+    "SeismicServer", "RetrievalResult", "LMDecoder",
+    "RequestQueue", "Request", "ServeFuture", "ADMISSION_POLICIES",
+    "LRUCache", "query_fingerprint",
+    "Histogram", "ServerTelemetry",
+]

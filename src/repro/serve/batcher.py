@@ -1,0 +1,268 @@
+"""Deadline-based micro-batching front-end over the staged pipeline.
+
+``AsyncSeismicServer`` accepts single queries (``submit``) from any
+thread, coalesces whatever is in flight into fixed-shape
+``[max_batch, query_nnz]`` launches of the jitted ``search_pipeline``
+(dispatch on batch-full OR oldest-deadline-expiry, never recompiling),
+and fulfills per-request futures. Around that core sit admission
+control (bounded queue, ``reject`` / ``shed_oldest``), a quantized-
+fingerprint LRU result cache, and telemetry (per-stage latency when
+``stage_timing`` is on, queue depth, batch occupancy, cache hit-rate).
+
+The synchronous ``SeismicServer`` facade in ``engine`` remains the
+simple offline-batch path; this class is the serving path every
+future scaling layer (sharded serving, replication) plugs into.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import SeismicIndex
+from repro.retrieval import SearchParams, search_pipeline
+from repro.retrieval.pipeline import run_pipeline_staged, stage_fns
+from repro.serve.cache import LRUCache, query_fingerprint
+from repro.serve.queue import Request, RequestQueue, ServeFuture
+from repro.serve.telemetry import ServerTelemetry
+from repro.sparse.ops import PaddedSparse
+
+
+@dataclasses.dataclass
+class ServeResult:
+    """Per-request retrieval result with serving metadata."""
+
+    ids: np.ndarray            # int32 [k], -1 padding
+    scores: np.ndarray         # f32 [k]
+    docs_evaluated: int
+    cached: bool = False
+    latency_s: float = 0.0     # submit -> fulfil wall time
+    occupancy: int = 0         # real queries in the serving launch
+
+
+class AsyncSeismicServer:
+    """Micro-batching async retrieval server over one Seismic index.
+
+    Parameters
+    ----------
+    max_batch     fixed launch width; the jitted pipeline compiles once
+                  for ``[max_batch, query_nnz]`` and every dispatch
+                  pads up to it.
+    query_nnz     fixed per-query nnz width; longer queries keep their
+                  ``query_nnz`` heaviest coordinates.
+    deadline_s    default max time a request may wait for co-batching
+                  before a (possibly partial) launch is forced.
+    queue_bound   admission limit; beyond it ``admission`` applies
+                  ("reject" new requests or "shed_oldest" queued ones).
+    cache_size    LRU entries keyed on quantized query fingerprints;
+                  0 disables caching.
+    stage_timing  serve through the stage-by-stage pipeline and record
+                  ``stage_*`` latency histograms (slightly slower than
+                  the fused launch; keep off unless profiling).
+    """
+
+    def __init__(self, index: SeismicIndex, params: SearchParams, *,
+                 max_batch: int = 32, query_nnz: int = 32,
+                 deadline_s: float = 2e-3, queue_bound: int = 1024,
+                 admission: str = "reject", cache_size: int = 0,
+                 stage_timing: bool = False,
+                 telemetry: ServerTelemetry | None = None):
+        self.index = index
+        self.params = params
+        self.max_batch = max_batch
+        self.query_nnz = query_nnz
+        self.deadline_s = deadline_s
+        self.stage_timing = stage_timing
+        self.queue = RequestQueue(bound=queue_bound, policy=admission)
+        self.cache = LRUCache(cache_size) if cache_size > 0 else None
+        self.telemetry = telemetry if telemetry is not None \
+            else ServerTelemetry()
+        self._fns = stage_fns(index, params) if stage_timing else None
+        self._thread: threading.Thread | None = None
+
+    # ------------------------------------------------------- lifecycle
+
+    def start(self, warmup: bool = True) -> "AsyncSeismicServer":
+        if self._thread is not None:
+            raise RuntimeError("server already started")
+        if self.queue.closed:
+            raise RuntimeError("server was stopped; its queue is closed "
+                               "— build a new AsyncSeismicServer")
+        if warmup:
+            self.warmup()
+        self._thread = threading.Thread(target=self._worker,
+                                        name="seismic-batcher",
+                                        daemon=True)
+        self._thread.start()
+        return self
+
+    def stop(self) -> None:
+        """Close admission, drain queued requests, join the worker."""
+        self.queue.close()
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def __enter__(self) -> "AsyncSeismicServer":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+    def warmup(self) -> None:
+        """Compile the fixed-shape launch before serving traffic."""
+        coords = jnp.zeros((self.max_batch, self.query_nnz), jnp.int32)
+        vals = jnp.zeros((self.max_batch, self.query_nnz), jnp.float32)
+        if self.stage_timing:
+            jax.block_until_ready(run_pipeline_staged(
+                self.index, coords, vals, self.params, fns=self._fns))
+        else:
+            jax.block_until_ready(search_pipeline(
+                self.index, PaddedSparse(coords, vals, self.index.dim),
+                self.params))
+
+    # ------------------------------------------------------ submission
+
+    def submit(self, coords, vals,
+               deadline_s: float | None = None) -> ServeFuture:
+        """Enqueue one sparse query; returns its completion future.
+
+        Cache hits fulfil immediately without touching the queue.
+        Rejected / shed requests get a failed future (``status`` set),
+        never an exception on the submitting thread.
+        """
+        tel = self.telemetry
+        tel.inc("requests")
+        c, v = self._normalize(coords, vals)
+        key = None
+        if self.cache is not None:
+            key = query_fingerprint(c, v)
+            hit = self.cache.get(key)       # hit/miss counted by the LRU
+            if hit is not None:
+                fut = ServeFuture()
+                ids, scores, ev = hit
+                fut._set(ServeResult(ids=ids.copy(), scores=scores.copy(),
+                                     docs_evaluated=ev, cached=True))
+                return fut
+        now = time.monotonic()
+        req = Request(coords=c, vals=v, submit_t=now,
+                      deadline=now + (self.deadline_s if deadline_s is None
+                                      else deadline_s),
+                      future=ServeFuture(), cache_key=key)
+        status, shed = self.queue.put(req)
+        if status != "ok":
+            tel.inc(status)                 # "rejected" or "closed"
+            req.future._fail(status)
+        elif shed is not None:
+            tel.inc("shed")
+            shed.future._fail("shed")
+        tel.observe_queue_depth(self.queue.depth)
+        return req.future
+
+    def search(self, queries: PaddedSparse,
+               deadline_s: float | None = None):
+        """Synchronous batch convenience: submit every row, wait all.
+
+        Returns an ``engine.RetrievalResult`` so callers can swap the
+        sync facade for the async server without changing result
+        handling. Rejected/shed rows come back as -1 ids.
+        """
+        from repro.serve.engine import RetrievalResult
+        coords = np.asarray(queries.coords)
+        vals = np.asarray(queries.vals)
+        futs = [self.submit(coords[i], vals[i], deadline_s)
+                for i in range(coords.shape[0])]
+        ids = np.full((len(futs), self.params.k), -1, np.int32)
+        scores = np.full((len(futs), self.params.k), -np.inf, np.float32)
+        ev = np.zeros((len(futs),), np.int32)
+        for i, f in enumerate(futs):
+            f.wait()
+            if f.status == "done":
+                r = f._result
+                ids[i], scores[i], ev[i] = r.ids, r.scores, \
+                    r.docs_evaluated
+        return RetrievalResult(ids=ids, scores=scores, docs_evaluated=ev)
+
+    # ---------------------------------------------------------- worker
+
+    def _worker(self) -> None:
+        while True:
+            batch = self.queue.next_batch(self.max_batch)
+            if batch is None:
+                return
+            try:
+                self._launch(batch)
+            except Exception as e:   # noqa: BLE001 — fail the batch, keep serving
+                for r in batch:
+                    r.future._fail(f"error: {type(e).__name__}: {e}")
+
+    def _launch(self, batch: list[Request]) -> None:
+        """One fixed-shape pipeline launch serving ``len(batch)`` rows."""
+        tel = self.telemetry
+        n = len(batch)
+        coords = np.zeros((self.max_batch, self.query_nnz), np.int32)
+        vals = np.zeros((self.max_batch, self.query_nnz), np.float32)
+        for i, r in enumerate(batch):
+            coords[i], vals[i] = r.coords, r.vals
+        dispatch_t = time.monotonic()
+        t0 = time.perf_counter()
+        if self.stage_timing:
+            scores, ids, ev = run_pipeline_staged(
+                self.index, jnp.asarray(coords), jnp.asarray(vals),
+                self.params, fns=self._fns,
+                record=lambda s, dt: tel.record_latency(f"stage_{s}", dt))
+        else:
+            scores, ids, ev = jax.block_until_ready(search_pipeline(
+                self.index,
+                PaddedSparse(jnp.asarray(coords), jnp.asarray(vals),
+                             self.index.dim),
+                self.params))
+        tel.record_latency("launch", time.perf_counter() - t0)
+        tel.inc("batches")
+        tel.observe_occupancy(n)
+        ids = np.asarray(ids)
+        scores = np.asarray(scores)
+        ev = np.asarray(ev)
+        done_t = time.monotonic()
+        for i, r in enumerate(batch):
+            if self.cache is not None and r.cache_key is not None:
+                # copies: don't let caller mutation poison hits, don't
+                # pin the whole launch arrays via views
+                self.cache.put(r.cache_key,
+                               (ids[i].copy(), scores[i].copy(),
+                                int(ev[i])))
+            tel.record_latency("queue_wait", dispatch_t - r.submit_t)
+            tel.record_latency("request_e2e", done_t - r.submit_t)
+            r.future._set(ServeResult(
+                ids=ids[i], scores=scores[i], docs_evaluated=int(ev[i]),
+                cached=False, latency_s=done_t - r.submit_t, occupancy=n))
+        tel.inc("served", n)
+
+    # --------------------------------------------------------- helpers
+
+    def _normalize(self, coords, vals) -> tuple[np.ndarray, np.ndarray]:
+        """Pad/truncate one sparse query to the fixed ``query_nnz``."""
+        c = np.asarray(coords, np.int32).ravel()
+        v = np.asarray(vals, np.float32).ravel()
+        if c.shape != v.shape:
+            raise ValueError(f"coords {c.shape} vs vals {v.shape}")
+        if c.size > self.query_nnz:          # keep heaviest coordinates
+            keep = np.argpartition(v, -self.query_nnz)[-self.query_nnz:]
+            c, v = c[keep], v[keep]
+        out_c = np.zeros((self.query_nnz,), np.int32)
+        out_v = np.zeros((self.query_nnz,), np.float32)
+        out_c[:c.size], out_v[:v.size] = c, v
+        out_c[out_v <= 0] = 0                # canonical padding slots
+        out_v[out_v <= 0] = 0.0
+        return out_c, out_v
+
+    def telemetry_export(self) -> dict:
+        """Telemetry snapshot plus cache stats, as one plain dict."""
+        out = self.telemetry.export()
+        out["cache"] = self.cache.stats() if self.cache is not None \
+            else None
+        return out

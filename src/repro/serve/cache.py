@@ -1,0 +1,80 @@
+"""Query-result cache: LRU over quantized sparse-query fingerprints.
+
+Learned sparse queries repeat (head queries, paraphrase dedup upstream)
+and SPLADE weights carry more precision than retrieval needs, so the
+cache key quantizes each query to an 8-bit impact grid: two queries
+whose coordinates match and whose relative weights agree to ~0.4%
+share a fingerprint and one pipeline launch serves both.
+"""
+from __future__ import annotations
+
+import struct
+import threading
+from collections import OrderedDict
+
+import numpy as np
+
+
+def query_fingerprint(coords: np.ndarray, vals: np.ndarray,
+                      bits: int = 8) -> bytes:
+    """Order-invariant quantized fingerprint of one padded-sparse query.
+
+    Padding entries (val <= 0) are dropped; surviving (coord, val)
+    pairs are coord-sorted; values are scaled to the row max and
+    rounded to a ``bits``-bit grid. The row max itself enters coarsely
+    (eighth-of-an-octave buckets) so score *scale* changes only bust
+    the cache when they could change the top-k ordering downstream.
+    """
+    v = np.asarray(vals, np.float32).ravel()
+    c = np.asarray(coords, np.int64).ravel()
+    live = v > 0
+    c, v = c[live], v[live]
+    if c.size == 0:
+        return b"empty"
+    order = np.argsort(c, kind="stable")
+    c, v = c[order], v[order]
+    vmax = float(v.max())
+    q = np.round(v / vmax * ((1 << bits) - 1)).astype(np.uint16)
+    scale_bucket = int(np.round(np.log2(vmax) * 8))
+    return (c.astype(np.int32).tobytes() + q.tobytes()
+            + struct.pack("<i", scale_bucket))
+
+
+class LRUCache:
+    """Thread-safe LRU mapping fingerprint -> served result payload."""
+
+    def __init__(self, capacity: int):
+        self.capacity = capacity
+        self._d: OrderedDict[bytes, object] = OrderedDict()
+        self._lock = threading.Lock()
+        self.hits = 0
+        self.misses = 0
+
+    def get(self, key: bytes):
+        with self._lock:
+            if key in self._d:
+                self._d.move_to_end(key)
+                self.hits += 1
+                return self._d[key]
+            self.misses += 1
+            return None
+
+    def put(self, key: bytes, value) -> None:
+        if self.capacity <= 0:
+            return
+        with self._lock:
+            self._d[key] = value
+            self._d.move_to_end(key)
+            while len(self._d) > self.capacity:
+                self._d.popitem(last=False)
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._d)
+
+    def stats(self) -> dict:
+        with self._lock:
+            total = self.hits + self.misses
+            return {"size": len(self._d), "capacity": self.capacity,
+                    "hits": self.hits, "misses": self.misses,
+                    "hit_rate": self.hits / total if total else 0.0}

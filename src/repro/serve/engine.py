@@ -1,15 +1,20 @@
-"""Serving engines.
+"""Synchronous serving facades (thin; the serving *system* lives in the
+sibling modules of ``repro.serve``).
 
 ``LMDecoder``       — KV-cache decode loop around decode_step (greedy or
                       temperature sampling) with batched requests.
-``SeismicServer``   — batched approximate retrieval over a (optionally
-                      doc-sharded) Seismic index; pads request batches
-                      to a fixed size so the jitted search never
-                      recompiles; reports docs-evaluated telemetry.
+``SeismicServer``   — offline-batch retrieval: pads a whole request
+                      batch to a fixed size and chunks it through the
+                      jitted pipeline. Kept for back-compat and bulk
+                      jobs; online traffic should use
+                      ``repro.serve.batcher.AsyncSeismicServer``, which
+                      micro-batches in-flight queries instead of
+                      padding each call.
 """
 from __future__ import annotations
 
 import dataclasses
+import time
 
 import numpy as np
 import jax
@@ -19,6 +24,7 @@ from repro.configs.base import TransformerConfig
 from repro.core.types import SeismicIndex
 from repro.retrieval import SearchParams, search_pipeline
 from repro.models.transformer import lm
+from repro.serve.telemetry import ServerTelemetry
 from repro.sparse.ops import PaddedSparse
 
 
@@ -72,14 +78,21 @@ class SeismicServer:
     so the jitted pipeline never recompiles."""
 
     def __init__(self, index: SeismicIndex, params: SearchParams,
-                 max_batch: int = 256):
+                 max_batch: int = 256, *,
+                 telemetry: ServerTelemetry | None = None):
         self.index = index
         self.params = params
         self.max_batch = max_batch
+        self.telemetry = telemetry
 
     def search(self, queries: PaddedSparse) -> RetrievalResult:
         q = queries
         n = q.coords.shape[0]
+        if n == 0:
+            return RetrievalResult(
+                ids=np.zeros((0, self.params.k), np.int32),
+                scores=np.zeros((0, self.params.k), np.float32),
+                docs_evaluated=np.zeros((0,), np.int32))
         pad = (-n) % self.max_batch
         if pad:
             coords = jnp.pad(q.coords, ((0, pad), (0, 0)))
@@ -89,8 +102,21 @@ class SeismicServer:
         for s in range(0, q.coords.shape[0], self.max_batch):
             chunk = PaddedSparse(q.coords[s:s + self.max_batch],
                                  q.vals[s:s + self.max_batch], q.dim)
-            outs.append(search_pipeline(self.index, chunk, self.params))
+            if self.telemetry is None:      # async dispatch, convert at end
+                outs.append(search_pipeline(self.index, chunk, self.params))
+                continue
+            t0 = time.perf_counter()
+            out = jax.block_until_ready(
+                search_pipeline(self.index, chunk, self.params))
+            self.telemetry.record_latency(
+                "launch", time.perf_counter() - t0)
+            self.telemetry.inc("batches")
+            self.telemetry.observe_occupancy(min(self.max_batch, n - s))
+            outs.append(out)
         scores = np.concatenate([np.asarray(o[0]) for o in outs])[:n]
         ids = np.concatenate([np.asarray(o[1]) for o in outs])[:n]
         ev = np.concatenate([np.asarray(o[2]) for o in outs])[:n]
+        if self.telemetry is not None:
+            self.telemetry.inc("requests", n)
+            self.telemetry.inc("served", n)
         return RetrievalResult(ids=ids, scores=scores, docs_evaluated=ev)

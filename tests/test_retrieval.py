@@ -243,3 +243,30 @@ def test_search_batch_is_pipeline(small_index, small_collection):
     np.testing.assert_array_equal(np.asarray(i0), np.asarray(i1))
     np.testing.assert_array_equal(np.asarray(s0), np.asarray(s1))
     np.testing.assert_array_equal(np.asarray(e0), np.asarray(e1))
+
+
+# ------------------------------------------------------- merge guards
+
+def test_merge_topk_k_wider_than_candidates():
+    """k > C must clamp to the candidate axis and pad with -1 / -inf."""
+    from repro.retrieval import merge_topk
+    cand = jnp.array([[3, 7, 9], [2, 4, 11]], jnp.int32)   # 11 = sentinel
+    scores = jnp.array([[1.0, 3.0, 2.0], [5.0, -jnp.inf, -jnp.inf]])
+    top_s, ids, ev = merge_topk(cand, scores, k=6, n_docs=11)
+    assert top_s.shape == (2, 6) and ids.shape == (2, 6)
+    np.testing.assert_array_equal(np.asarray(ids[0]), [7, 9, 3, -1, -1, -1])
+    np.testing.assert_array_equal(np.asarray(ids[1]), [2, -1, -1, -1, -1, -1])
+    assert np.asarray(top_s)[0, :3].tolist() == [3.0, 2.0, 1.0]
+    assert (np.asarray(top_s)[:, 3:] == -np.inf).all()
+    np.testing.assert_array_equal(np.asarray(ev), [3, 2])
+
+
+def test_pipeline_tiny_block_budget_large_k(small_index, small_collection):
+    """block_budget * block_cap < k must not crash the pipeline."""
+    idx, icfg = small_index
+    _, queries, *_ = small_collection
+    p = SearchParams(k=2 * icfg.block_cap, cut=8, block_budget=1,
+                     policy="budget")
+    s, ids, _ = search_pipeline(idx, queries, p)
+    assert ids.shape == (queries.n, 2 * icfg.block_cap)
+    assert (np.asarray(ids)[:, -1] == -1).all()   # padded tail

@@ -38,6 +38,36 @@ def test_seismic_server_batching():
     assert res.ids.max() < docs.n
 
 
+@pytest.mark.parametrize("n", [1, 5, 13])
+def test_seismic_server_matches_pipeline(small_index, small_collection, n):
+    """Padding edges: a single query, a partial batch, and a count that
+    is not a multiple of max_batch — the pad-and-chunk facade must
+    reproduce the un-padded ``search_pipeline`` output exactly."""
+    from repro.retrieval import SearchParams, search_pipeline
+    from repro.serve.engine import SeismicServer
+    idx, _ = small_index
+    _, queries, *_ = small_collection
+    p = SearchParams(k=5, cut=8, block_budget=8)
+    sub = queries[:n]
+    want_s, want_ids, want_ev = search_pipeline(idx, sub, p)
+    res = SeismicServer(idx, p, max_batch=8).search(sub)
+    np.testing.assert_array_equal(res.ids, np.asarray(want_ids))
+    np.testing.assert_allclose(res.scores, np.asarray(want_s), rtol=1e-6)
+    np.testing.assert_array_equal(res.docs_evaluated, np.asarray(want_ev))
+
+
+def test_seismic_server_empty_batch(small_index, small_collection):
+    from repro.retrieval import SearchParams
+    from repro.serve.engine import SeismicServer
+    idx, _ = small_index
+    _, queries, *_ = small_collection
+    p = SearchParams(k=5, cut=8, block_budget=8)
+    res = SeismicServer(idx, p, max_batch=8).search(queries[:0])
+    assert res.ids.shape == (0, 5)
+    assert res.scores.shape == (0, 5)
+    assert res.docs_evaluated.shape == (0,)
+
+
 def test_lm_decoder_generates():
     from repro.models.api import get_bundle
     from repro.serve.engine import LMDecoder
