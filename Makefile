@@ -9,9 +9,11 @@ dev:
 test:
 	PYTHONPATH=src $(PY) -m pytest -x -q
 
+# interpret-mode kernel/router parity + core invariants (the CI fast job)
 test-fast:
 	PYTHONPATH=src $(PY) -m pytest -q tests/test_retrieval.py \
-		tests/test_seismic_core.py tests/test_sparse_ops.py \
+		tests/test_superblocks.py tests/test_seismic_core.py \
+		tests/test_sparse_ops.py tests/test_kernels.py \
 		tests/test_serve_async.py
 
 bench:

@@ -6,75 +6,141 @@ stage, so the numbers isolate where a query batch spends its time.
 Derived metrics:
 
   router   routed_blocks_s  — summary inner products / second
-                              (Q * cut * n_blocks per batch)
+                              (Q * router_work(cfg, p) per batch)
+           summary_dots     — router-stage work per query: flat scores
+                              cut * n_blocks summaries, hierarchical
+                              scores cut * n_superblocks coarse
+                              summaries + superblock_budget * fanout
+                              child summaries (the BMP-style two-tier
+                              route)
   scorer   scored_docs_s    — exact forward-index scorings / second
                               (deduped candidates, sentinels excluded)
   e2e      qps + recall@10  — whole-pipeline sanity per policy
 
-Run all three registry policies (budget / adaptive / global_threshold);
-the adaptive selector's time includes its stage-1 scoring bootstrap.
+Runs all three registry policies (budget / adaptive / global_threshold)
+twice: flat routing, then hierarchical routing on a superblock-built
+index (SUPERBLOCK_FANOUT / SUPERBLOCK_BUDGET), and prints the per-query
+router-work reduction. The hierarchical rows must hold selector recall
+while evaluating >= 2x fewer summary dots (work_vs_flat >= 2).
 
     PYTHONPATH=src python -m benchmarks.pipeline_throughput
 """
 from __future__ import annotations
 
+import dataclasses
+
 import jax
 import numpy as np
 
-from benchmarks.common import (built_index, collection, mean_recall, row,
-                               timeit_us)
-from repro.retrieval import SearchParams, search_pipeline, stage_fns
+from benchmarks.common import (INDEX, built_index, collection, mean_recall,
+                               row, timeit_us)
+from repro.core import build_index
+from repro.retrieval import (SearchParams, router_work, search_pipeline,
+                             stage_fns)
 
 POLICIES = ("budget", "adaptive", "global_threshold")
+
+# coarse-tier operating point: 18 blocks -> 3 superblocks per list;
+# keeping 8 of the 24 probed superblocks halves router work (144 -> 72
+# summary dots per query) at equal selector recall on the synthetic
+# collection (see ISSUE 3 acceptance)
+SUPERBLOCK_FANOUT = 6
+SUPERBLOCK_BUDGET = 8
+
+_hier_cache: dict = {}
+
+
+def hier_index():
+    if "idx" not in _hier_cache:
+        docs, *_ = collection()
+        icfg = dataclasses.replace(INDEX,
+                                   superblock_fanout=SUPERBLOCK_FANOUT)
+        idx = build_index(docs, icfg, list_chunk=32)
+        jax.block_until_ready(idx.sup_q)
+        _hier_cache["idx"] = idx
+    return _hier_cache["idx"]
+
+
+def _policy_rows(tag, idx, p, queries, eids):
+    """Stage + e2e rows for one (index, params) pair. Returns
+    (rows, recall@10, summary_dots_per_query) so the caller can emit
+    the flat-vs-hier reduction row without re-running the pipeline."""
+    rows = []
+    qn = queries.n
+    fns = stage_fns(idx, p)   # the retrieval-layer timing hooks
+    prep, route, select, score, merge = (
+        fns["prep"], fns["router"], fns["selector"], fns["scorer"],
+        fns["merge"])
+
+    # materialize stage inputs once
+    q_dense, lists, _ = jax.block_until_ready(
+        prep(queries.coords, queries.vals))
+    batch = jax.block_until_ready(route(q_dense, lists))
+    sel = jax.block_until_ready(select(batch))
+    cand, scores = jax.block_until_ready(score(batch, sel))
+    _ = jax.block_until_ready(merge(cand, scores))
+
+    us_prep = timeit_us(prep, queries.coords, queries.vals)
+    us_route = timeit_us(route, q_dense, lists)
+    us_select = timeit_us(select, batch)
+    us_score = timeit_us(score, batch, sel)
+    us_merge = timeit_us(merge, cand, scores)
+
+    work = router_work(idx.config, p)            # summary dots / query
+    routed = qn * work
+    _, ids, ev = search_pipeline(idx, queries, p)
+    scored = int(np.asarray(ev).sum())
+    rows.append(row(f"pipe_prep_{tag}", us_prep, q=qn))
+    rows.append(row(f"pipe_router_{tag}", us_route,
+                    routed_blocks_s=f"{routed / (us_route * 1e-6):.3g}",
+                    summary_dots=work))
+    rows.append(row(f"pipe_selector_{tag}", us_select,
+                    blocks=p.block_budget))
+    rows.append(row(f"pipe_scorer_{tag}", us_score,
+                    scored_docs_s=f"{scored / (us_score * 1e-6):.3g}"))
+    rows.append(row(f"pipe_merge_{tag}", us_merge, k=p.k))
+
+    us_e2e = timeit_us(lambda: search_pipeline(idx, queries, p))
+    rec = mean_recall(np.asarray(ids), eids)
+    rows.append(row(f"pipe_e2e_{tag}", us_e2e,
+                    qps=f"{qn / (us_e2e * 1e-6):.3g}",
+                    recall10=f"{rec:.3f}",
+                    docs_eval=int(np.asarray(ev).mean())))
+    return rows, rec, work
 
 
 def run():
     _, queries, _, _, eids = collection()
-    idx, _ = built_index()
-    qn = queries.n
-    nb = idx.config.n_blocks
+    idx_flat, _ = built_index()
+    idx_hier = hier_index()
 
     for policy in POLICIES:
-        p = SearchParams(k=10, cut=8, block_budget=32, policy=policy)
-        fns = stage_fns(idx, p)   # the retrieval-layer timing hooks
-        prep, route, select, score, merge = (
-            fns["prep"], fns["router"], fns["selector"], fns["scorer"],
-            fns["merge"])
+        pf = SearchParams(k=10, cut=8, block_budget=32, policy=policy)
+        ph = dataclasses.replace(pf, superblock_fanout=SUPERBLOCK_FANOUT,
+                                 superblock_budget=SUPERBLOCK_BUDGET)
+        rows_f, rf, wf = _policy_rows(policy, idx_flat, pf, queries, eids)
+        rows_h, rh, wh = _policy_rows(f"hier_{policy}", idx_hier, ph,
+                                      queries, eids)
+        yield from rows_f
+        yield from rows_h
 
-        # materialize stage inputs once
-        q_dense, lists, _ = jax.block_until_ready(
-            prep(queries.coords, queries.vals))
-        batch = jax.block_until_ready(route(q_dense, lists))
-        sel = jax.block_until_ready(select(batch))
-        cand, scores = jax.block_until_ready(score(batch, sel))
-        _, ids, ev = jax.block_until_ready(merge(cand, scores))
-
-        us_prep = timeit_us(prep, queries.coords, queries.vals)
-        us_route = timeit_us(route, q_dense, lists)
-        us_select = timeit_us(select, batch)
-        us_score = timeit_us(score, batch, sel)
-        us_merge = timeit_us(merge, cand, scores)
-
-        routed = qn * p.cut * nb
-        scored = int(np.asarray(ev).sum())
-        yield row(f"pipe_prep_{policy}", us_prep, q=qn)
-        yield row(f"pipe_router_{policy}", us_route,
-                  routed_blocks_s=f"{routed / (us_route * 1e-6):.3g}")
-        yield row(f"pipe_selector_{policy}", us_select,
-                  blocks=p.block_budget)
-        yield row(f"pipe_scorer_{policy}", us_score,
-                  scored_docs_s=f"{scored / (us_score * 1e-6):.3g}")
-        yield row(f"pipe_merge_{policy}", us_merge, k=p.k)
-
-        us_e2e = timeit_us(lambda: search_pipeline(idx, queries, p))
-        _, ids, ev = search_pipeline(idx, queries, p)
-        yield row(f"pipe_e2e_{policy}", us_e2e,
-                  qps=f"{qn / (us_e2e * 1e-6):.3g}",
-                  recall10=f"{mean_recall(np.asarray(ids), eids):.3f}",
-                  docs_eval=int(np.asarray(ev).mean()))
+        reduction = wf / wh
+        ok = reduction >= 2.0 and rh >= rf - 0.01
+        yield row(f"pipe_router_reduction_{policy}", 0.0,
+                  summary_dots_flat=wf, summary_dots_hier=wh,
+                  work_vs_flat=f"{reduction:.2f}x",
+                  recall_flat=f"{rf:.3f}", recall_hier=f"{rh:.3f}",
+                  meets_2x_at_equal_recall=ok)
 
 
 if __name__ == "__main__":
     print("name,us_per_call,derived")
+    bad = []
     for line in run():
         print(line)
+        if "meets_2x_at_equal_recall=False" in line:
+            bad.append(line)
+    if bad:
+        raise SystemExit(
+            "router-work acceptance failed (need >= 2x summary-dot "
+            "reduction at equal recall):\n" + "\n".join(bad))

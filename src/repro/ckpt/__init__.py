@@ -1,4 +1,5 @@
 from repro.ckpt.checkpoint import (CheckpointManager, load_checkpoint,
-                                   save_checkpoint)
+                                   load_index, save_checkpoint, save_index)
 
-__all__ = ["CheckpointManager", "save_checkpoint", "load_checkpoint"]
+__all__ = ["CheckpointManager", "save_checkpoint", "load_checkpoint",
+           "save_index", "load_index"]

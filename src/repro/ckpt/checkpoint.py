@@ -105,6 +105,78 @@ def load_checkpoint(path: str, like_tree, *, step: int | None = None,
     return jax.tree_util.tree_unflatten(treedef, out), step
 
 
+_INDEX_MANIFEST = "seismic_index.json"
+
+
+def save_index(path: str, index, *, step: int = 0) -> str:
+    """Persist a ``SeismicIndex`` atomically (named-field npz + config
+    JSON). Optional tiers (compact forward index, superblock summaries)
+    are stored only when present, so old loaders skip unknown fields
+    and new loaders default absent fields to ``None``."""
+    import dataclasses
+    final = os.path.join(path, f"index_{step:08d}")
+    tmp = final + ".tmp"
+    os.makedirs(tmp, exist_ok=True)
+    arrays = dict(fwd_coords=np.asarray(index.fwd.coords),
+                  fwd_vals=np.asarray(index.fwd.vals))
+    for f in dataclasses.fields(type(index)):
+        if f.name in ("fwd", "config"):
+            continue
+        v = getattr(index, f.name)
+        if v is not None:
+            arrays[f.name] = np.asarray(v)
+    np.savez(os.path.join(tmp, "index.npz"), **arrays)
+    manifest = dict(step=step, dim=index.fwd.dim,
+                    config=dataclasses.asdict(index.config))
+    with open(os.path.join(tmp, _INDEX_MANIFEST), "w") as f:
+        json.dump(manifest, f)
+    # overwrite without a commit gap: move the old dir aside first, so
+    # a crash at any point leaves either the old or the new committed
+    # (.old/.tmp dirs are skipped by the loader's step scan)
+    old = final + ".old"
+    if os.path.exists(old):
+        shutil.rmtree(old)
+    if os.path.exists(final):
+        os.rename(final, old)
+    os.rename(tmp, final)           # atomic commit
+    shutil.rmtree(old, ignore_errors=True)
+    return final
+
+
+def load_index(path: str, *, step: int | None = None):
+    """Restore a ``SeismicIndex`` saved by :func:`save_index`.
+
+    Back-compat: checkpoints written before the superblock tier (or
+    before the compact forward index) simply lack those npz keys; the
+    loader leaves them ``None`` and rebuilds the config through
+    ``SeismicConfig(**...)`` defaults, so a pre-superblock checkpoint
+    loads as a flat-routing index unchanged."""
+    import dataclasses
+    from repro.core.types import SeismicConfig, SeismicIndex
+    if step is None:
+        steps = [int(d.split("_")[1]) for d in os.listdir(path)
+                 if d.startswith("index_") and d.split("_")[1].isdigit()]
+        if not steps:
+            raise FileNotFoundError(f"no committed index under {path}")
+        step = max(steps)
+    d = os.path.join(path, f"index_{step:08d}")
+    with open(os.path.join(d, _INDEX_MANIFEST)) as f:
+        manifest = json.load(f)
+    known = {f.name for f in dataclasses.fields(SeismicConfig)}
+    cfg = SeismicConfig(**{k: v for k, v in manifest["config"].items()
+                           if k in known})
+    from repro.sparse.ops import PaddedSparse
+    with np.load(os.path.join(d, "index.npz")) as z:
+        arrays = {k: z[k] for k in z.files}
+    fwd = PaddedSparse(jax.numpy.asarray(arrays.pop("fwd_coords")),
+                       jax.numpy.asarray(arrays.pop("fwd_vals")),
+                       manifest["dim"])
+    fields = {f.name for f in dataclasses.fields(SeismicIndex)}
+    kwargs = {k: jax.numpy.asarray(v) for k, v in arrays.items()
+              if k in fields}
+    return SeismicIndex(fwd=fwd, config=cfg, **kwargs)
+
+
 class CheckpointManager:
     """Async save + keep-last-k retention."""
 

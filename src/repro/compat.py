@@ -1,0 +1,100 @@
+"""jax version-compat shims (container pins jax 0.4.37).
+
+The codebase targets the modern mesh API (``jax.set_mesh``,
+``jax.sharding.AxisType``, ``jax.sharding.get_abstract_mesh``,
+``jax.make_mesh(..., axis_types=...)``, ``jax.shard_map``). On older
+jax these names are missing although the underlying machinery exists
+(``Mesh`` is a context manager, ``jax.experimental.shard_map`` takes
+``check_rep``). ``install()`` fills ONLY the missing attributes —
+every shim is gated on ``hasattr``, so on a jax that already provides
+the API this module is a no-op and the real implementations win.
+
+Imported for its side effect from ``repro/__init__.py`` so every
+entry point (tests, benchmarks, subprocess snippets) that touches any
+``repro`` module gets the shims before it calls the modern API.
+"""
+from __future__ import annotations
+
+import contextlib
+import functools
+
+import jax
+
+
+def _ambient_mesh():
+    """The mesh made ambient by ``set_mesh`` (physical Mesh or None)."""
+    from jax._src import mesh as mesh_lib
+    m = mesh_lib.thread_resources.env.physical_mesh
+    return None if m.empty else m
+
+
+def install() -> None:
+    # --- jax.sharding.AxisType (sharding-in-types enum, jax >= 0.5) ---
+    if not hasattr(jax.sharding, "AxisType"):
+        class AxisType:  # minimal stand-in: only identity is consumed
+            Auto = "auto"
+            Explicit = "explicit"
+            Manual = "manual"
+        jax.sharding.AxisType = AxisType
+
+    # --- jax.sharding.get_abstract_mesh ------------------------------
+    if not hasattr(jax.sharding, "get_abstract_mesh"):
+        def get_abstract_mesh():
+            m = _ambient_mesh()
+            return m.abstract_mesh if m is not None else None
+        jax.sharding.get_abstract_mesh = get_abstract_mesh
+
+    # --- jax.set_mesh (context manager form) --------------------------
+    if not hasattr(jax, "set_mesh"):
+        @contextlib.contextmanager
+        def set_mesh(mesh):
+            with mesh:  # legacy Mesh context: sets thread_resources
+                yield mesh
+        jax.set_mesh = set_mesh
+
+    # --- jax.make_mesh(..., axis_types=...) ---------------------------
+    # signature inspection, NOT a probe call: constructing a Mesh would
+    # initialize the backend as a side effect of `import repro`
+    import inspect
+    try:
+        params = inspect.signature(jax.make_mesh).parameters
+        _needs_axis_types_shim = "axis_types" not in params
+    except (TypeError, ValueError):  # unintrospectable: assume modern
+        _needs_axis_types_shim = False
+    if _needs_axis_types_shim:
+        _orig_make_mesh = jax.make_mesh
+
+        @functools.wraps(_orig_make_mesh)
+        def make_mesh(axis_shapes, axis_names, *, devices=None,
+                      axis_types=None):
+            del axis_types  # legacy meshes have no per-axis types
+            return _orig_make_mesh(axis_shapes, axis_names, devices=devices)
+        jax.make_mesh = make_mesh
+
+    # --- jax.lax.axis_size -------------------------------------------
+    if not hasattr(jax.lax, "axis_size"):
+        def axis_size(name):
+            from jax._src import core
+            frame = core.axis_frame(name)  # returns the size on 0.4.x
+            return getattr(frame, "size", frame)
+        jax.lax.axis_size = axis_size
+
+    # --- jax.shard_map (top-level, check_vma kwarg) -------------------
+    if not hasattr(jax, "shard_map"):
+        from jax.experimental.shard_map import shard_map as _shard_map
+
+        def shard_map(f, *, mesh=None, in_specs, out_specs, check_vma=True,
+                      **kw):
+            if mesh is None:  # modern jax resolves the ambient mesh
+                mesh = _ambient_mesh()
+                if mesh is None:
+                    raise ValueError(
+                        "shard_map: no mesh passed and no ambient mesh "
+                        "(enter one with jax.set_mesh)")
+            return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                              out_specs=out_specs, check_rep=check_vma,
+                              **kw)
+        jax.shard_map = shard_map
+
+
+install()

@@ -9,6 +9,11 @@ Pipeline per coordinate i (one inverted list):
      split at ``block_cap`` boundaries
   4. summaries — coordinate-wise max per block (Eq. 2), alpha-mass
      pruned (Def. 3.1), 8-bit quantized (§5.3)
+  5. superblocks (cfg.superblock_fanout > 0) — BMP-style coarse tier:
+     every ``fanout`` consecutive physical blocks get one summary that
+     coordinate-wise dominates its children (round-up requantized), so
+     the router can prune whole superblocks before touching per-block
+     summaries
 
 TPU adaptation: assignment inner products are computed either by
 gathers against densified representatives (``cluster_mode="gather"``,
@@ -26,7 +31,7 @@ import jax.numpy as jnp
 
 from repro.core.types import SeismicConfig, SeismicIndex
 from repro.sparse.ops import PaddedSparse, alpha_mass_subvector
-from repro.sparse.quant import quantize_u8
+from repro.sparse.quant import dequantize_u8, quantize_u8, quantize_u8_ceil
 
 
 def _sorted_postings(docs: PaddedSparse):
@@ -137,6 +142,31 @@ def _summaries(docs_perm, block_id, fwd, cfg: SeismicConfig):
     return sc, q, scale, zero
 
 
+def _superblock_summaries(sc, q, scale, zero, dim: int, cfg: SeismicConfig):
+    """Coarse tier over one list's quantized block summaries.
+
+    Groups blocks [0..nb) into ``n_superblocks`` fixed-fanout groups
+    (block j -> superblock j // fanout) and takes the coordinate-wise
+    max of the DEQUANTIZED child summaries, so the superblock score
+    upper-bounds every child score for any nonnegative query — the BMP
+    block-max property one level up. Size ``fanout * summary_nnz``
+    never truncates the union of child supports, and the round-up
+    requantization (:func:`quantize_u8_ceil`) keeps the bound through
+    the second quantization (up to float rounding).
+    """
+    nb, s = q.shape
+    f, ns = cfg.superblock_fanout, cfg.n_superblocks
+    s2 = min(cfg.superblock_nnz, dim)   # top_k width can't exceed dim
+    v = dequantize_u8(q, scale, zero)                       # [nb, S]
+    sup_id = jnp.arange(nb, dtype=jnp.int32) // f           # [nb]
+    dense = jnp.zeros((ns, dim), jnp.float32)
+    dense = dense.at[sup_id[:, None], sc].max(v)            # scatter-max
+    vals, coords = jax.lax.top_k(dense, s2)                 # [ns, S2]
+    coords = jnp.where(vals > 0, coords, 0)
+    q2, scale2, zero2 = quantize_u8_ceil(vals)
+    return coords.astype(jnp.int32), q2, scale2, zero2
+
+
 def _build_one_list(i, key, sorted_c, sorted_v, sorted_d, starts, counts,
                     fwd, cfg: SeismicConfig):
     docs, vals, cnt = _prune_list(i, sorted_c, sorted_v, sorted_d,
@@ -153,7 +183,10 @@ def _build_one_list(i, key, sorted_c, sorted_v, sorted_d, starts, counts,
     docs_perm = docs[perm]
     vals_perm = vals[perm]
     sc, q, scale, zero = _summaries(docs_perm, block_id, fwd, cfg)
-    return docs_perm, vals_perm, cnt, blk_off, blk_len, sc, q, scale, zero
+    out = (docs_perm, vals_perm, cnt, blk_off, blk_len, sc, q, scale, zero)
+    if cfg.superblock_fanout > 0:
+        out = out + _superblock_summaries(sc, q, scale, zero, fwd.dim, cfg)
+    return out
 
 
 @partial(jax.jit, static_argnames=("cfg", "list_chunk"))
@@ -173,9 +206,12 @@ def build_index(docs: PaddedSparse, cfg: SeismicConfig = SeismicConfig(),
         return _build_one_list(i, key, sorted_c, sorted_v, sorted_d,
                                starts, counts, fwd32, cfg)
 
+    outs = jax.lax.map(body, jnp.arange(d), batch_size=min(list_chunk, d))
     (list_docs, list_vals, list_len, blk_off, blk_len,
-     sum_coords, sum_q, sum_scale, sum_zero) = jax.lax.map(
-        body, jnp.arange(d), batch_size=min(list_chunk, d))
+     sum_coords, sum_q, sum_scale, sum_zero) = outs[:9]
+    sup_coords = sup_q = sup_scale = sup_zero = None
+    if cfg.superblock_fanout > 0:
+        sup_coords, sup_q, sup_scale, sup_zero = outs[9:]
 
     fwd_scale = fwd_zero = None
     if cfg.fwd_quant:
@@ -190,4 +226,5 @@ def build_index(docs: PaddedSparse, cfg: SeismicConfig = SeismicConfig(),
         list_len=list_len, block_off=blk_off, block_len=blk_len,
         sum_coords=sum_coords, sum_q=sum_q, sum_scale=sum_scale,
         sum_zero=sum_zero, fwd_scale=fwd_scale, fwd_zero=fwd_zero,
-        config=cfg)
+        sup_coords=sup_coords, sup_q=sup_q, sup_scale=sup_scale,
+        sup_zero=sup_zero, config=cfg)

@@ -18,6 +18,13 @@ Layout decisions vs the paper (§5, Fig. 3):
   * The forward index is the PaddedSparse collection itself (paper
     stores fp16; we default to bf16-compatible fp32-on-CPU and cast
     per config).
+  * With ``superblock_fanout > 0`` a second, coarser summary tier is
+    built (BMP-style superblocks): every ``fanout`` consecutive
+    physical blocks share one u8 summary that upper-bounds each child
+    block summary for any nonnegative query, letting the router prune
+    whole groups before touching tier-1 summaries. See
+    ``src/repro/core/README.md`` ("Index layout") for the full array
+    map and the routing contract.
 """
 from __future__ import annotations
 
@@ -49,11 +56,31 @@ class SeismicConfig:
     #                               "fixed" (impact-order chunks, Fig. 5)
     summary_kind: str = "max"     # "max" (Eq. 2 upper bound) |
     #                               "centroid" (mean sketch, §6)
+    superblock_fanout: int = 0    # BMP-style coarse summary tier: group
+    #                               every `fanout` physical blocks of a
+    #                               list into one superblock whose u8
+    #                               summary upper-bounds its children
+    #                               (0 = no superblock tier built)
     seed: int = 0
 
     @property
     def n_blocks(self) -> int:
         return self.beta + math.ceil(self.lam / self.block_cap)
+
+    @property
+    def n_superblocks(self) -> int:
+        """Superblocks per list (0 when the coarse tier is off)."""
+        if self.superblock_fanout <= 0:
+            return 0
+        return math.ceil(self.n_blocks / self.superblock_fanout)
+
+    @property
+    def superblock_nnz(self) -> int:
+        """Padded superblock summary size: the union of `fanout` child
+        supports never exceeds fanout * summary_nnz, so this size is
+        lossless (no coordinate of any child is ever dropped — the
+        upper-bound guarantee needs that)."""
+        return self.superblock_fanout * self.summary_nnz
 
 
 @jax.tree_util.register_dataclass
@@ -75,6 +102,12 @@ class SeismicIndex:
     # compact forward index (fwd_quant=True): per-doc dequant constants
     fwd_scale: jax.Array | None = None   # f32 [N]
     fwd_zero: jax.Array | None = None    # f32 [N]
+    # coarse summary tier (superblock_fanout > 0): one u8 summary per
+    # group of `fanout` blocks, upper-bounding every child summary
+    sup_coords: jax.Array | None = None  # int32 [L, n_super, S2]
+    sup_q: jax.Array | None = None       # uint8 [L, n_super, S2]
+    sup_scale: jax.Array | None = None   # f32   [L, n_super]
+    sup_zero: jax.Array | None = None    # f32   [L, n_super]
     config: SeismicConfig = dataclasses.field(metadata=dict(static=True),
                                               default_factory=SeismicConfig)
 
@@ -98,5 +131,10 @@ class SeismicIndex:
                + self.block_len.nbytes)
         summaries = (self.sum_coords.nbytes + self.sum_q.nbytes
                      + self.sum_scale.nbytes + self.sum_zero.nbytes)
+        superblocks = 0
+        if self.sup_coords is not None:
+            superblocks = (self.sup_coords.nbytes + self.sup_q.nbytes
+                           + self.sup_scale.nbytes + self.sup_zero.nbytes)
         return dict(forward=fwd, inverted=inv, summaries=summaries,
-                    total=fwd + inv + summaries)
+                    superblocks=superblocks,
+                    total=fwd + inv + summaries + superblocks)

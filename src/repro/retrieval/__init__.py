@@ -61,14 +61,15 @@ from repro.retrieval.pipeline import (STAGES, run_pipeline,
                                       run_pipeline_staged, search_pipeline,
                                       stage_fns)
 from repro.retrieval.prep import prep_queries
-from repro.retrieval.router import route_batch, RoutedBatch
+from repro.retrieval.router import route_batch, router_work, RoutedBatch
 from repro.retrieval.scorer import score_selection
 from repro.retrieval.selector import (Selection, get_selector,
                                       register_selector, selector_names)
 
 __all__ = [
     "SearchParams", "RoutedBatch", "Selection",
-    "prep_queries", "route_batch", "score_selection", "merge_topk",
+    "prep_queries", "route_batch", "router_work", "score_selection",
+    "merge_topk",
     "run_pipeline", "search_pipeline",
     "STAGES", "stage_fns", "run_pipeline_staged",
     "get_selector", "register_selector", "selector_names",

@@ -22,3 +22,13 @@ class SearchParams:
     threshold_factor: float = 0.75  # global_threshold: keep blocks with
     #                                 summary >= factor * per-query max
     use_kernel: bool = False      # batched Pallas gather/summary kernels
+    superblock_fanout: int = 0    # hierarchical routing: 0 = flat (score
+    #                               every block summary); > 0 = two-stage
+    #                               BMP-style route over the coarse
+    #                               superblock tier (must match the
+    #                               index's SeismicConfig.superblock_fanout)
+    superblock_budget: int = 16   # hierarchical routing: superblocks kept
+    #                               per query after the coarse stage; only
+    #                               their children's block summaries are
+    #                               scored (work = cut * n_superblocks +
+    #                               superblock_budget * fanout)

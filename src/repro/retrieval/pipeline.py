@@ -37,7 +37,7 @@ def run_pipeline(index: SeismicIndex, q_coords: jax.Array,
     """
     select = get_selector(p.policy)                 # static under jit
     q_dense, lists, _ = prep_queries(q_coords, q_vals, index.dim, p.cut)
-    batch = route_batch(index, q_dense, lists, p.use_kernel)
+    batch = route_batch(index, q_dense, lists, p)
     sel = select(index, batch, p)
     cand, scores = score_selection(index, batch, sel, p.use_kernel)
     return merge_topk(cand, scores, p.k, index.n_docs)
@@ -71,7 +71,7 @@ def stage_fns(index: SeismicIndex, p: SearchParams
         "prep": jax.jit(
             lambda c, v: prep_queries(c, v, index.dim, p.cut)),
         "router": jax.jit(
-            lambda qd, ls: route_batch(index, qd, ls, p.use_kernel)),
+            lambda qd, ls: route_batch(index, qd, ls, p)),
         "selector": jax.jit(lambda b: select(index, b, p)),
         "scorer": jax.jit(
             lambda b, s: score_selection(index, b, s, p.use_kernel)),

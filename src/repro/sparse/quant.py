@@ -19,12 +19,9 @@ import jax.numpy as jnp
 _LEVELS = 254.0  # real values map to 1..255 -> 254 intervals
 
 
-def quantize_u8(vals: jax.Array) -> tuple[jax.Array, jax.Array, jax.Array]:
-    """vals [..., S] (padding == 0) -> (q uint8 [..., S], scale [...], zero [...]).
-
-    Quantizes over the last axis; only positive entries define the
-    range. q == 0 always means padding.
-    """
+def _affine_u8(vals: jax.Array, rounder) -> tuple[jax.Array, jax.Array,
+                                                  jax.Array]:
+    """Shared affine-u8 body; ``rounder`` maps exact levels to ints."""
     valid = vals > 0
     big = jnp.finfo(jnp.float32).max
     v32 = vals.astype(jnp.float32)
@@ -32,10 +29,33 @@ def quantize_u8(vals: jax.Array) -> tuple[jax.Array, jax.Array, jax.Array]:
     vmin = jnp.where(vmin < big, vmin, 0.0)
     vmax = jnp.max(jnp.where(valid, v32, 0.0), axis=-1)
     scale = jnp.maximum(vmax - vmin, 1e-12) / _LEVELS
-    q = jnp.round((v32 - vmin[..., None]) / scale[..., None]) + 1.0
+    q = rounder((v32 - vmin[..., None]) / scale[..., None]) + 1.0
     q = jnp.clip(q, 1, 255)
     q = jnp.where(valid, q, 0).astype(jnp.uint8)
     return q, scale, vmin
+
+
+def quantize_u8(vals: jax.Array) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """vals [..., S] (padding == 0) -> (q uint8 [..., S], scale [...], zero [...]).
+
+    Quantizes over the last axis; only positive entries define the
+    range. q == 0 always means padding.
+    """
+    return _affine_u8(vals, jnp.round)
+
+
+def quantize_u8_ceil(vals: jax.Array) -> tuple[jax.Array, jax.Array,
+                                               jax.Array]:
+    """Like :func:`quantize_u8` but rounds levels UP, so every
+    reconstructed value >= its input (never below).
+
+    Used for the superblock summary tier: the coarse summary must
+    upper-bound every child block summary coordinate-wise, and
+    round-to-nearest would break the bound by up to scale/2. Level
+    arithmetic: q = ceil((v - vmin)/scale) + 1 <= 255 because
+    (vmax - vmin)/scale = 254, so no lossy clipping from above.
+    """
+    return _affine_u8(vals, jnp.ceil)
 
 
 def dequantize_u8(q: jax.Array, scale: jax.Array, zero: jax.Array,

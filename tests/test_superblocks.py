@@ -1,0 +1,425 @@
+"""Multi-tier summary routing (BMP-style superblocks): verification
+suite.
+
+The coarse tier's contract is an UPPER BOUND: a superblock summary
+coordinate-wise dominates every child block summary (element-wise max,
+round-up requantized), so for any nonnegative query
+
+    <q, sup(g)>  >=  <q, sum(j)>   for every block j in group g.
+
+Everything here is mechanically checkable off that property:
+
+  * upper-bound holds for random quantized indexes (deterministic
+    sweep + hypothesis when installed);
+  * safety invariant vs ``core/oracle.algorithm2``: every block the
+    oracle evaluates clears its dynamic threshold, and the block's
+    superblock bound clears it too — so threshold pruning at the
+    coarse tier never prunes a block the oracle needs;
+  * at sufficient ``superblock_budget`` the hierarchical route is
+    bit-exact with the flat route (admits a superset-scoring candidate
+    set at any budget, growing monotonically in the budget);
+  * odd shapes: fanout not dividing n_blocks, single-block lists,
+    all-padding superblocks, ``superblock_fanout=0`` bit-exact flat;
+  * ckpt round-trip incl. pre-superblock back-compat.
+"""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.core import SeismicConfig, build_index
+from repro.core.oracle import NumpyIndexView, algorithm2
+from repro.data import SyntheticSparseConfig, make_collection
+from repro.retrieval import SearchParams, router_work, search_pipeline
+from repro.retrieval.router import route_batch
+from repro.retrieval.prep import prep_queries
+from repro.sparse.ops import PaddedSparse
+from repro.sparse.quant import dequantize_u8, quantize_u8, quantize_u8_ceil
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:          # container without dev deps: deterministic
+    HAVE_HYPOTHESIS = False  # sweeps below still verify the invariants
+
+    def given(*a, **k):      # no-op decorators so the module still
+        return lambda f: f   # collects (tests are skipif-ed anyway)
+
+    def settings(*a, **k):
+        return lambda f: f
+
+    class _St:
+        def integers(self, *a, **k):
+            return None
+    st = _St()
+
+needs_hypothesis = pytest.mark.skipif(
+    not HAVE_HYPOTHESIS, reason="property tests need hypothesis")
+
+
+# ----------------------------------------------------------- fixtures
+
+def _collection(seed=7, dim=1024, n_docs=2048, n_queries=16):
+    cfg = SyntheticSparseConfig(dim=dim, n_docs=n_docs, n_queries=n_queries,
+                                doc_nnz=48, query_nnz=16, n_topics=32,
+                                topic_coords=128, seed=seed)
+    docs_np, queries_np, _ = make_collection(cfg)
+    docs = PaddedSparse(jnp.asarray(docs_np.coords),
+                        jnp.asarray(docs_np.vals), docs_np.dim)
+    queries = PaddedSparse(jnp.asarray(queries_np.coords),
+                           jnp.asarray(queries_np.vals), queries_np.dim)
+    return docs, queries, queries_np
+
+
+def _build(docs, fanout, lam=128, beta=8, block_cap=32, summary_nnz=32):
+    cfg = SeismicConfig(lam=lam, beta=beta, alpha=0.4, block_cap=block_cap,
+                        summary_nnz=summary_nnz, superblock_fanout=fanout)
+    return build_index(docs, cfg, list_chunk=16), cfg
+
+
+_built_cache: dict = {}
+
+
+def _built(fanout, seed=7, **kw):
+    key = (fanout, seed, tuple(sorted(kw.items())))
+    if key not in _built_cache:
+        docs, queries, queries_np = _collection(seed=seed)
+        idx, cfg = _build(docs, fanout, **kw)
+        _built_cache[key] = (docs, queries, queries_np, idx, cfg)
+    return _built_cache[key]
+
+
+def _np_summary_scores(idx):
+    """Dequantized per-block and per-superblock summary score matrices
+    for a dense query, as numpy closures."""
+    sum_v = np.asarray(dequantize_u8(idx.sum_q, idx.sum_scale, idx.sum_zero))
+    sup_v = np.asarray(dequantize_u8(idx.sup_q, idx.sup_scale, idx.sup_zero))
+    sum_c = np.asarray(idx.sum_coords)
+    sup_c = np.asarray(idx.sup_coords)
+
+    def block_scores(q_dense):                      # [L, nb]
+        return (q_dense[sum_c] * sum_v).sum(-1)
+
+    def sup_scores(q_dense):                        # [L, ns]
+        return (q_dense[sup_c] * sup_v).sum(-1)
+
+    return block_scores, sup_scores
+
+
+# ------------------------------------------------ upper-bound property
+
+@pytest.mark.parametrize("fanout,seed", [(2, 0), (3, 1), (4, 2), (5, 3),
+                                         (7, 4)])
+def test_superblock_upper_bounds_children(fanout, seed):
+    """<q, sup> >= <q, block summary> for every child, every query —
+    incl. fanouts that do NOT divide n_blocks (12 % 5, 12 % 7 != 0)."""
+    docs, queries, queries_np = _collection(seed=seed)
+    idx, cfg = _build(docs, fanout)
+    nb, ns, f = cfg.n_blocks, cfg.n_superblocks, fanout
+    block_scores, sup_scores = _np_summary_scores(idx)
+    blk_len = np.asarray(idx.block_len)
+    rng = np.random.default_rng(seed)
+    for _ in range(4):
+        q_dense = rng.lognormal(0, 1, idx.dim).astype(np.float32)
+        r = block_scores(q_dense)                   # [L, nb]
+        u = sup_scores(q_dense)                     # [L, ns]
+        for j in range(nb):
+            g = j // f
+            live = blk_len[:, j] > 0
+            assert (u[live, g] >= r[live, j] - 1e-4 * np.abs(r[live, j])
+                    - 1e-5).all(), (fanout, j)
+
+
+def test_quantize_u8_ceil_never_rounds_down():
+    rng = np.random.default_rng(11)
+    v = rng.lognormal(0, 2, (64, 48)).astype(np.float32)
+    v[rng.random(v.shape) < 0.3] = 0.0
+    q, scale, zero = quantize_u8_ceil(jnp.asarray(v))
+    recon = np.asarray(dequantize_u8(q, scale, zero))
+    assert (recon >= v - 1e-4 * np.abs(v) - 1e-6).all()
+    # padding (exact zeros) must reconstruct to exact zero
+    assert (recon[v == 0] == 0).all()
+
+
+@needs_hypothesis
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(2, 6))
+def test_hypothesis_superblock_upper_bound_random_quantized(seed, fanout):
+    """Random (non-collection) quantized summaries: rebuild the coarse
+    tier's max-requantize by hand and check domination through BOTH
+    quantizations for random nonnegative queries."""
+    rng = np.random.default_rng(seed)
+    nb, s, dim = int(rng.integers(2, 13)), 16, 256
+    vals = rng.lognormal(0, 1, (nb, s)).astype(np.float32)
+    vals[rng.random((nb, s)) < 0.3] = 0.0
+    coords = rng.integers(0, dim, (nb, s))
+    q, scale, zero = quantize_u8(jnp.asarray(vals))
+    deq = np.asarray(dequantize_u8(q, scale, zero))
+    ns = -(-nb // fanout)
+    dense = np.zeros((ns, dim), np.float32)
+    for j in range(nb):
+        np.maximum.at(dense[j // fanout], coords[j], deq[j])
+    s2 = min(fanout * s, dim)
+    top = np.argsort(-dense, axis=-1)[:, :s2]
+    tv = np.take_along_axis(dense, top, axis=-1)
+    q2, scale2, zero2 = quantize_u8_ceil(jnp.asarray(tv))
+    sup = np.asarray(dequantize_u8(q2, scale2, zero2))
+    qd = rng.lognormal(0, 1, dim).astype(np.float32)
+    r = (qd[coords] * deq).sum(-1)                  # [nb]
+    u = (qd[top] * sup).sum(-1)                     # [ns]
+    for j in range(nb):
+        assert u[j // fanout] >= r[j] - 1e-4 * abs(r[j]) - 1e-5
+
+
+# --------------------------------------- safety invariant vs algorithm2
+
+def _oracle_safety(idx, cfg, queries_np, fanout, n_queries=8,
+                   k=10, cut=8, heap_factor=0.8):
+    """Every block algorithm2 keeps (summary >= theta/heap_factor at its
+    final threshold) lives in a superblock whose coarse bound also
+    clears the threshold — coarse threshold pruning is safe."""
+    view = NumpyIndexView(idx)
+    block_scores, sup_scores = _np_summary_scores(idx)
+    blk_len = np.asarray(idx.block_len)
+    f = fanout
+    for qi in range(n_queries):
+        qc = queries_np.coords[qi]
+        qv = queries_np.vals[qi]
+        scores, ids, _ = algorithm2(view, qc, qv, k, cut, heap_factor)
+        if scores.size < k:
+            continue
+        theta = scores[-1] / heap_factor            # oracle's final bar
+        q_dense = np.zeros(idx.dim, np.float32)
+        np.add.at(q_dense, qc, qv)
+        order = np.argsort(-qv, kind="stable")[:cut]
+        probe = [int(qc[o]) for o in order if qv[o] > 0]
+        r = block_scores(q_dense)
+        u = sup_scores(q_dense)
+        for i in probe:
+            for j in range(cfg.n_blocks):
+                if blk_len[i, j] > 0 and r[i, j] >= theta:
+                    assert u[i, j // f] >= theta - 1e-4 * abs(theta) - 1e-5, \
+                        (qi, i, j)
+
+
+@pytest.mark.parametrize("fanout", [3, 5])
+def test_safety_invariant_vs_algorithm2(fanout):
+    docs, queries, queries_np = _collection()
+    idx, cfg = _build(docs, fanout)
+    _oracle_safety(idx, cfg, queries_np, fanout)
+
+
+@needs_hypothesis
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10_000), st.integers(2, 6))
+def test_hypothesis_safety_invariant_vs_algorithm2(seed, fanout):
+    docs, queries, queries_np = _collection(seed=seed, n_docs=512,
+                                            n_queries=4)
+    idx, cfg = _build(docs, fanout, lam=64, beta=4, block_cap=16,
+                      summary_nnz=16)
+    _oracle_safety(idx, cfg, queries_np, fanout, n_queries=4)
+
+
+# ------------------------------------------- two-stage router parity
+
+def _route(idx, queries, p):
+    q_dense, lists, _ = prep_queries(queries.coords, queries.vals,
+                                     idx.dim, p.cut)
+    return route_batch(idx, q_dense, lists, p), lists
+
+
+@pytest.mark.parametrize("fanout", [3, 5])
+def test_hierarchical_full_budget_bitexact_flat(fanout):
+    """superblock_budget >= cut * n_superblocks: no stage-A pruning, so
+    the hierarchical route must reproduce the flat route bit-exactly
+    (stage B scores the IDENTICAL block-summary arrays)."""
+    docs, queries, queries_np, idx, cfg = _built(fanout)
+    pf = SearchParams(cut=8)
+    ph = SearchParams(cut=8, superblock_fanout=fanout,
+                      superblock_budget=8 * cfg.n_superblocks)
+    bf, _ = _route(idx, queries, pf)
+    bh, _ = _route(idx, queries, ph)
+    np.testing.assert_array_equal(np.asarray(bf.r), np.asarray(bh.r))
+
+
+def test_fanout0_bit_exact_with_flat_path():
+    """superblock_fanout=0 params on a superblock-built index must take
+    the flat code path and match a flat-built index bit-exactly."""
+    docs, queries, queries_np, idx_h, _ = _built(4)
+    idx_f, _ = _build(docs, 0)
+    p = SearchParams(cut=8)
+    bh, _ = _route(idx_h, queries, p)
+    bf, _ = _route(idx_f, queries, p)
+    np.testing.assert_array_equal(np.asarray(bh.r), np.asarray(bf.r))
+    s0, i0, e0 = search_pipeline(idx_h, queries, p)
+    s1, i1, e1 = search_pipeline(idx_f, queries, p)
+    np.testing.assert_array_equal(np.asarray(i0), np.asarray(i1))
+    np.testing.assert_array_equal(np.asarray(s0), np.asarray(s1))
+
+
+def test_candidate_set_superset_in_budget():
+    """Survivor sets grow monotonically with superblock_budget, so the
+    selected block-score vector (sorted desc) dominates elementwise —
+    'admits a superset-scoring candidate set' made mechanical."""
+    docs, queries, queries_np, idx, cfg = _built(4)
+    prev = None
+    for m in (2, 4, 8, 8 * cfg.n_superblocks):
+        p = SearchParams(cut=8, block_budget=16, policy="budget",
+                         superblock_fanout=4, superblock_budget=m)
+        batch, _ = _route(idx, queries, p)
+        scores = np.sort(np.asarray(batch.r), axis=-1)[:, ::-1][:, :16]
+        if prev is not None:
+            finite = np.isfinite(prev)
+            assert (scores[finite] >= prev[finite] - 1e-6).all(), m
+        prev = scores
+    # at full budget the hierarchical selection == flat selection
+    bf, _ = _route(idx, queries, SearchParams(cut=8))
+    flat = np.sort(np.asarray(bf.r), axis=-1)[:, ::-1][:, :16]
+    finite = np.isfinite(flat)
+    np.testing.assert_allclose(prev[finite], flat[finite])
+
+
+def test_hierarchical_kernel_parity_odd_shapes():
+    """use_kernel=True (interpret-mode Pallas) must match the jnp path
+    on both tiers for a fanout that doesn't divide n_blocks."""
+    docs, queries, queries_np, idx, cfg = _built(5)
+    assert cfg.n_blocks % 5 != 0
+    p0 = SearchParams(cut=8, superblock_fanout=5, superblock_budget=6)
+    p1 = SearchParams(cut=8, superblock_fanout=5, superblock_budget=6,
+                      use_kernel=True)
+    b0, _ = _route(idx, queries, p0)
+    b1, _ = _route(idx, queries, p1)
+    r0, r1 = np.asarray(b0.r), np.asarray(b1.r)
+    np.testing.assert_array_equal(np.isfinite(r0), np.isfinite(r1))
+    f = np.isfinite(r0)
+    np.testing.assert_allclose(r0[f], r1[f], rtol=1e-5, atol=1e-5)
+
+
+def test_single_block_lists_and_fanout_exceeding_blocks():
+    """lam == block_cap: each list has one capacity block per cluster;
+    fanout > n_blocks collapses the coarse tier to one superblock per
+    list and must still reproduce flat at full budget."""
+    docs, queries, _ = _collection()
+    idx, cfg = _build(docs, 8, lam=32, beta=1, block_cap=32,
+                      summary_nnz=16)
+    assert cfg.n_blocks == 2 and cfg.n_superblocks == 1
+    pf = SearchParams(cut=8, k=10)
+    ph = SearchParams(cut=8, k=10, superblock_fanout=8,
+                      superblock_budget=8)
+    bf, _ = _route(idx, queries, pf)
+    bh, _ = _route(idx, queries, ph)
+    np.testing.assert_array_equal(np.asarray(bf.r), np.asarray(bh.r))
+
+
+def test_all_padding_superblocks_score_neg_inf():
+    """Superblocks whose every child block is empty must rank last
+    (-inf) and contribute no finite child scores."""
+    docs, queries, queries_np, idx, cfg = _built(4)
+    blk_len = np.asarray(idx.block_len)
+    ns, f = cfg.n_superblocks, 4
+    pad = (-cfg.n_blocks) % f
+    alive = np.pad(blk_len > 0, ((0, 0), (0, pad))).reshape(-1, ns, f)
+    sup_dead = ~alive.any(-1)                       # [L, ns]
+    assert sup_dead.any(), "need at least one empty superblock"
+    p = SearchParams(cut=8, superblock_fanout=4,
+                     superblock_budget=8 * cfg.n_superblocks)
+    batch, lists = _route(idx, queries, p)
+    r = np.asarray(batch.r).reshape(queries.n, p.cut, cfg.n_blocks)
+    lists = np.asarray(lists)
+    for q in range(queries.n):
+        for c in range(p.cut):
+            li = lists[q, c]
+            dead_blocks = ~(blk_len[li] > 0)
+            assert (r[q, c, dead_blocks] == -np.inf).all()
+
+
+def test_route_validation_errors():
+    docs, queries, queries_np, idx_h, _ = _built(4)
+    idx_f, _ = _build(docs, 0)
+    q_dense, lists, _ = prep_queries(queries.coords, queries.vals,
+                                     idx_f.dim, 8)
+    with pytest.raises(ValueError, match="no superblock"):
+        route_batch(idx_f, q_dense, lists,
+                    SearchParams(cut=8, superblock_fanout=4))
+    with pytest.raises(ValueError, match="mismatch"):
+        route_batch(idx_h, q_dense, lists,
+                    SearchParams(cut=8, superblock_fanout=2))
+
+
+def test_router_work_accounting():
+    cfg = SeismicConfig(lam=128, beta=8, block_cap=32, summary_nnz=32,
+                        superblock_fanout=4)           # nb=12, ns=3
+    flat = SearchParams(cut=8)
+    hier = SearchParams(cut=8, superblock_fanout=4, superblock_budget=6)
+    assert router_work(cfg, flat) == 8 * 12
+    assert router_work(cfg, hier) == 8 * 3 + 6 * 4
+    # budget clamps at the coarse axis
+    big = SearchParams(cut=8, superblock_fanout=4, superblock_budget=10**6)
+    assert router_work(cfg, big) == 8 * 3 + (8 * 3) * 4
+
+
+# ----------------------------------------- end-to-end recall + ckpt
+
+@pytest.mark.parametrize("policy", ["budget", "adaptive",
+                                    "global_threshold"])
+def test_hierarchical_recall_matches_flat(policy):
+    """At a generous superblock budget the two-stage route must not
+    cost recall vs flat routing for any selector policy."""
+    from repro.core.baselines import exact_search
+    from repro.core.oracle import recall_at_k
+    docs, queries, queries_np, idx, cfg = _built(4)
+    _, eids = exact_search(docs, queries, 10)
+
+    def rec(p):
+        _, ids, _ = search_pipeline(idx, queries, p)
+        return np.mean([recall_at_k(np.asarray(ids[q]),
+                                    np.asarray(eids[q]))
+                        for q in range(queries.n)])
+    pf = SearchParams(k=10, cut=8, block_budget=48, policy=policy)
+    ph = SearchParams(k=10, cut=8, block_budget=48, policy=policy,
+                      superblock_fanout=4, superblock_budget=12)
+    rf, rh = rec(pf), rec(ph)
+    assert rh >= rf - 0.02, (policy, rf, rh)
+
+
+def test_index_ckpt_roundtrip_with_superblocks(tmp_path):
+    from repro.ckpt import load_index, save_index
+    docs, queries, queries_np, idx, cfg = _built(4)
+    save_index(str(tmp_path), idx)
+    save_index(str(tmp_path), idx)   # overwrite same step: no .old left
+    idx2 = load_index(str(tmp_path))
+    assert idx2.config == cfg
+    p = SearchParams(k=10, cut=8, superblock_fanout=4, superblock_budget=8)
+    s0, i0, e0 = search_pipeline(idx, queries, p)
+    s1, i1, e1 = search_pipeline(idx2, queries, p)
+    np.testing.assert_array_equal(np.asarray(i0), np.asarray(i1))
+    np.testing.assert_array_equal(np.asarray(s0), np.asarray(s1))
+    np.testing.assert_array_equal(np.asarray(e0), np.asarray(e1))
+
+
+def test_index_ckpt_pre_superblock_backcompat(tmp_path):
+    """A checkpoint written WITHOUT the superblock tier (the old layout)
+    must load as a flat-routing index with identical search results."""
+    from repro.ckpt import load_index, save_index
+    docs, queries, _ = _collection()
+    idx, _ = _build(docs, 0)
+    save_index(str(tmp_path), idx)
+    idx2 = load_index(str(tmp_path))
+    assert idx2.sup_coords is None and idx2.config.superblock_fanout == 0
+    p = SearchParams(k=10, cut=8)
+    s0, i0, _ = search_pipeline(idx, queries, p)
+    s1, i1, _ = search_pipeline(idx2, queries, p)
+    np.testing.assert_array_equal(np.asarray(i0), np.asarray(i1))
+    np.testing.assert_array_equal(np.asarray(s0), np.asarray(s1))
+
+
+def test_tree_ckpt_roundtrip_with_superblocks(tmp_path):
+    """The generic tree checkpoint (save_checkpoint/load_checkpoint)
+    also round-trips the extended index pytree."""
+    from repro.ckpt import load_checkpoint, save_checkpoint
+    docs, queries, queries_np, idx, cfg = _built(4)
+    save_checkpoint(str(tmp_path), 1, idx)
+    restored, step = load_checkpoint(str(tmp_path), idx)
+    assert step == 1
+    for a, b in zip(jax.tree.leaves(idx), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
