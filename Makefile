@@ -1,6 +1,6 @@
 PY ?= python
 
-.PHONY: test test-fast bench bench-serving dev
+.PHONY: test test-fast bench bench-serving bench-graph dev
 
 dev:
 	$(PY) -m pip install -r requirements-dev.txt
@@ -14,7 +14,7 @@ test-fast:
 	PYTHONPATH=src $(PY) -m pytest -q tests/test_retrieval.py \
 		tests/test_superblocks.py tests/test_seismic_core.py \
 		tests/test_sparse_ops.py tests/test_kernels.py \
-		tests/test_serve_async.py
+		tests/test_serve_async.py tests/test_graph_refine.py
 
 bench:
 	PYTHONPATH=src $(PY) -m benchmarks.run
@@ -22,3 +22,7 @@ bench:
 # serving-load smoke: tiny collection, async vs sync QPS (~3s)
 bench-serving:
 	PYTHONPATH=src $(PY) -m benchmarks.serving_load --smoke
+
+# graph-refinement smoke: recall lift + degree-0 bit-exactness gates
+bench-graph:
+	PYTHONPATH=src $(PY) -m benchmarks.graph_refine --smoke

@@ -1,0 +1,167 @@
+"""kNN-graph refinement benchmark + acceptance gate (repro.graph).
+
+Measures what the refinement tier buys back: the pipeline is run at a
+HALVED ``block_budget`` (half the exact scoring work of the reference
+operating point), unrefined vs refined with ``graph_degree=8,
+refine_rounds=1``. Reported per run:
+
+  graph_build      offline graph construction (the corpus driven
+                   through the batched ``search_pipeline`` in fixed
+                   chunks) — wall time, edges, artifact bytes
+  refine_unref     recall@10 / docs-evaluated at the halved budget
+  refine_on        same + the recall lift and per-stage refine latency
+  refine_compact   the same refined point on a ``compact_forward``
+                   (u8 forward plane) graph index
+  refine_rounds_k  recall as ``refine_rounds`` grows (monotone
+                   non-decreasing; the dedicated test enforces it)
+
+Exit gates (CI runs ``--smoke``; the full run gates identically):
+
+  * refined recall@10 >= unrefined + 0.05 at the halved budget
+    (``lift_ok``), and
+  * ``graph_degree=0`` on the graph-carrying index is bit-exact with
+    the five-stage pipeline on the plain index (``bitexact_ok``).
+
+    PYTHONPATH=src python -m benchmarks.graph_refine [--smoke]
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import (INDEX, built_index, collection, mean_recall,
+                               row, timeit_us)
+from repro.core import SeismicConfig, build_index
+from repro.core.baselines import exact_search
+from repro.data import SyntheticSparseConfig, make_collection
+from repro.graph import build_doc_graph
+from repro.retrieval import SearchParams, search_pipeline, stage_fns
+from repro.sparse.ops import PaddedSparse
+
+DEGREE = 8
+ROUNDS = 1
+HALVED_BUDGET = 4        # half the block_budget=8 reference point
+MIN_LIFT = 0.05          # acceptance: >= 5 recall points recovered
+
+SMOKE = SyntheticSparseConfig(dim=512, n_docs=2048, n_queries=24,
+                              doc_nnz=32, query_nnz=12, n_topics=16,
+                              topic_coords=96, seed=3)
+SMOKE_INDEX = SeismicConfig(lam=96, beta=8, alpha=0.4, block_cap=24,
+                            summary_nnz=24)
+
+
+def _fixture(smoke: bool):
+    if smoke:
+        docs_np, queries_np, _ = make_collection(SMOKE)
+        docs = PaddedSparse(jnp.asarray(docs_np.coords),
+                            jnp.asarray(docs_np.vals), docs_np.dim)
+        queries = PaddedSparse(jnp.asarray(queries_np.coords),
+                               jnp.asarray(queries_np.vals),
+                               queries_np.dim)
+        idx = build_index(docs, SMOKE_INDEX, list_chunk=16)
+        _, eids = exact_search(docs, queries, 10)
+        return idx, queries, np.asarray(eids)
+    _, queries, _, _, eids = collection()
+    idx, _ = built_index()
+    return idx, queries, eids
+
+
+def _recall(idx, queries, eids, p):
+    _, ids, ev = search_pipeline(idx, queries, p)
+    return mean_recall(np.asarray(ids), eids), int(np.asarray(ev).mean())
+
+
+def run(smoke: bool = False):
+    idx, queries, eids = _fixture(smoke)
+    build_p = SearchParams(k=DEGREE + 1, cut=8,
+                           block_budget=16 if smoke else 64,
+                           policy="budget")
+
+    t0 = time.time()
+    gidx = build_doc_graph(idx, degree=DEGREE, build_params=build_p,
+                           batch=256)
+    jax.block_until_ready(gidx.knn_ids)
+    build_s = time.time() - t0
+    n = gidx.n_docs
+    yield row("graph_build", build_s * 1e6, degree=DEGREE,
+              docs=n, launches=-(-n // 256),
+              graph_bytes=gidx.nbytes()["graph"])
+
+    p0 = SearchParams(k=10, cut=8, block_budget=HALVED_BUDGET,
+                      policy="budget")
+    p1 = dataclasses.replace(p0, graph_degree=DEGREE,
+                             refine_rounds=ROUNDS)
+
+    r0, ev0 = _recall(idx, queries, eids, p0)
+    yield row("refine_unref", 0.0, recall10=f"{r0:.3f}", docs_eval=ev0,
+              block_budget=HALVED_BUDGET)
+
+    r1, ev1 = _recall(gidx, queries, eids, p1)
+    lift = r1 - r0
+    lift_ok = lift >= MIN_LIFT
+    # per-stage latency of the refine stage (standalone-jitted hook)
+    fns = stage_fns(gidx, p1)
+    q_dense, lists, _ = jax.block_until_ready(
+        fns["prep"](queries.coords, queries.vals))
+    batch = jax.block_until_ready(fns["router"](q_dense, lists))
+    sel = jax.block_until_ready(fns["selector"](batch))
+    cand, scores = jax.block_until_ready(fns["scorer"](batch, sel))
+    merged = jax.block_until_ready(fns["merge"](cand, scores))
+    us_refine = timeit_us(fns["refine"], q_dense, *merged)
+    yield row("refine_on", us_refine, recall10=f"{r1:.3f}",
+              docs_eval=ev1, lift=f"{lift:+.3f}",
+              graph_degree=DEGREE, refine_rounds=ROUNDS,
+              lift_ok=lift_ok)
+
+    # the same refined point over a compact (u8) forward plane: both
+    # scorer and refine rescore through the fused-dequant gather_dot
+    cgidx = build_doc_graph(idx, degree=DEGREE, build_params=build_p,
+                            batch=256, compact_forward=True)
+    rc, evc = _recall(cgidx, queries, eids, p1)
+    yield row("refine_compact", 0.0, recall10=f"{rc:.3f}", docs_eval=evc,
+              fwd_dtype="u8")
+
+    # recall vs refine_rounds (monotone; tests enforce, we report)
+    for rounds in (2, 3):
+        pr = dataclasses.replace(p1, refine_rounds=rounds)
+        rr, evr = _recall(gidx, queries, eids, pr)
+        yield row(f"refine_rounds_{rounds}", 0.0, recall10=f"{rr:.3f}",
+                  docs_eval=evr)
+
+    # graph_degree=0 on the graph index must be bit-exact with the
+    # five-stage pipeline on the plain index
+    s_plain, i_plain, e_plain = search_pipeline(idx, queries, p0)
+    s_graph, i_graph, e_graph = search_pipeline(gidx, queries, p0)
+    bitexact_ok = (
+        np.array_equal(np.asarray(s_plain), np.asarray(s_graph))
+        and np.array_equal(np.asarray(i_plain), np.asarray(i_graph))
+        and np.array_equal(np.asarray(e_plain), np.asarray(e_graph)))
+    yield row("refine_degree0", 0.0, bitexact_ok=bitexact_ok)
+
+
+def main(argv=None) -> None:
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny collection (CI smoke); same exit gates")
+    args = ap.parse_args(argv)
+    print("name,us_per_call,derived")
+    bad = []
+    for line in run(smoke=args.smoke):
+        print(line)
+        if "lift_ok=False" in line or "bitexact_ok=False" in line:
+            bad.append(line)
+    if bad:
+        raise SystemExit(
+            "graph-refinement acceptance failed (need >= "
+            f"{MIN_LIFT * 100:.0f} recall points recovered at halved "
+            "block_budget AND degree-0 bit-exactness):\n"
+            + "\n".join(bad))
+
+
+if __name__ == "__main__":
+    main()

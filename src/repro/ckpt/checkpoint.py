@@ -110,9 +110,9 @@ _INDEX_MANIFEST = "seismic_index.json"
 
 def save_index(path: str, index, *, step: int = 0) -> str:
     """Persist a ``SeismicIndex`` atomically (named-field npz + config
-    JSON). Optional tiers (compact forward index, superblock summaries)
-    are stored only when present, so old loaders skip unknown fields
-    and new loaders default absent fields to ``None``."""
+    JSON). Optional tiers (compact forward index, superblock summaries,
+    kNN graph) are stored only when present, so old loaders skip
+    unknown fields and new loaders default absent fields to ``None``."""
     import dataclasses
     final = os.path.join(path, f"index_{step:08d}")
     tmp = final + ".tmp"
@@ -146,11 +146,12 @@ def save_index(path: str, index, *, step: int = 0) -> str:
 def load_index(path: str, *, step: int | None = None):
     """Restore a ``SeismicIndex`` saved by :func:`save_index`.
 
-    Back-compat: checkpoints written before the superblock tier (or
-    before the compact forward index) simply lack those npz keys; the
-    loader leaves them ``None`` and rebuilds the config through
-    ``SeismicConfig(**...)`` defaults, so a pre-superblock checkpoint
-    loads as a flat-routing index unchanged."""
+    Back-compat: checkpoints written before the superblock tier, the
+    compact forward index, or the kNN graph simply lack those npz
+    keys; the loader leaves them ``None`` and rebuilds the config
+    through ``SeismicConfig(**...)`` defaults, so a pre-superblock
+    (or pre-graph) checkpoint loads as a flat-routing, refinement-free
+    index unchanged."""
     import dataclasses
     from repro.core.types import SeismicConfig, SeismicIndex
     if step is None:

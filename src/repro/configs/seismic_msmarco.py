@@ -2,10 +2,16 @@
 SPLADE-statistics MS MARCO-scale collection (8.8M docs, vocab 30522,
 lambda=6000, beta=400, alpha=0.4 — the paper's best MS MARCO settings,
 §7.1). The dry-run lowers the distributed query step; CPU experiments
-use the reduced config."""
+use the reduced config. ``CONFIG_HIER`` / ``REDUCED_HIER`` derive the
+superblock tier with the adaptive ``core.build.suggest_fanout`` helper
+instead of a hand-picked fanout."""
 import dataclasses
+import math
+
+import numpy as np
 
 from repro.configs.base import ShapeCell
+from repro.core.build import suggest_fanout
 from repro.core.types import SeismicConfig
 
 
@@ -41,3 +47,38 @@ REDUCED = SeismicArchConfig(
     index=SeismicConfig(lam=128, beta=8, alpha=0.4, block_cap=32,
                         summary_nnz=32),
     n_docs=2048, dim=1024, doc_nnz=48, query_nnz=16)
+
+
+def estimated_live_blocks(arch: SeismicArchConfig) -> np.ndarray:
+    """Modeled per-list live-block counts for a collection that has not
+    been built yet (the :func:`suggest_fanout` statistic at config
+    time): expected postings per coordinate under a uniform token
+    model, truncated by ``lam``, split at ``block_cap``. Replace with
+    ``core.build.live_blocks(index)`` once an index exists — real
+    Zipf-skewed lists only sharpen the estimate."""
+    per_list = min(arch.n_docs * arch.doc_nnz / arch.dim, arch.index.lam)
+    return np.full(arch.dim,
+                   math.ceil(per_list / arch.index.block_cap), np.int32)
+
+
+def with_suggested_fanout(arch: SeismicArchConfig,
+                          stats: np.ndarray | None = None
+                          ) -> SeismicArchConfig:
+    """Derive the hierarchical (superblock) variant of an arch config,
+    with the fanout picked by ``suggest_fanout`` from live-block stats
+    (modeled when ``stats`` is None). Single-/few-block collections
+    come back unchanged (fanout 0 = flat routing, no overhead)."""
+    if stats is None:
+        stats = estimated_live_blocks(arch)
+    f = suggest_fanout(stats)
+    if f == arch.index.superblock_fanout:
+        return arch
+    return dataclasses.replace(
+        arch, name=f"{arch.name}-hier",
+        index=dataclasses.replace(arch.index, superblock_fanout=f))
+
+
+# adaptive-fanout variants: MS MARCO lists saturate lam (~94 live
+# blocks/list -> fanout 8, capped); the reduced CPU config lands ~3
+CONFIG_HIER = with_suggested_fanout(CONFIG)
+REDUCED_HIER = with_suggested_fanout(REDUCED)

@@ -1,6 +1,6 @@
 from repro.core.types import SeismicConfig, SeismicIndex
-from repro.core.build import build_index
+from repro.core.build import build_index, live_blocks, suggest_fanout
 from repro.core.query import SearchParams, search_batch
 
-__all__ = ["SeismicConfig", "SeismicIndex", "build_index", "SearchParams",
-           "search_batch"]
+__all__ = ["SeismicConfig", "SeismicIndex", "build_index", "live_blocks",
+           "suggest_fanout", "SearchParams", "search_batch"]

@@ -24,8 +24,10 @@ in ``lax.map`` chunks so peak memory stays at
 """
 from __future__ import annotations
 
+import math
 from functools import partial
 
+import numpy as np
 import jax
 import jax.numpy as jnp
 
@@ -187,6 +189,35 @@ def _build_one_list(i, key, sorted_c, sorted_v, sorted_d, starts, counts,
     if cfg.superblock_fanout > 0:
         out = out + _superblock_summaries(sc, q, scale, zero, fwd.dim, cfg)
     return out
+
+
+def suggest_fanout(n_blocks_stats, *, max_fanout: int = 8) -> int:
+    """Adaptive superblock fanout from per-list live-block counts.
+
+    ``n_blocks_stats`` is an array of live (non-empty) physical blocks
+    per inverted list — ``(index.block_len > 0).sum(-1)`` for a built
+    index, or a modeled estimate at config time. Two-tier routing over
+    a list with ``nb`` live blocks costs ``~nb/f`` coarse dots plus
+    ``~f`` child dots per kept superblock, so the minimizing fanout
+    scales like ``sqrt(nb)``. Lists with <= 2 live blocks pay pure
+    superblock overhead (the coarse tier scores as many summaries as
+    the flat route would), so collections dominated by them get 0
+    (keep flat routing).
+    """
+    stats = np.asarray(n_blocks_stats, np.float64).reshape(-1)
+    live = stats[stats > 0]
+    if live.size == 0:
+        return 0
+    mean = float(live.mean())
+    if mean <= 2.0:
+        return 0
+    return int(np.clip(round(math.sqrt(mean)), 2, max_fanout))
+
+
+def live_blocks(index: SeismicIndex) -> np.ndarray:
+    """Per-list live-block counts of a built index (the
+    :func:`suggest_fanout` statistic)."""
+    return np.asarray((index.block_len > 0).sum(axis=-1))
 
 
 @partial(jax.jit, static_argnames=("cfg", "list_chunk"))

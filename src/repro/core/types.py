@@ -108,6 +108,12 @@ class SeismicIndex:
     sup_q: jax.Array | None = None       # uint8 [L, n_super, S2]
     sup_scale: jax.Array | None = None   # f32   [L, n_super]
     sup_zero: jax.Array | None = None    # f32   [L, n_super]
+    # document kNN graph (repro.graph): per-doc approximate nearest
+    # neighbors, score-descending, sentinel n_docs pads missing edges.
+    # The refine stage rescores expanded neighbors through the SAME
+    # forward plane as the scorer stage (fwd + fwd_scale/fwd_zero), so
+    # merged scores stay consistent across stages.
+    knn_ids: jax.Array | None = None        # int32 [N, degree]
     config: SeismicConfig = dataclasses.field(metadata=dict(static=True),
                                               default_factory=SeismicConfig)
 
@@ -123,6 +129,11 @@ class SeismicIndex:
     def n_lists(self) -> int:
         return self.list_docs.shape[0]
 
+    @property
+    def graph_degree(self) -> int:
+        """Built kNN-graph degree (0 when no graph is attached)."""
+        return 0 if self.knn_ids is None else self.knn_ids.shape[1]
+
     def nbytes(self) -> dict:
         """Index size accounting (Table 2 analog)."""
         fwd = self.fwd.coords.nbytes + self.fwd.vals.nbytes
@@ -135,6 +146,7 @@ class SeismicIndex:
         if self.sup_coords is not None:
             superblocks = (self.sup_coords.nbytes + self.sup_q.nbytes
                            + self.sup_scale.nbytes + self.sup_zero.nbytes)
+        graph = 0 if self.knn_ids is None else self.knn_ids.nbytes
         return dict(forward=fwd, inverted=inv, summaries=summaries,
-                    superblocks=superblocks,
-                    total=fwd + inv + summaries + superblocks)
+                    superblocks=superblocks, graph=graph,
+                    total=fwd + inv + summaries + superblocks + graph)

@@ -1,0 +1,33 @@
+"""kNN-graph refinement subsystem (recall recovery for tight budgets).
+
+At small ``block_budget`` the inverted index misses near-neighbors of
+the documents it does retrieve. This package pairs the index with a
+document kNN graph (Bruch et al. 2025, arXiv 2501.11628; the guided-
+traversal idea of Mallia et al. 2022) so the pipeline can expand and
+exactly rescore those near-misses in one extra batched stage:
+
+    build     ``build_doc_graph`` runs the batched ``search_pipeline``
+              over the corpus itself -> ``knn_ids [N, degree]``
+              attached to the ``SeismicIndex`` (persisted by
+              ``ckpt.save_index`` with pre-graph back-compat);
+              ``compact_forward=True`` also rebuilds the padded
+              forward index as u8-quantized values + per-doc affine
+              (the BigANN-scale memory configuration)
+    refine    ``refine_batch`` — pipeline stage 6: gather neighbors of
+              the merged top-k, dedupe against already-scored ids,
+              rescore through the scorer's own forward plane via the
+              batched ``gather_dot`` kernel, re-merge
+
+Query-time knobs live on ``SearchParams``: ``graph_degree`` (<= built
+degree; 0 disables, bit-exact with the five-stage pipeline) and
+``refine_rounds`` (frontier expansions per query).
+"""
+from repro.graph.build import (build_doc_graph, compact_forward_index,
+                               doc_queries)
+from repro.graph.refine import (expand_neighbors, refine_batch,
+                                validate_refine_params)
+
+__all__ = [
+    "build_doc_graph", "compact_forward_index", "doc_queries",
+    "expand_neighbors", "refine_batch", "validate_refine_params",
+]

@@ -1,0 +1,128 @@
+"""Offline kNN-graph construction over a built Seismic index.
+
+The graph is built by running the EXISTING batched ``search_pipeline``
+over the corpus itself: every document's padded-sparse row becomes a
+query, the pipeline's merged top-(degree+1) answers it, and the
+document's own id is dropped from its result row. Two things fall out
+of that choice:
+
+  * the build is a corpus-sized stress test of the batched retrieval
+    kernels (fixed-shape chunked launches, one compile), and
+  * graph quality inherits the index's accuracy knobs — a generous
+    ``build_params`` (large ``block_budget``) gives near-exact edges.
+
+``compact_forward=True`` additionally rebuilds the padded forward
+index as u8-quantized values with per-doc affine (scale, zero) and
+u16 coords (dim < 65536) BEFORE the graph build, so both the scorer
+stage and the refine stage's rescore run the fused-dequant
+``gather_dot`` path over one compact ``[n_docs, doc_nnz]`` plane —
+the BigANN-scale memory configuration. Refinement always rescores
+through the index's own forward plane (see ``refine.py`` on why score
+consistency with the scorer is load-bearing), so compaction is a
+whole-pipeline decision, not a refine-only one.
+
+Neighbors are stored score-descending with the sentinel ``n_docs``
+padding missing edges, so any prefix of a higher-degree build is a
+valid lower-degree graph (``SearchParams.graph_degree`` may be any
+value up to the built degree).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import TYPE_CHECKING
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.retrieval.params import SearchParams
+from repro.sparse.ops import PaddedSparse
+from repro.sparse.quant import dequantize_u8, quantize_u8
+
+if TYPE_CHECKING:  # annotation-only: repro.core imports the retrieval
+    from repro.core.types import SeismicIndex  # pipeline, which imports
+    #                                            repro.graph — a module-
+    #                                            level import here would
+    #                                            close that cycle
+
+
+def doc_queries(index: SeismicIndex) -> PaddedSparse:
+    """The corpus as a query batch: dequantized f32 forward rows."""
+    fwd = index.fwd
+    if index.fwd_scale is not None:
+        vals = dequantize_u8(fwd.vals, index.fwd_scale, index.fwd_zero)
+    else:
+        vals = fwd.vals.astype(jnp.float32)
+    return PaddedSparse(fwd.coords.astype(jnp.int32), vals, fwd.dim)
+
+
+def compact_forward_index(index: SeismicIndex) -> SeismicIndex:
+    """Swap the forward plane for its u8-quantized padded layout
+    (per-doc affine scale/zero, u16 coords when dim < 65536) — the
+    same compaction ``SeismicConfig.fwd_quant`` applies at build time.
+    No-op if the index is already compact."""
+    if index.fwd_scale is not None:
+        return index
+    q, scale, zero = quantize_u8(index.fwd.vals.astype(jnp.float32))
+    cdt = jnp.uint16 if index.dim < 65536 else jnp.int32
+    fwd = PaddedSparse(index.fwd.coords.astype(cdt), q, index.dim)
+    cfg = dataclasses.replace(index.config, fwd_quant=True)
+    return dataclasses.replace(index, fwd=fwd, fwd_scale=scale,
+                               fwd_zero=zero, config=cfg)
+
+
+def _drop_self(ids: np.ndarray, start: int, degree: int,
+               n_docs: int) -> np.ndarray:
+    """Per row: remove the row's own doc id and -1 padding, keep the
+    first ``degree`` survivors (score order preserved), sentinel-pad."""
+    rows = ids.shape[0]
+    own = (start + np.arange(rows))[:, None]
+    keep = (ids != own) & (ids >= 0)
+    # stable argsort on ~keep floats kept entries to the front in order
+    order = np.argsort(~keep, axis=1, kind="stable")
+    picked = np.take_along_axis(ids, order, axis=1)[:, :degree]
+    kept = np.take_along_axis(keep, order, axis=1)[:, :degree]
+    return np.where(kept, picked, n_docs).astype(np.int32)
+
+
+def build_doc_graph(index: SeismicIndex, *, degree: int = 8,
+                    build_params: SearchParams | None = None,
+                    batch: int = 256,
+                    compact_forward: bool = False) -> SeismicIndex:
+    """Attach a document kNN graph to a built index; returns the
+    extended index (the ``knn_ids`` artifact rides the ``SeismicIndex``
+    pytree, so ``ckpt.save_index`` persists it with back-compat).
+
+    ``build_params`` defaults to a generous budget-policy search with
+    ``k = degree + 1`` (the +1 absorbs the self match). The corpus is
+    chunked into fixed ``[batch, nnz_d]`` launches so the jitted
+    pipeline compiles once.
+    """
+    # deferred: retrieval.pipeline imports repro.graph.refine, so a
+    # module-level import here would close an import cycle through the
+    # package __init__
+    from repro.retrieval.pipeline import search_pipeline
+    if degree <= 0:
+        raise ValueError(f"degree must be positive, got {degree}")
+    if build_params is None:
+        build_params = SearchParams(
+            k=degree + 1, cut=8, block_budget=64, policy="budget")
+    elif build_params.k < degree + 1:
+        raise ValueError(
+            f"build_params.k={build_params.k} cannot yield degree="
+            f"{degree} neighbors after dropping the self match")
+    if compact_forward:
+        index = compact_forward_index(index)
+    n = index.n_docs
+    queries = doc_queries(index)
+    nbrs = np.empty((n, degree), np.int32)
+    for s in range(0, n, batch):
+        chunk = queries[s:s + batch]
+        real = chunk.n
+        pad = batch - real
+        if pad:      # last chunk: pad to the compiled launch shape
+            chunk = PaddedSparse(
+                jnp.pad(chunk.coords, ((0, pad), (0, 0))),
+                jnp.pad(chunk.vals, ((0, pad), (0, 0))), chunk.dim)
+        _, ids, _ = search_pipeline(index, chunk, build_params)
+        nbrs[s:s + real] = _drop_self(np.asarray(ids)[:real], s, degree, n)
+    return dataclasses.replace(index, knn_ids=jnp.asarray(nbrs))

@@ -24,6 +24,10 @@ batch and every stage can be timed, swapped, or sharded independently:
               paper phase S; ``kernels/gather_dot`` batched kernel,
               compact-index u8 dequant fused)
     merge     cand, scores      ->  top-k ids/scores + docs_evaluated
+    refine    top-k             ->  top-k (recall-recovered)
+              (kNN-graph neighbor expansion + exact rescore + re-merge,
+              ``repro.graph``; gated on ``SearchParams.graph_degree`` /
+              ``refine_rounds`` — 0 traces as the identity)
 
 Stage contract
 --------------
@@ -51,7 +55,7 @@ Entry points
 ``search_pipeline(index, queries, p)``  jitted batched search
 ``run_pipeline(index, q_coords, q_vals, p)``  traceable core (use
 inside shard_map / larger jitted programs).
-``stage_fns`` / ``run_pipeline_staged``  the same pipeline as five
+``stage_fns`` / ``run_pipeline_staged``  the same pipeline as six
 standalone-jitted stages with per-stage wall-time reporting — the
 timing hooks behind serving telemetry and the stage benchmark.
 """

@@ -32,3 +32,11 @@ class SearchParams:
     #                               their children's block summaries are
     #                               scored (work = cut * n_superblocks +
     #                               superblock_budget * fanout)
+    graph_degree: int = 0         # kNN-graph refinement: neighbors expanded
+    #                               per merged top-k doc (<= the built
+    #                               graph degree; 0 = refine stage is a
+    #                               bit-exact no-op)
+    refine_rounds: int = 0        # kNN-graph refinement: frontier
+    #                               expansions per query (each round
+    #                               expands + rescores + re-merges;
+    #                               0 = refine stage is a bit-exact no-op)

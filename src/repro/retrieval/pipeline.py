@@ -1,11 +1,17 @@
-"""Pipeline orchestration: prep -> router -> selector -> scorer -> merge.
+"""Pipeline orchestration: prep -> router -> selector -> scorer ->
+merge -> refine.
 
 ``run_pipeline`` is the traceable batch-first core shared by every
 execution surface (local search_batch, SeismicServer, the distributed
 shard_map search); ``search_pipeline`` is its jitted front door.
 ``stage_fns`` / ``run_pipeline_staged`` expose the same pipeline as
-five standalone-jitted stages for per-stage latency attribution (the
+six standalone-jitted stages for per-stage latency attribution (the
 serving telemetry and the stage-throughput benchmark both hook here).
+
+The sixth stage (refine — kNN-graph neighbor expansion, see
+``repro.graph``) is gated on ``SearchParams.graph_degree`` /
+``refine_rounds``; with either at 0 it traces as the identity, so the
+five-stage program of earlier revisions is reproduced bit-exactly.
 """
 from __future__ import annotations
 
@@ -15,6 +21,7 @@ from typing import TYPE_CHECKING, Callable
 
 import jax
 
+from repro.graph.refine import refine_batch
 from repro.retrieval.merge import merge_topk
 from repro.retrieval.params import SearchParams
 from repro.retrieval.prep import prep_queries
@@ -40,7 +47,8 @@ def run_pipeline(index: SeismicIndex, q_coords: jax.Array,
     batch = route_batch(index, q_dense, lists, p)
     sel = select(index, batch, p)
     cand, scores = score_selection(index, batch, sel, p.use_kernel)
-    return merge_topk(cand, scores, p.k, index.n_docs)
+    top_s, top_ids, ev = merge_topk(cand, scores, p.k, index.n_docs)
+    return refine_batch(index, q_dense, top_s, top_ids, ev, p)
 
 
 @partial(jax.jit, static_argnames=("p",))
@@ -53,7 +61,7 @@ def search_pipeline(index: SeismicIndex, queries: PaddedSparse,
     return run_pipeline(index, queries.coords, queries.vals, p)
 
 
-STAGES = ("prep", "router", "selector", "scorer", "merge")
+STAGES = ("prep", "router", "selector", "scorer", "merge", "refine")
 
 
 def stage_fns(index: SeismicIndex, p: SearchParams
@@ -76,6 +84,8 @@ def stage_fns(index: SeismicIndex, p: SearchParams
         "scorer": jax.jit(
             lambda b, s: score_selection(index, b, s, p.use_kernel)),
         "merge": jax.jit(lambda c, s: merge_topk(c, s, p.k, index.n_docs)),
+        "refine": jax.jit(
+            lambda qd, s, i, e: refine_batch(index, qd, s, i, e, p)),
     }
 
 
@@ -105,4 +115,5 @@ def run_pipeline_staged(index: SeismicIndex, q_coords: jax.Array,
     batch = timed("router", fns["router"], q_dense, lists)
     sel = timed("selector", fns["selector"], batch)
     cand, scores = timed("scorer", fns["scorer"], batch, sel)
-    return timed("merge", fns["merge"], cand, scores)
+    top_s, top_ids, ev = timed("merge", fns["merge"], cand, scores)
+    return timed("refine", fns["refine"], q_dense, top_s, top_ids, ev)

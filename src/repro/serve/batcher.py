@@ -6,8 +6,11 @@ thread, coalesces whatever is in flight into fixed-shape
 (dispatch on batch-full OR oldest-deadline-expiry, never recompiling),
 and fulfills per-request futures. Around that core sit admission
 control (bounded queue, ``reject`` / ``shed_oldest``), a quantized-
-fingerprint LRU result cache, and telemetry (per-stage latency when
-``stage_timing`` is on, queue depth, batch occupancy, cache hit-rate).
+fingerprint LRU result cache, request coalescing (concurrently
+in-flight requests with identical quantized fingerprints share one
+launch slot — the LRU only catches repeats *after* the first
+completes), and telemetry (per-stage latency when ``stage_timing`` is
+on, queue depth, batch occupancy, cache hit-rate).
 
 The synchronous ``SeismicServer`` facade in ``engine`` remains the
 simple offline-batch path; this class is the serving path every
@@ -24,6 +27,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.types import SeismicIndex
+from repro.graph.refine import validate_refine_params
 from repro.retrieval import SearchParams, search_pipeline
 from repro.retrieval.pipeline import run_pipeline_staged, stage_fns
 from repro.serve.cache import LRUCache, query_fingerprint
@@ -40,6 +44,7 @@ class ServeResult:
     scores: np.ndarray         # f32 [k]
     docs_evaluated: int
     cached: bool = False
+    coalesced: bool = False    # fulfilled from another request's slot
     latency_s: float = 0.0     # submit -> fulfil wall time
     occupancy: int = 0         # real queries in the serving launch
 
@@ -60,6 +65,10 @@ class AsyncSeismicServer:
                   ("reject" new requests or "shed_oldest" queued ones).
     cache_size    LRU entries keyed on quantized query fingerprints;
                   0 disables caching.
+    coalesce      share one launch slot among concurrently in-flight
+                  requests with identical quantized fingerprints (the
+                  LRU cache only catches repeats after the first
+                  completes; this catches the simultaneous burst).
     stage_timing  serve through the stage-by-stage pipeline and record
                   ``stage_*`` latency histograms (slightly slower than
                   the fused launch; keep off unless profiling).
@@ -69,8 +78,9 @@ class AsyncSeismicServer:
                  max_batch: int = 32, query_nnz: int = 32,
                  deadline_s: float = 2e-3, queue_bound: int = 1024,
                  admission: str = "reject", cache_size: int = 0,
-                 stage_timing: bool = False,
+                 coalesce: bool = True, stage_timing: bool = False,
                  telemetry: ServerTelemetry | None = None):
+        validate_refine_params(index, params)   # fail before threads spin
         self.index = index
         self.params = params
         self.max_batch = max_batch
@@ -79,6 +89,9 @@ class AsyncSeismicServer:
         self.stage_timing = stage_timing
         self.queue = RequestQueue(bound=queue_bound, policy=admission)
         self.cache = LRUCache(cache_size) if cache_size > 0 else None
+        self.coalesce = coalesce
+        self._inflight: dict[bytes, Request] = {}
+        self._coalesce_lock = threading.Lock()
         self.telemetry = telemetry if telemetry is not None \
             else ServerTelemetry()
         self._fns = stage_fns(index, params) if stage_timing else None
@@ -131,16 +144,20 @@ class AsyncSeismicServer:
                deadline_s: float | None = None) -> ServeFuture:
         """Enqueue one sparse query; returns its completion future.
 
-        Cache hits fulfil immediately without touching the queue.
-        Rejected / shed requests get a failed future (``status`` set),
-        never an exception on the submitting thread.
+        Cache hits fulfil immediately without touching the queue; a
+        request whose fingerprint matches one already in flight
+        attaches to that request's launch slot instead of occupying
+        its own (``coalesce``). Rejected / shed requests get a failed
+        future (``status`` set), never an exception on the submitting
+        thread.
         """
         tel = self.telemetry
         tel.inc("requests")
         c, v = self._normalize(coords, vals)
         key = None
-        if self.cache is not None:
+        if self.cache is not None or self.coalesce:
             key = query_fingerprint(c, v)
+        if self.cache is not None:
             hit = self.cache.get(key)       # hit/miss counted by the LRU
             if hit is not None:
                 fut = ServeFuture()
@@ -153,13 +170,27 @@ class AsyncSeismicServer:
                       deadline=now + (self.deadline_s if deadline_s is None
                                       else deadline_s),
                       future=ServeFuture(), cache_key=key)
-        status, shed = self.queue.put(req)
+        # the check-attach-or-enqueue-and-register must be atomic, or
+        # two racing duplicates both become primaries / a follower
+        # attaches to a request whose slot already fulfilled
+        with self._coalesce_lock:
+            if self.coalesce:
+                primary = self._inflight.get(key)
+                if primary is not None:
+                    primary.followers.append((req.future, now))
+                    tel.inc("coalesced")
+                    return req.future
+            status, shed = self.queue.put(req)
+            if status == "ok" and self.coalesce:
+                self._inflight[key] = req
+            if shed is not None:
+                self._unregister(shed)
         if status != "ok":
             tel.inc(status)                 # "rejected" or "closed"
             req.future._fail(status)
         elif shed is not None:
             tel.inc("shed")
-            shed.future._fail("shed")
+            self._fail_all(shed, "shed")
         tel.observe_queue_depth(self.queue.depth)
         return req.future
 
@@ -198,7 +229,29 @@ class AsyncSeismicServer:
                 self._launch(batch)
             except Exception as e:   # noqa: BLE001 — fail the batch, keep serving
                 for r in batch:
-                    r.future._fail(f"error: {type(e).__name__}: {e}")
+                    self._fail_all(r, f"error: {type(e).__name__}: {e}")
+
+    # --------------------------------------------- in-flight coalescing
+
+    def _unregister(self, req: Request) -> None:
+        """Drop ``req`` from the in-flight map (caller holds the lock
+        or owns the request). No more followers can attach after this."""
+        if req.cache_key is not None \
+                and self._inflight.get(req.cache_key) is req:
+            del self._inflight[req.cache_key]
+
+    def _finish_inflight(self, req: Request) -> list:
+        """Atomically retire ``req`` from the in-flight map and snapshot
+        its followers; later duplicates become fresh primaries."""
+        with self._coalesce_lock:
+            self._unregister(req)
+            return req.followers
+
+    def _fail_all(self, req: Request, status: str) -> None:
+        """Fail a request's future and every coalesced follower."""
+        for f, _ in self._finish_inflight(req):
+            f._fail(status)
+        req.future._fail(status)
 
     def _launch(self, batch: list[Request]) -> None:
         """One fixed-shape pipeline launch serving ``len(batch)`` rows."""
@@ -228,6 +281,7 @@ class AsyncSeismicServer:
         scores = np.asarray(scores)
         ev = np.asarray(ev)
         done_t = time.monotonic()
+        served = 0
         for i, r in enumerate(batch):
             if self.cache is not None and r.cache_key is not None:
                 # copies: don't let caller mutation poison hits, don't
@@ -237,10 +291,24 @@ class AsyncSeismicServer:
                                 int(ev[i])))
             tel.record_latency("queue_wait", dispatch_t - r.submit_t)
             tel.record_latency("request_e2e", done_t - r.submit_t)
+            # retire from the in-flight map BEFORE fulfilling: once the
+            # followers snapshot is taken no new duplicate can attach
+            # to this slot (they re-enter as cache hits / new primaries)
+            followers = self._finish_inflight(r)
+            for f, t_sub in followers:
+                # a follower attached mid-execution waited 0 in queue
+                tel.record_latency("queue_wait",
+                                   max(0.0, dispatch_t - t_sub))
+                tel.record_latency("request_e2e", done_t - t_sub)
+                f._set(ServeResult(
+                    ids=ids[i].copy(), scores=scores[i].copy(),
+                    docs_evaluated=int(ev[i]), coalesced=True,
+                    latency_s=done_t - t_sub, occupancy=n))
             r.future._set(ServeResult(
                 ids=ids[i], scores=scores[i], docs_evaluated=int(ev[i]),
                 cached=False, latency_s=done_t - r.submit_t, occupancy=n))
-        tel.inc("served", n)
+            served += 1 + len(followers)
+        tel.inc("served", served)
 
     # --------------------------------------------------------- helpers
 

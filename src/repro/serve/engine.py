@@ -80,6 +80,8 @@ class SeismicServer:
     def __init__(self, index: SeismicIndex, params: SearchParams,
                  max_batch: int = 256, *,
                  telemetry: ServerTelemetry | None = None):
+        from repro.graph.refine import validate_refine_params
+        validate_refine_params(index, params)   # fail before first launch
         self.index = index
         self.params = params
         self.max_batch = max_batch

@@ -68,6 +68,13 @@ class Request:
     deadline: float             # absolute monotonic dispatch deadline
     future: ServeFuture
     cache_key: bytes | None = None
+    # in-flight coalescing: (future, submit_t) of identical-fingerprint
+    # requests submitted while this one was queued/executing —
+    # fulfilled from this request's launch slot with their OWN submit
+    # times, so per-request latency stays honest (appended only under
+    # the batcher's coalesce lock)
+    followers: list[tuple[ServeFuture, float]] = \
+        dataclasses.field(default_factory=list)
 
 
 class RequestQueue:

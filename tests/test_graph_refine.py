@@ -1,0 +1,345 @@
+"""kNN-graph refinement subsystem (repro.graph): verification suite.
+
+The refine stage's contracts, each checked mechanically:
+
+  * gating — ``graph_degree=0`` or ``refine_rounds=0`` traces as the
+    identity, so a graph-carrying index is BIT-EXACT with the plain
+    five-stage pipeline when the knobs are off;
+  * monotonicity — refine rescoring goes through the scorer's own
+    ``score_candidates`` (same forward plane), so the merged objective
+    is uniform and recall@10 is monotone non-decreasing in
+    ``refine_rounds``;
+  * recovery — at a halved block budget, degree-8/1-round refinement
+    lifts recall@10 by >= 5 points (the benchmark gate, enforced here
+    at test scale);
+  * artifacts — graph edges exclude self, respect the degree prefix
+    property, and round-trip through ``ckpt.save_index`` (graph
+    present AND pre-graph back-compat);
+  * kernel parity — ``use_kernel=True`` refinement (interpret-mode
+    Pallas gather_dot) matches the jnp path;
+  * adaptive fanout — ``core.build.suggest_fanout`` and its
+    ``configs/seismic_msmarco`` wiring.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.core import (SeismicConfig, build_index, live_blocks,
+                        suggest_fanout)
+from repro.core.baselines import exact_search
+from repro.core.oracle import recall_at_k
+from repro.data import SyntheticSparseConfig, make_collection
+from repro.graph import (build_doc_graph, compact_forward_index,
+                         expand_neighbors, validate_refine_params)
+from repro.retrieval import SearchParams, search_pipeline
+from repro.sparse.ops import PaddedSparse
+
+DEGREE = 8
+
+
+def _collection(seed=3, dim=512, n_docs=2048, n_queries=24):
+    cfg = SyntheticSparseConfig(dim=dim, n_docs=n_docs,
+                                n_queries=n_queries, doc_nnz=32,
+                                query_nnz=12, n_topics=16,
+                                topic_coords=96, seed=seed)
+    docs_np, queries_np, _ = make_collection(cfg)
+    docs = PaddedSparse(jnp.asarray(docs_np.coords),
+                        jnp.asarray(docs_np.vals), docs_np.dim)
+    queries = PaddedSparse(jnp.asarray(queries_np.coords),
+                           jnp.asarray(queries_np.vals), queries_np.dim)
+    return docs, queries
+
+
+_cache: dict = {}
+
+
+def _built():
+    """(plain index, graph index, queries, exact ids) — built once."""
+    if "fix" not in _cache:
+        docs, queries = _collection()
+        icfg = SeismicConfig(lam=96, beta=8, alpha=0.4, block_cap=24,
+                             summary_nnz=24)
+        idx = build_index(docs, icfg, list_chunk=16)
+        gidx = build_doc_graph(
+            idx, degree=DEGREE, batch=256,
+            build_params=SearchParams(k=DEGREE + 1, cut=8,
+                                      block_budget=16, policy="budget"))
+        _, eids = exact_search(docs, queries, 10)
+        _cache["fix"] = (idx, gidx, queries, np.asarray(eids))
+    return _cache["fix"]
+
+
+def _recall(idx, queries, eids, p):
+    _, ids, _ = search_pipeline(idx, queries, p)
+    ids = np.asarray(ids)
+    return float(np.mean([recall_at_k(ids[q], eids[q])
+                          for q in range(ids.shape[0])]))
+
+
+# ------------------------------------------------------------- gating
+
+def _assert_same_results(a, b):
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_degree0_bitexact_with_plain_pipeline():
+    """The graph-carrying index with refinement off must reproduce the
+    five-stage (pre-graph) pipeline bit-exactly — scores, ids, AND
+    docs_evaluated."""
+    idx, gidx, queries, _ = _built()
+    for p in (SearchParams(k=10, cut=8, block_budget=8),
+              SearchParams(k=10, cut=8, block_budget=8, graph_degree=0,
+                           refine_rounds=3),
+              SearchParams(k=10, cut=8, block_budget=8,
+                           graph_degree=DEGREE, refine_rounds=0)):
+        _assert_same_results(search_pipeline(idx, queries, p),
+                             search_pipeline(gidx, queries, p))
+
+
+@pytest.mark.parametrize("policy", ["budget", "adaptive",
+                                    "global_threshold"])
+def test_degree0_bitexact_all_policies(policy):
+    idx, gidx, queries, _ = _built()
+    p = SearchParams(k=10, cut=8, block_budget=8, policy=policy)
+    _assert_same_results(search_pipeline(idx, queries, p),
+                         search_pipeline(gidx, queries, p))
+
+
+# -------------------------------------------------------- monotonicity
+
+def test_recall_monotone_in_refine_rounds():
+    """Refine rescoring shares the scorer's forward plane, so the
+    merged objective is uniform: the top-k only ever improves under it
+    and recall@10 never decreases as rounds grow."""
+    idx, gidx, queries, eids = _built()
+    p0 = SearchParams(k=10, cut=8, block_budget=4, policy="budget")
+    prev = _recall(idx, queries, eids, p0)
+    for rounds in (1, 2, 3):
+        p = dataclasses.replace(p0, graph_degree=DEGREE,
+                                refine_rounds=rounds)
+        r = _recall(gidx, queries, eids, p)
+        assert r >= prev, (rounds, prev, r)
+        prev = r
+
+
+def test_docs_evaluated_grows_with_rounds():
+    """Each round rescores only NEW candidates (dedupe against the
+    already-scored top-k), so docs_evaluated grows by at most
+    k * graph_degree per round and strictly grows while the frontier
+    is fresh."""
+    _, gidx, queries, _ = _built()
+    p0 = SearchParams(k=10, cut=8, block_budget=4, policy="budget")
+    _, _, ev_prev = search_pipeline(gidx, queries, p0)
+    ev_prev = np.asarray(ev_prev)
+    for rounds in (1, 2):
+        p = dataclasses.replace(p0, graph_degree=DEGREE,
+                                refine_rounds=rounds)
+        _, _, ev = search_pipeline(gidx, queries, p)
+        ev = np.asarray(ev)
+        assert (ev >= ev_prev).all()
+        assert (ev <= ev_prev + 10 * DEGREE).all()
+        ev_prev = ev
+
+
+def test_refined_topk_has_no_duplicates():
+    _, gidx, queries, _ = _built()
+    p = SearchParams(k=10, cut=8, block_budget=4, policy="budget",
+                     graph_degree=DEGREE, refine_rounds=2)
+    _, ids, _ = search_pipeline(gidx, queries, p)
+    ids = np.asarray(ids)
+    for q in range(ids.shape[0]):
+        real = ids[q][ids[q] >= 0]
+        assert len(set(real.tolist())) == real.size
+
+
+# ---------------------------------------------------- recall recovery
+
+def test_refine_lift_at_halved_budget():
+    """The benchmark acceptance gate at test scale: degree-8 one-round
+    refinement recovers >= 5 recall points at half the block budget."""
+    idx, gidx, queries, eids = _built()
+    p0 = SearchParams(k=10, cut=8, block_budget=4, policy="budget")
+    p1 = dataclasses.replace(p0, graph_degree=DEGREE, refine_rounds=1)
+    r0 = _recall(idx, queries, eids, p0)
+    r1 = _recall(gidx, queries, eids, p1)
+    assert r1 - r0 >= 0.05, (r0, r1)
+
+
+def test_refine_kernel_parity():
+    """use_kernel=True (interpret-mode Pallas gather_dot) must match
+    the jnp rescoring path."""
+    _, gidx, queries, _ = _built()
+    p = SearchParams(k=10, cut=8, block_budget=4, policy="budget",
+                     graph_degree=DEGREE, refine_rounds=2)
+    pk = dataclasses.replace(p, use_kernel=True)
+    s0, i0, e0 = search_pipeline(gidx, queries, p)
+    s1, i1, e1 = search_pipeline(gidx, queries, pk)
+    np.testing.assert_array_equal(np.asarray(i0), np.asarray(i1))
+    np.testing.assert_allclose(np.asarray(s0), np.asarray(s1),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(e0), np.asarray(e1))
+
+
+def test_compact_forward_graph_pipeline():
+    """compact_forward=True: u8 forward plane shared by scorer and
+    refine; the refined search still beats the unrefined one on the
+    SAME compact index (consistent objective)."""
+    idx, _, queries, eids = _built()
+    cgidx = build_doc_graph(
+        idx, degree=DEGREE, batch=256, compact_forward=True,
+        build_params=SearchParams(k=DEGREE + 1, cut=8, block_budget=16,
+                                  policy="budget"))
+    assert cgidx.fwd.vals.dtype == jnp.uint8
+    assert cgidx.fwd_scale is not None and cgidx.config.fwd_quant
+    p0 = SearchParams(k=10, cut=8, block_budget=4, policy="budget")
+    p1 = dataclasses.replace(p0, graph_degree=DEGREE, refine_rounds=1)
+    r0 = _recall(cgidx, queries, eids, p0)
+    r1 = _recall(cgidx, queries, eids, p1)
+    assert r1 - r0 >= 0.05, (r0, r1)
+
+
+# ----------------------------------------------------- graph artifact
+
+def test_graph_edges_exclude_self_and_padding():
+    _, gidx, *_ = _built()
+    nbrs = np.asarray(gidx.knn_ids)
+    n = gidx.n_docs
+    own = np.arange(n)[:, None]
+    assert (nbrs != own).all(), "self edges must be dropped"
+    assert ((nbrs >= 0) & (nbrs <= n)).all()   # real ids or sentinel n
+
+
+def test_graph_degree_prefix_property():
+    """graph_degree below the built degree uses the best-edge prefix:
+    expand_neighbors(d) rows are the first d columns of the full
+    expansion."""
+    _, gidx, queries, _ = _built()
+    p = SearchParams(k=10, cut=8, block_budget=4)
+    _, ids, _ = search_pipeline(gidx, queries, p)
+    full = np.asarray(expand_neighbors(gidx, ids, DEGREE)).reshape(
+        ids.shape[0], -1, DEGREE)
+    half = np.asarray(expand_neighbors(gidx, ids, DEGREE // 2)).reshape(
+        ids.shape[0], -1, DEGREE // 2)
+    np.testing.assert_array_equal(full[..., :DEGREE // 2], half)
+
+
+def test_expand_neighbors_padding_rows():
+    """-1 (padding) ids expand to the sentinel only."""
+    _, gidx, *_ = _built()
+    ids = jnp.asarray([[0, -1], [-1, -1]], jnp.int32)
+    out = np.asarray(expand_neighbors(gidx, ids, 4)).reshape(2, 2, 4)
+    assert (out[0, 1] == gidx.n_docs).all()
+    assert (out[1] == gidx.n_docs).all()
+    assert (out[0, 0] == np.asarray(gidx.knn_ids)[0, :4]).all()
+
+
+def test_validation_errors():
+    idx, gidx, queries, _ = _built()
+    with pytest.raises(ValueError, match="no kNN graph"):
+        validate_refine_params(
+            idx, SearchParams(graph_degree=4, refine_rounds=1))
+    with pytest.raises(ValueError, match="exceeds the built"):
+        validate_refine_params(
+            gidx, SearchParams(graph_degree=DEGREE + 1, refine_rounds=1))
+    # the same errors surface through the pipeline at trace time
+    with pytest.raises(ValueError, match="no kNN graph"):
+        search_pipeline(idx, queries,
+                        SearchParams(k=10, cut=8, graph_degree=4,
+                                     refine_rounds=1))
+    with pytest.raises(ValueError, match="cannot yield"):
+        build_doc_graph(idx, degree=DEGREE,
+                        build_params=SearchParams(k=DEGREE))
+    with pytest.raises(ValueError, match="positive"):
+        build_doc_graph(idx, degree=0)
+
+
+# --------------------------------------------------------------- ckpt
+
+def test_index_ckpt_roundtrip_with_graph(tmp_path):
+    from repro.ckpt import load_index, save_index
+    _, gidx, queries, _ = _built()
+    save_index(str(tmp_path), gidx)
+    gidx2 = load_index(str(tmp_path))
+    np.testing.assert_array_equal(np.asarray(gidx.knn_ids),
+                                  np.asarray(gidx2.knn_ids))
+    p = SearchParams(k=10, cut=8, block_budget=4, graph_degree=DEGREE,
+                     refine_rounds=2)
+    _assert_same_results(search_pipeline(gidx, queries, p),
+                         search_pipeline(gidx2, queries, p))
+
+
+def test_index_ckpt_pre_graph_backcompat(tmp_path):
+    """A checkpoint written WITHOUT the graph (the old layout) must
+    load with knn_ids=None and refuse refinement knobs cleanly."""
+    from repro.ckpt import load_index, save_index
+    idx, _, queries, _ = _built()
+    save_index(str(tmp_path), idx)
+    idx2 = load_index(str(tmp_path))
+    assert idx2.knn_ids is None and idx2.graph_degree == 0
+    p = SearchParams(k=10, cut=8, block_budget=8)
+    _assert_same_results(search_pipeline(idx, queries, p),
+                         search_pipeline(idx2, queries, p))
+    with pytest.raises(ValueError, match="no kNN graph"):
+        search_pipeline(idx2, queries,
+                        dataclasses.replace(p, graph_degree=4,
+                                            refine_rounds=1))
+
+
+def test_nbytes_accounts_graph():
+    idx, gidx, *_ = _built()
+    nb, gnb = idx.nbytes(), gidx.nbytes()
+    assert nb["graph"] == 0
+    assert gnb["graph"] == gidx.knn_ids.nbytes > 0
+    assert gnb["total"] == nb["total"] + gnb["graph"]
+
+
+# ----------------------------------------------------- adaptive fanout
+
+def test_suggest_fanout_single_block_lists():
+    """Collections dominated by single-block lists must get fanout 0 —
+    the coarse tier would be pure overhead."""
+    assert suggest_fanout(np.ones(256)) == 0
+    assert suggest_fanout(np.zeros(256)) == 0
+    assert suggest_fanout([]) == 0
+    assert suggest_fanout([2, 1, 2, 1]) == 0
+
+
+def test_suggest_fanout_scales_like_sqrt():
+    assert suggest_fanout(np.full(64, 9)) == 3
+    assert suggest_fanout(np.full(64, 25)) == 5
+    assert suggest_fanout(np.full(64, 100)) == 8     # capped
+    assert suggest_fanout(np.full(64, 100), max_fanout=16) == 10
+
+
+def test_suggest_fanout_on_built_index_routes():
+    """The suggested fanout from real live-block stats must build a
+    working hierarchical index (routing parity at generous budget)."""
+    docs, queries = _collection()
+    icfg = SeismicConfig(lam=96, beta=8, alpha=0.4, block_cap=24,
+                         summary_nnz=24)
+    idx = build_index(docs, icfg, list_chunk=16)
+    f = suggest_fanout(live_blocks(idx))
+    assert f >= 2       # multi-block lists at this config
+    hidx = build_index(docs, dataclasses.replace(icfg,
+                                                 superblock_fanout=f),
+                       list_chunk=16)
+    pf = SearchParams(k=10, cut=8, block_budget=8)
+    ph = dataclasses.replace(pf, superblock_fanout=f,
+                             superblock_budget=8 * hidx.config.n_superblocks)
+    _assert_same_results(search_pipeline(idx, queries, pf),
+                         search_pipeline(hidx, queries, ph))
+
+
+def test_config_hier_variants():
+    from repro.configs.seismic_msmarco import (CONFIG, CONFIG_HIER,
+                                               REDUCED, REDUCED_HIER,
+                                               with_suggested_fanout)
+    assert CONFIG_HIER.index.superblock_fanout > 0
+    assert REDUCED_HIER.index.superblock_fanout > 0
+    assert CONFIG.index.superblock_fanout == 0      # base stays flat
+    # single-block stats: unchanged config comes back
+    same = with_suggested_fanout(REDUCED, np.ones(REDUCED.dim))
+    assert same is REDUCED

@@ -105,10 +105,10 @@ def test_admission_reject_new(small_index, small_collection):
     _, queries, *_ = small_collection
     srv = _server(small_index, queue_bound=2, admission="reject",
                   max_batch=4, deadline_s=0.2)
-    c = np.asarray(queries.coords[0])
-    v = np.asarray(queries.vals[0])
-    # don't start the worker: the queue must actually fill
-    futs = [srv.submit(c, v) for _ in range(4)]
+    # don't start the worker: the queue must actually fill (distinct
+    # queries — identical ones would coalesce instead of queueing)
+    futs = [srv.submit(np.asarray(queries.coords[i]),
+                       np.asarray(queries.vals[i])) for i in range(4)]
     statuses = [f.status for f in futs]
     assert statuses.count("rejected") == 2
     assert srv.telemetry_export()["counters"]["rejected"] == 2
@@ -119,9 +119,8 @@ def test_admission_shed_oldest(small_index, small_collection):
     _, queries, *_ = small_collection
     srv = _server(small_index, queue_bound=2, admission="shed_oldest",
                   max_batch=4, deadline_s=0.2)
-    c = np.asarray(queries.coords[0])
-    v = np.asarray(queries.vals[0])
-    futs = [srv.submit(c, v) for _ in range(4)]
+    futs = [srv.submit(np.asarray(queries.coords[i]),
+                       np.asarray(queries.vals[i])) for i in range(4)]
     assert futs[0].status == "shed"
     assert futs[1].status == "shed"
     assert futs[2].status == "pending"
@@ -192,6 +191,90 @@ def test_fingerprint_quantized_and_order_invariant():
     # padding (val 0) entries don't contribute
     assert query_fingerprint(np.append(c, 0), np.append(v, 0.0)) == base
     assert query_fingerprint(np.array([]), np.array([])) == b"empty"
+
+
+def test_inflight_coalescing_shares_launch_slot(small_index,
+                                                small_collection):
+    """Identical-fingerprint requests queued CONCURRENTLY must occupy
+    one launch slot: submit duplicates before the worker starts, then
+    let one batch serve them all (the LRU cache can't catch these —
+    no result exists yet when the duplicates arrive)."""
+    _, queries, *_ = small_collection
+    srv = _server(small_index, deadline_s=0.01)
+    c0 = np.asarray(queries.coords[0])
+    v0 = np.asarray(queries.vals[0])
+    c1 = np.asarray(queries.coords[1])
+    v1 = np.asarray(queries.vals[1])
+    futs = [srv.submit(c0, v0), srv.submit(c0, v0), srv.submit(c1, v1),
+            srv.submit(c0, v0)]
+    # three duplicates of q0 share the first request's slot
+    assert srv.queue.depth == 2
+    with srv:                              # worker drains the backlog
+        res = [f.result(10.0) for f in futs]
+    assert not res[0].coalesced and not res[2].coalesced
+    assert res[1].coalesced and res[3].coalesced
+    np.testing.assert_array_equal(res[0].ids, res[1].ids)
+    np.testing.assert_array_equal(res[0].ids, res[3].ids)
+    np.testing.assert_array_equal(res[0].scores, res[1].scores)
+    # followers own their storage (no aliasing with the primary's view)
+    assert not np.shares_memory(res[0].ids, res[1].ids)
+    tel = srv.telemetry_export()
+    assert tel["counters"]["coalesced"] == 2
+    assert tel["counters"]["served"] == 4  # all four requests fulfilled
+    assert tel["batch"]["occupancy_counts"] == {"2": 1}
+
+
+def test_inflight_coalescing_retires_after_fulfilment(small_index,
+                                                      small_collection):
+    """Once a request's slot fulfils, its fingerprint leaves the
+    in-flight map: a later duplicate becomes a fresh primary (or a
+    cache hit when the LRU is on), never a follower of a dead slot."""
+    _, queries, *_ = small_collection
+    srv = _server(small_index, deadline_s=0.005)
+    c = np.asarray(queries.coords[0])
+    v = np.asarray(queries.vals[0])
+    with srv:
+        first = srv.submit(c, v).result(10.0)
+        assert srv._inflight == {}         # retired with the launch
+        second = srv.submit(c, v).result(10.0)
+    assert not first.coalesced and not second.coalesced
+    np.testing.assert_array_equal(first.ids, second.ids)
+    assert srv.telemetry_export()["counters"].get("coalesced", 0) == 0
+
+
+def test_inflight_coalescing_disabled(small_index, small_collection):
+    _, queries, *_ = small_collection
+    srv = _server(small_index, coalesce=False, deadline_s=0.01)
+    c = np.asarray(queries.coords[0])
+    v = np.asarray(queries.vals[0])
+    f0, f1 = srv.submit(c, v), srv.submit(c, v)
+    assert srv.queue.depth == 2            # both occupy real slots
+    with srv:
+        r0, r1 = f0.result(10.0), f1.result(10.0)
+    assert not r0.coalesced and not r1.coalesced
+    np.testing.assert_array_equal(r0.ids, r1.ids)
+
+
+def test_shed_fails_followers(small_index, small_collection):
+    """Shedding a primary fails its coalesced followers too — no
+    orphaned futures hanging forever."""
+    _, queries, *_ = small_collection
+    srv = _server(small_index, queue_bound=1, admission="shed_oldest",
+                  deadline_s=30.0)
+    c0 = np.asarray(queries.coords[0])
+    v0 = np.asarray(queries.vals[0])
+    c1 = np.asarray(queries.coords[1])
+    v1 = np.asarray(queries.vals[1])
+    f_primary = srv.submit(c0, v0)
+    f_follower = srv.submit(c0, v0)        # coalesces onto f_primary
+    # bound=1: sheds f_primary (short deadline so the drain below
+    # doesn't wait out the server-default 30s)
+    f_new = srv.submit(c1, v1, deadline_s=0.01)
+    assert f_primary.status == "shed"
+    assert f_follower.status == "shed"
+    assert f_new.status == "pending"
+    with srv:                              # drain the survivor
+        assert f_new.result(10.0).ids.shape == (5,)
 
 
 def test_lru_cache_eviction():
