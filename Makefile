@@ -1,6 +1,6 @@
 PY ?= python
 
-.PHONY: test test-fast bench bench-serving bench-graph dev
+.PHONY: test test-fast bench bench-serving bench-graph bench-tune dev
 
 dev:
 	$(PY) -m pip install -r requirements-dev.txt
@@ -14,7 +14,8 @@ test-fast:
 	PYTHONPATH=src $(PY) -m pytest -q tests/test_retrieval.py \
 		tests/test_superblocks.py tests/test_seismic_core.py \
 		tests/test_sparse_ops.py tests/test_kernels.py \
-		tests/test_serve_async.py tests/test_graph_refine.py
+		tests/test_serve_async.py tests/test_graph_refine.py \
+		tests/test_tune_properties.py
 
 bench:
 	PYTHONPATH=src $(PY) -m benchmarks.run
@@ -26,3 +27,7 @@ bench-serving:
 # graph-refinement smoke: recall lift + degree-0 bit-exactness gates
 bench-graph:
 	PYTHONPATH=src $(PY) -m benchmarks.graph_refine --smoke
+
+# autotune smoke: tuned point beats hand configs + pre-tune back-compat
+bench-tune:
+	PYTHONPATH=src $(PY) -m benchmarks.autotune --smoke

@@ -1,0 +1,220 @@
+"""Recall-target autotuner benchmark + acceptance gate (repro.tune).
+
+Sweeps the coupled knob grid (block budget x selector factors x
+superblock budget x refine rounds) over a held-out query sample,
+reports the recall/cost Pareto frontier, tunes operating points for
+recall targets {0.90, 0.95}, and compares the tuned point against the
+repo's HAND-WRITTEN operating points (the ``SearchParams`` defaults,
+the msmarco ``SHAPES`` cell, and the hierarchical hand point — the
+knob sets ``CONFIG_HIER``/``REDUCED_HIER`` pair with by hand). Rows:
+
+  tune_sweep        grid size + sweep wall time
+  tune_frontier_*   the Pareto frontier (recall, docs, router dots)
+  tune_hand_*       each hand-written operating point, same cost model
+  tune_point        the tuned point: knobs, measured recall/cost,
+                    per-stage seconds (run_pipeline_staged), and gates
+  tune_backcompat   pre-tune checkpoint loads + searches bit-exact
+
+Exit gates (CI runs ``--smoke``; the full run gates identically):
+
+  * ``meets_target``: tuned recall@10 >= 0.90 on the held-out sample;
+  * ``cheaper_ok``: strictly fewer docs_evaluated than EVERY
+    hand-written operating point that reaches equal-or-better recall
+    than the target (the tuner must dominate hand tuning, not tie it);
+  * ``backcompat_ok``: an index saved WITHOUT a TunedPolicy loads and
+    searches bit-exact, and the tuned index's persisted policy
+    round-trips to bit-identical params and results.
+
+    PYTHONPATH=src python -m benchmarks.autotune [--smoke]
+"""
+from __future__ import annotations
+
+import tempfile
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import built_index, collection, row
+from repro.ckpt import load_index, save_index
+from repro.core import SeismicConfig, build_index, live_blocks, suggest_fanout
+from repro.core.baselines import exact_search
+from repro.data import SyntheticSparseConfig, make_collection
+from repro.graph import build_doc_graph
+from repro.retrieval import SearchParams, search_pipeline
+from repro.tune import (attach_tuned, default_grid, measure_point,
+                        pareto_frontier, sweep, tune)
+
+TARGET = 0.90
+TARGETS = (0.90, 0.95)
+DEGREE = 8
+
+SMOKE = SyntheticSparseConfig(dim=512, n_docs=2048, n_queries=24,
+                              doc_nnz=32, query_nnz=12, n_topics=16,
+                              topic_coords=96, seed=3)
+SMOKE_INDEX = SeismicConfig(lam=96, beta=8, alpha=0.4, block_cap=24,
+                            summary_nnz=24)
+
+
+def _fixture(smoke: bool):
+    """A built index carrying a kNN graph + superblock tier (the tuner
+    co-tunes across all of them), held-out queries, exact top-10."""
+    if smoke:
+        docs_np, queries_np, _ = make_collection(SMOKE)
+        from repro.sparse.ops import PaddedSparse
+        docs = PaddedSparse(jnp.asarray(docs_np.coords),
+                            jnp.asarray(docs_np.vals), docs_np.dim)
+        queries = PaddedSparse(jnp.asarray(queries_np.coords),
+                               jnp.asarray(queries_np.vals),
+                               queries_np.dim)
+        base_cfg = SMOKE_INDEX
+        idx = build_index(docs, base_cfg, list_chunk=16)
+        _, eids = exact_search(docs, queries, 10)
+        eids = np.asarray(eids)
+    else:
+        docs, queries, _, _, eids = collection()   # exact ids cached
+        idx, _ = built_index()
+        base_cfg = idx.config
+    # rebuild with the adaptive superblock tier so hierarchical grid
+    # points are explorable (fanout 0 when lists are too short)
+    fanout = suggest_fanout(live_blocks(idx))
+    if fanout:
+        import dataclasses
+        idx = build_index(docs, dataclasses.replace(
+            base_cfg, superblock_fanout=fanout), list_chunk=16)
+    idx = build_doc_graph(idx, degree=DEGREE, batch=256,
+                          build_params=SearchParams(
+                              k=DEGREE + 1, cut=8,
+                              block_budget=16 if smoke else 64,
+                              policy="budget"))
+    return idx, queries, eids
+
+
+def _hand_points(idx):
+    """The repo's hand-written operating points (what ``CONFIG_HIER`` /
+    ``REDUCED_HIER`` pair with before tuning)."""
+    hands = {
+        # SearchParams defaults — the untuned "just search" point
+        "default": SearchParams(k=10, cut=8, block_budget=32,
+                                policy="adaptive"),
+        # configs/seismic_msmarco SHAPES query cells
+        "shapes": SearchParams(k=10, cut=10, block_budget=64,
+                               policy="budget"),
+    }
+    if idx.sup_coords is not None:
+        f = idx.config.superblock_fanout
+        hands["hier"] = SearchParams(k=10, cut=8, block_budget=32,
+                                     policy="budget",
+                                     superblock_fanout=f,
+                                     superblock_budget=16)
+    return hands
+
+
+def run(smoke: bool = False):
+    idx, queries, eids = _fixture(smoke)
+    grid = default_grid(idx, k=10, cut=8)
+
+    t0 = time.time()
+    points = sweep(idx, queries, eids, k=10, grid=grid)
+    sweep_s = time.time() - t0
+    yield row("tune_sweep", sweep_s * 1e6 / max(len(points), 1),
+              grid_points=len(points), queries=queries.n,
+              wall_s=f"{sweep_s:.1f}")
+
+    for i, pt in enumerate(pareto_frontier(points)):
+        p = pt.params
+        yield row(f"tune_frontier_{i}", 0.0, recall10=f"{pt.recall:.3f}",
+                  docs_eval=f"{pt.docs_evaluated:.0f}",
+                  router_dots=pt.router_cost, policy=p.policy,
+                  block_budget=p.block_budget,
+                  superblock_budget=(p.superblock_budget
+                                     if p.superblock_fanout else 0),
+                  refine_rounds=p.refine_rounds)
+
+    hands = {name: measure_point(idx, queries, eids, p)
+             for name, p in _hand_points(idx).items()}
+    for name, pt in hands.items():
+        yield row(f"tune_hand_{name}", 0.0, recall10=f"{pt.recall:.3f}",
+                  docs_eval=f"{pt.docs_evaluated:.0f}",
+                  router_dots=pt.router_cost,
+                  block_budget=pt.params.block_budget,
+                  policy=pt.params.policy)
+
+    pols = [tune(idx, queries, eids, t, points=points) for t in TARGETS]
+    tuned = pols[0]
+    # re-measure the chosen point through the staged pipeline so the
+    # advisory per-stage seconds ride the report
+    staged = measure_point(idx, queries, eids, tuned.to_params(),
+                           timings=True)
+    meets_target = tuned.measured_recall >= TARGET
+    # hand points below the target are dominated outright (the tuned
+    # point reaches strictly better recall); the strict docs_evaluated
+    # comparison applies to the rivals that reach it. With zero rivals
+    # the gate is vacuously true — hand_rivals in the row makes that
+    # case visible rather than a false CI failure.
+    rivals = {n: pt for n, pt in hands.items() if pt.recall >= TARGET}
+    cheaper_ok = all(tuned.measured_cost < pt.docs_evaluated
+                     for pt in rivals.values())
+    stage_s = ";".join(f"{n}={s*1e3:.1f}ms" for n, s in staged.stage_seconds)
+    yield row("tune_point", 0.0, target=TARGET,
+              recall10=f"{tuned.measured_recall:.3f}",
+              docs_eval=f"{tuned.measured_cost:.0f}",
+              router_dots=tuned.router_cost, policy=tuned.policy,
+              block_budget=tuned.block_budget,
+              refine_rounds=tuned.refine_rounds,
+              fingerprint=tuned.sample_fingerprint,
+              stages=stage_s, meets_target=meets_target,
+              hand_rivals=len(rivals), cheaper_ok=cheaper_ok)
+
+    # ---- back-compat: untuned ckpt bit-exact; tuned ckpt round-trips
+    p_ref = SearchParams(k=10, cut=8, block_budget=16, policy="budget")
+    s0, i0, e0 = search_pipeline(idx, queries, p_ref)
+    tidx = attach_tuned(idx, pols)
+    with tempfile.TemporaryDirectory() as d:
+        save_index(d, idx)                      # no TunedPolicy attached
+        plain = load_index(d)
+        ok_plain = plain.tuned == ()
+        s1, i1, e1 = search_pipeline(plain, queries, p_ref)
+        ok_plain &= (np.array_equal(np.asarray(s0), np.asarray(s1))
+                     and np.array_equal(np.asarray(i0), np.asarray(i1))
+                     and np.array_equal(np.asarray(e0), np.asarray(e1)))
+    with tempfile.TemporaryDirectory() as d:
+        save_index(d, tidx)
+        loaded = load_index(d)
+        pt0 = SearchParams.from_tuned(tidx, TARGET)
+        pt1 = SearchParams.from_tuned(loaded, TARGET)
+        ok_tuned = (loaded.tuned == tidx.tuned) and (pt0 == pt1)
+        st0, it0, _ = search_pipeline(tidx, queries, pt0)
+        st1, it1, _ = search_pipeline(loaded, queries, pt1)
+        ok_tuned &= (np.array_equal(np.asarray(st0), np.asarray(st1))
+                     and np.array_equal(np.asarray(it0), np.asarray(it1)))
+    yield row("tune_backcompat", 0.0,
+              backcompat_ok=bool(ok_plain and ok_tuned),
+              untuned_bitexact=bool(ok_plain),
+              tuned_roundtrip=bool(ok_tuned))
+
+
+def main(argv=None) -> None:
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny collection (CI smoke); same exit gates")
+    args = ap.parse_args(argv)
+    print("name,us_per_call,derived")
+    bad = []
+    for line in run(smoke=args.smoke):
+        print(line)
+        if ("meets_target=False" in line or "cheaper_ok=False" in line
+                or "backcompat_ok=False" in line):
+            bad.append(line)
+    if bad:
+        raise SystemExit(
+            "autotune acceptance failed (tuned point must meet recall "
+            f"target {TARGET} with strictly fewer docs_evaluated than "
+            "every hand config at equal-or-better recall, and pre-tune "
+            "checkpoints must stay bit-exact):\n" + "\n".join(bad))
+
+
+if __name__ == "__main__":
+    main()

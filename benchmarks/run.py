@@ -11,7 +11,7 @@ import time
 
 MODULES = ["fig1_concentration", "table1_tradeoff", "table2_space_build",
            "fig5_blocking", "fig6_summaries", "pipeline_throughput",
-           "serving_load", "graph_refine"]
+           "serving_load", "graph_refine", "autotune"]
 
 
 def main() -> None:

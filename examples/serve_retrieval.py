@@ -1,5 +1,11 @@
 """Serving demo: the synchronous SeismicServer facade, the async
-deadline micro-batching server, and a small LMDecoder generation loop.
+deadline micro-batching server, serving a TUNED operating point
+resolved from the index, and a small LMDecoder generation loop.
+
+Every retrieval launch runs the six-stage pipeline
+(prep -> router -> selector -> scorer -> merge -> refine; see
+src/repro/retrieval/README.md) — the refine stage traces as the
+identity until an index carries a kNN graph and the params enable it.
 
     PYTHONPATH=src python examples/serve_retrieval.py
 """
@@ -13,9 +19,11 @@ from repro.core import SeismicConfig, SearchParams, build_index
 from repro.core.baselines import exact_search
 from repro.core.oracle import recall_at_k
 from repro.data import SyntheticSparseConfig, make_collection
+from repro.graph import build_doc_graph
 from repro.models.api import get_bundle
 from repro.serve import AsyncSeismicServer, LMDecoder, SeismicServer
 from repro.sparse.ops import PaddedSparse
+from repro.tune import tune_and_attach
 
 
 def build_demo_index():
@@ -87,6 +95,35 @@ def async_demo(queries, index):
           f"({tel['cache']['hits']} hits)")
 
 
+def tuned_demo(docs, queries, index):
+    """Tune an operating point for a recall target on a held-out query
+    sample, persist it ON the index, and serve with params resolved
+    from the artifact instead of hand-picked knobs."""
+    print("== TunedPolicy: autotuned operating point ==")
+    index = build_doc_graph(index, degree=8, batch=256)   # refine tier
+    held_out, rest = queries[:64], queries[64:]
+    _, eids = exact_search(docs, held_out, 10)
+    # small coupled grid: block budget down vs refine rounds up
+    grid = [SearchParams(k=10, cut=10, block_budget=b, policy="budget",
+                         graph_degree=d, refine_rounds=r)
+            for b in (4, 8, 16) for d, r in ((0, 0), (8, 1))]
+    index = tune_and_attach(index, held_out, np.asarray(eids),
+                            targets=[0.9], grid=grid)
+    pol = index.tuned[0]
+    print(f"   tuned@{pol.target}: block_budget={pol.block_budget} "
+          f"refine_rounds={pol.refine_rounds} "
+          f"(measured recall={pol.measured_recall:.3f}, "
+          f"{pol.measured_cost:.0f} docs/query)")
+    params = SearchParams.from_tuned(index, target=0.9)
+    server = SeismicServer(index, params, max_batch=128)  # validates
+    result = server.search(rest)
+    _, exact_ids = exact_search(docs, rest, 10)
+    rec = np.mean([recall_at_k(result.ids[q], np.asarray(exact_ids[q]))
+                   for q in range(rest.n)])
+    print(f"   served {rest.n} fresh queries at recall@10={rec:.3f}, "
+          f"mean docs evaluated={result.docs_evaluated.mean():.0f}")
+
+
 def decode_demo():
     print("== LMDecoder: KV-cache batched generation ==")
     bundle = get_bundle("gemma3-27b")          # reduced: dual-cache path
@@ -104,4 +141,5 @@ if __name__ == "__main__":
     docs, queries, index = build_demo_index()
     retrieval_demo(docs, queries, index)
     async_demo(queries, index)
+    tuned_demo(docs, queries, index)
     decode_demo()

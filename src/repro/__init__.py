@@ -8,6 +8,7 @@ Layers:
   data/        synthetic data generators + host pipeline
   train/       optimizer, train loop, grad compression
   serve/       decode + retrieval serving engines
+  tune/        recall-target operating-point autotuner (TunedPolicy)
   ckpt/        sharded checkpointing with elastic re-mesh
   distributed/ mesh helpers, sharding rules, roofline math
   configs/     selectable architecture configs (--arch <id>)

@@ -112,7 +112,10 @@ def save_index(path: str, index, *, step: int = 0) -> str:
     """Persist a ``SeismicIndex`` atomically (named-field npz + config
     JSON). Optional tiers (compact forward index, superblock summaries,
     kNN graph) are stored only when present, so old loaders skip
-    unknown fields and new loaders default absent fields to ``None``."""
+    unknown fields and new loaders default absent fields to ``None``.
+    Tuned operating points (``repro.tune.TunedPolicy``) are static
+    metadata, not arrays: they ride the JSON manifest (absent on an
+    untuned index, so pre-tune checkpoints are byte-identical)."""
     import dataclasses
     final = os.path.join(path, f"index_{step:08d}")
     tmp = final + ".tmp"
@@ -120,7 +123,7 @@ def save_index(path: str, index, *, step: int = 0) -> str:
     arrays = dict(fwd_coords=np.asarray(index.fwd.coords),
                   fwd_vals=np.asarray(index.fwd.vals))
     for f in dataclasses.fields(type(index)):
-        if f.name in ("fwd", "config"):
+        if f.name in ("fwd", "config", "tuned"):
             continue
         v = getattr(index, f.name)
         if v is not None:
@@ -128,6 +131,8 @@ def save_index(path: str, index, *, step: int = 0) -> str:
     np.savez(os.path.join(tmp, "index.npz"), **arrays)
     manifest = dict(step=step, dim=index.fwd.dim,
                     config=dataclasses.asdict(index.config))
+    if getattr(index, "tuned", ()):
+        manifest["tuned"] = [dataclasses.asdict(t) for t in index.tuned]
     with open(os.path.join(tmp, _INDEX_MANIFEST), "w") as f:
         json.dump(manifest, f)
     # overwrite without a commit gap: move the old dir aside first, so
@@ -147,13 +152,15 @@ def load_index(path: str, *, step: int | None = None):
     """Restore a ``SeismicIndex`` saved by :func:`save_index`.
 
     Back-compat: checkpoints written before the superblock tier, the
-    compact forward index, or the kNN graph simply lack those npz
-    keys; the loader leaves them ``None`` and rebuilds the config
-    through ``SeismicConfig(**...)`` defaults, so a pre-superblock
-    (or pre-graph) checkpoint loads as a flat-routing, refinement-free
-    index unchanged."""
+    compact forward index, the kNN graph, or the tuned operating
+    points simply lack those npz/manifest keys; the loader leaves them
+    ``None`` (``()`` for ``tuned``) and rebuilds the config through
+    ``SeismicConfig(**...)`` defaults, so a pre-superblock (or
+    pre-graph, pre-tune) checkpoint loads as a flat-routing,
+    refinement-free, untuned index unchanged — bit-exact search."""
     import dataclasses
     from repro.core.types import SeismicConfig, SeismicIndex
+    from repro.tune.policy import TunedPolicy
     if step is None:
         steps = [int(d.split("_")[1]) for d in os.listdir(path)
                  if d.startswith("index_") and d.split("_")[1].isdigit()]
@@ -175,7 +182,11 @@ def load_index(path: str, *, step: int | None = None):
     fields = {f.name for f in dataclasses.fields(SeismicIndex)}
     kwargs = {k: jax.numpy.asarray(v) for k, v in arrays.items()
               if k in fields}
-    return SeismicIndex(fwd=fwd, config=cfg, **kwargs)
+    known_t = {f.name for f in dataclasses.fields(TunedPolicy)}
+    tuned = tuple(
+        TunedPolicy(**{k: v for k, v in d.items() if k in known_t})
+        for d in manifest.get("tuned", []))
+    return SeismicIndex(fwd=fwd, config=cfg, tuned=tuned, **kwargs)
 
 
 class CheckpointManager:

@@ -23,6 +23,12 @@ class SeismicArchConfig:
     dim: int
     doc_nnz: int
     query_nnz: int
+    # modeled TunedPolicy tuple (repro.tune): config-time operating
+    # points picked by the SAME frontier/selection code the measured
+    # tuner uses, over a modeled cost/recall surface. Marked
+    # `modeled=True`; a real `tune_and_attach` run on the built index
+    # supersedes them.
+    tuned: tuple = ()
 
     @property
     def family(self) -> str:
@@ -82,3 +88,81 @@ def with_suggested_fanout(arch: SeismicArchConfig,
 # blocks/list -> fanout 8, capped); the reduced CPU config lands ~3
 CONFIG_HIER = with_suggested_fanout(CONFIG)
 REDUCED_HIER = with_suggested_fanout(REDUCED)
+
+
+# ------------------------------------------------ tuned operating points
+
+def _modeled_points(arch: SeismicArchConfig, k: int = 10, cut: int = 8,
+                    graph_degree: int = 8):
+    """Modeled recall/cost surface over the coupled knob grid.
+
+    The config-time analog of ``repro.tune.sweep``: the cost side is
+    the real work model (expected exactly-scored docs + refine rescore
+    work, ``router_work`` for the routing side); the recall side is a
+    saturating coverage model (early blocks carry most of the top-k
+    mass, each refine round recovers a fixed fraction of what the
+    truncated budget dropped). It exists only to pick defensible
+    DEFAULTS before a collection is built — ``tune_and_attach`` on the
+    built index replaces these with measured points (``modeled=False``).
+    """
+    from repro.retrieval.params import SearchParams
+    from repro.retrieval.router import router_work
+    from repro.tune.sweep import MeasuredPoint
+    icfg = arch.index
+    per_list = min(arch.n_docs * arch.doc_nnz / arch.dim, icfg.lam)
+    pool = max(cut * per_list, 1.0)
+    # impact concentration (paper Fig. 1): the summary-routed best
+    # blocks carry the top-k mass, so coverage is measured against the
+    # concentrated quarter of the probed postings, saturating concavely
+    eff_pool = max(pool * 0.25, 1.0)
+    gain_per_round = 0.8 * graph_degree / (graph_degree + k)
+    f = icfg.superblock_fanout
+    points = []
+    for budget in (2, 4, 8, 16, 32, 64, 128):
+        if budget > cut * icfg.n_blocks:
+            continue
+        for rounds in (0, 1, 2):
+            cov = min(1.0, budget * icfg.block_cap / eff_pool)
+            base = cov ** 0.3
+            gain = 1.0 - (1.0 - gain_per_round) ** rounds
+            recall = base + (1.0 - base) * gain
+            docs = min(budget * icfg.block_cap, pool) \
+                + rounds * k * graph_degree
+            p = SearchParams(
+                k=k, cut=cut, block_budget=budget, policy="budget",
+                superblock_fanout=f,
+                superblock_budget=max(2, budget // max(f // 2, 1)),
+                graph_degree=graph_degree if rounds else 0,
+                refine_rounds=rounds)
+            points.append(MeasuredPoint(
+                params=p, recall=round(recall, 6),
+                docs_evaluated=float(round(docs, 3)),
+                router_cost=router_work(icfg, p)))
+    return points
+
+
+def with_modeled_tuning(arch: SeismicArchConfig,
+                        targets=(0.9, 0.95)) -> SeismicArchConfig:
+    """Derive the ``*-tuned`` variant: one modeled ``TunedPolicy`` per
+    recall target, selected by the measured tuner's own frontier code
+    over the modeled surface. ``SearchParams.from_tuned(arch, target)``
+    resolves them (duck-typed on ``.tuned``), same as on a tuned
+    index."""
+    from repro.tune.frontier import policy_from_point, select_operating_point
+    points = _modeled_points(arch)
+    pols = tuple(
+        policy_from_point(select_operating_point(points, t), t,
+                          fingerprint="modeled", modeled=True)
+        for t in targets)
+    return dataclasses.replace(arch, name=f"{arch.name}-tuned",
+                               tuned=pols)
+
+
+# modeled tuned variants of the hierarchical archs. On the reduced CPU
+# arch the model trades block budget down against a refine round
+# (budget 4 + 1 round at target 0.9); the MS MARCO-scale surface needs
+# its top budget rung plus a refine round to clear 0.9. The measured
+# tuner on a BUILT index (benchmarks/autotune.py) is the ground truth
+# for the budget-down/refine-up trade — these are config-time defaults.
+CONFIG_TUNED = with_modeled_tuning(CONFIG_HIER)
+REDUCED_TUNED = with_modeled_tuning(REDUCED_HIER)

@@ -114,6 +114,12 @@ class SeismicIndex:
     # forward plane as the scorer stage (fwd + fwd_scale/fwd_zero), so
     # merged scores stay consistent across stages.
     knn_ids: jax.Array | None = None        # int32 [N, degree]
+    # tuned operating points (repro.tune): recall-target -> coupled knob
+    # set, measured on a held-out sample and persisted with the index.
+    # Static metadata like `config` (frozen TunedPolicy dataclasses are
+    # hashable), so a re-tune recompiles nothing the arrays share.
+    tuned: tuple = dataclasses.field(metadata=dict(static=True),
+                                     default=())
     config: SeismicConfig = dataclasses.field(metadata=dict(static=True),
                                               default_factory=SeismicConfig)
 

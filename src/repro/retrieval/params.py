@@ -2,6 +2,11 @@
 
 ``SearchParams`` is a frozen (hashable) dataclass so it can ride as a
 static jit argument; every pipeline stage shape is determined by it.
+
+Rather than hand-picking the coupled quality knobs per collection,
+indexes tuned with ``repro.tune`` carry persisted ``TunedPolicy``
+operating points; ``SearchParams.from_tuned(index, target)`` resolves
+the cheapest one meeting a recall target back into pipeline params.
 """
 from __future__ import annotations
 
@@ -40,3 +45,32 @@ class SearchParams:
     #                               expansions per query (each round
     #                               expands + rescores + re-merges;
     #                               0 = refine stage is a bit-exact no-op)
+
+    @classmethod
+    def from_tuned(cls, index, target: float, *,
+                   use_kernel: bool = False) -> "SearchParams":
+        """Resolve the cheapest ``TunedPolicy`` persisted on ``index``
+        whose MEASURED recall meets ``target`` (a policy tuned for 0.90
+        that measured 0.95 satisfies a 0.92 request).
+
+        Raises ``ValueError`` when the index carries no policy meeting
+        the target — under-delivering recall silently is not an option
+        for params derived from a persisted artifact. Duck-typed on the
+        policy tuple (no ``repro.tune`` import: this module is a leaf).
+        """
+        policies = getattr(index, "tuned", ()) or ()
+        if not policies:
+            raise ValueError(
+                "index carries no TunedPolicy; run repro.tune."
+                "tune_and_attach (or pass explicit SearchParams)")
+        feasible = [t for t in policies if t.satisfies(target)]
+        if not feasible:
+            best = max(t.measured_recall for t in policies)
+            raise ValueError(
+                f"no persisted TunedPolicy meets recall target "
+                f"{target:.4f} (best measured {best:.4f} over "
+                f"{len(policies)} policies); re-tune with a higher "
+                "target or widen the tuning grid")
+        chosen = min(feasible, key=lambda t: (t.measured_cost,
+                                              t.router_cost, t.target))
+        return chosen.to_params(use_kernel=use_kernel)

@@ -81,6 +81,8 @@ class AsyncSeismicServer:
                  coalesce: bool = True, stage_timing: bool = False,
                  telemetry: ServerTelemetry | None = None):
         validate_refine_params(index, params)   # fail before threads spin
+        from repro.tune.policy import validate_tuned_index
+        validate_tuned_index(index)             # stale TunedPolicy -> now
         self.index = index
         self.params = params
         self.max_batch = max_batch

@@ -81,7 +81,9 @@ class SeismicServer:
                  max_batch: int = 256, *,
                  telemetry: ServerTelemetry | None = None):
         from repro.graph.refine import validate_refine_params
+        from repro.tune.policy import validate_tuned_index
         validate_refine_params(index, params)   # fail before first launch
+        validate_tuned_index(index)             # stale TunedPolicy -> now
         self.index = index
         self.params = params
         self.max_batch = max_batch

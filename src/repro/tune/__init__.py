@@ -1,0 +1,32 @@
+"""Recall-target operating-point autotuner (``repro.tune``).
+
+Sweeps the coupled quality-knob space (``block_budget`` x selector
+policy factors x superblock budget x ``refine_rounds``) against a
+held-out query sample through the existing batched pipeline, builds
+the recall/cost Pareto frontier on the deterministic
+(docs_evaluated, router_work) cost model, and freezes the cheapest
+point meeting a caller-given recall target into a persisted
+``TunedPolicy`` index artifact. See ``src/repro/tune/README.md``.
+
+    from repro.tune import tune_and_attach
+    idx = tune_and_attach(idx, held_out, exact_ids, targets=[0.9, 0.95])
+    save_index(path, idx)                         # policy rides the ckpt
+    ...
+    p = SearchParams.from_tuned(load_index(path), target=0.9)
+"""
+from repro.tune.frontier import (pareto_frontier, policy_from_point,
+                                 select_operating_point, tune,
+                                 tune_and_attach)
+from repro.tune.policy import (KNOB_FIELDS, TunedPolicy, attach_tuned,
+                               knobs_from_params, sample_fingerprint,
+                               validate_policy, validate_tuned_index)
+from repro.tune.sweep import MeasuredPoint, default_grid, measure_point, sweep
+
+__all__ = [
+    "TunedPolicy", "MeasuredPoint", "KNOB_FIELDS",
+    "default_grid", "measure_point", "sweep",
+    "pareto_frontier", "select_operating_point", "policy_from_point",
+    "tune", "tune_and_attach",
+    "attach_tuned", "knobs_from_params", "sample_fingerprint",
+    "validate_policy", "validate_tuned_index",
+]

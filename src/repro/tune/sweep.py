@@ -1,0 +1,163 @@
+"""Operating-point sweep: drive a knob grid through the batched
+pipeline and measure recall + deterministic cost per point.
+
+Every grid point runs the EXISTING ``search_pipeline`` (or, with
+``timings=True``, ``run_pipeline_staged`` so per-stage wall seconds
+ride along) over the whole held-out query batch. The cost model is the
+hardware-independent pair the pipeline already reports:
+
+  * ``docs_evaluated`` — documents exactly scored per query (scorer
+    stage + every refine round's genuinely-new frontier; the merge and
+    refine stages count distinct documents), and
+  * ``router_work``    — summary inner products per query (the
+    closed-form phase-R work model).
+
+Wall-clock stage timings are recorded as ADVISORY data only: selection
+must be bit-reproducible and invariant to machine load and to the
+order of the query sample, so the frontier orders points purely by the
+deterministic (docs_evaluated, router_cost) pair.
+
+Order invariance is engineered, not assumed: per-query recalls are
+sorted before the mean is taken (float addition is not associative —
+a permuted sample would otherwise perturb the mean by an ulp and could
+flip the argmin between cost-tied points), and ``docs_evaluated`` sums
+exact integers.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import TYPE_CHECKING, Sequence
+
+import numpy as np
+
+from repro.retrieval.params import SearchParams
+from repro.retrieval.router import router_work
+
+if TYPE_CHECKING:  # annotation-only: keeps repro.tune import-cycle-free
+    from repro.core.types import SeismicIndex
+    from repro.sparse.ops import PaddedSparse
+
+
+@dataclasses.dataclass(frozen=True)
+class MeasuredPoint:
+    """One swept operating point with its measurements."""
+
+    params: SearchParams
+    recall: float                # mean recall@k on the held-out sample
+    docs_evaluated: float        # mean docs exactly scored per query
+    router_cost: int             # summary dots per query (closed form)
+    stage_seconds: tuple = ()    # advisory: (("prep", s), ...) wall time
+
+    @property
+    def cost_key(self) -> tuple:
+        """Deterministic total order for frontier/selection: scoring
+        work first, routing work second, then the knob tuple so exact
+        cost ties break reproducibly (never by sweep order or wall
+        time)."""
+        return (self.docs_evaluated, self.router_cost,
+                dataclasses.astuple(self.params))
+
+
+def default_grid(index: SeismicIndex, *, k: int = 10, cut: int = 8
+                 ) -> list[SearchParams]:
+    """The coupled knob grid for one collection.
+
+    Budgets ladder geometrically; each budget is paired against refine
+    rounds when the index carries a kNN graph (co-tuning: ``refine``
+    evaluates ~``k * degree`` docs per round, often cheaper than the
+    blocks a halved budget drops) and against the superblock tier when
+    one is built. Policy factors ride at the two LARGEST budgets,
+    where the selector has candidates left to prune away.
+    """
+    cfg = index.config
+    max_budget = cut * cfg.n_blocks          # selector top_k axis bound
+    ladder = [b for b in (2, 4, 8, 16, 32, 64) if b <= max_budget]
+    if not ladder:
+        ladder = [max_budget]
+    degree = min(index.graph_degree, 8)
+    refine = [(0, 0)]
+    if degree > 0:
+        refine += [(degree, 1), (degree, 2)]
+    grid: list[SearchParams] = []
+    for budget in ladder:
+        for deg, rounds in refine:
+            grid.append(SearchParams(
+                k=k, cut=cut, block_budget=budget, policy="budget",
+                graph_degree=deg, refine_rounds=rounds))
+    # policy factors at the two largest budgets (pruning headroom)
+    for budget in ladder[-2:]:
+        for hf in (0.8, 0.9):
+            grid.append(SearchParams(k=k, cut=cut, block_budget=budget,
+                                     policy="adaptive", heap_factor=hf,
+                                     probe_budget=min(8, budget)))
+        for tf in (0.6, 0.75):
+            grid.append(SearchParams(k=k, cut=cut, block_budget=budget,
+                                     policy="global_threshold",
+                                     threshold_factor=tf))
+    # hierarchical variants: route through the built superblock tier
+    if index.sup_coords is not None:
+        f = cfg.superblock_fanout
+        for budget in ladder:
+            for deg, rounds in refine:
+                grid.append(SearchParams(
+                    k=k, cut=cut, block_budget=budget, policy="budget",
+                    superblock_fanout=f,
+                    superblock_budget=max(2, budget // max(f // 2, 1)),
+                    graph_degree=deg, refine_rounds=rounds))
+    return grid
+
+
+def _per_query_recall(ids: np.ndarray, exact_ids: np.ndarray) -> np.ndarray:
+    from repro.core.oracle import recall_at_k
+    return np.array([recall_at_k(ids[q], exact_ids[q])
+                     for q in range(ids.shape[0])])
+
+
+def measure_point(index: SeismicIndex, queries: PaddedSparse,
+                  exact_ids: np.ndarray, p: SearchParams, *,
+                  timings: bool = False) -> MeasuredPoint:
+    """Run one operating point over the whole held-out batch."""
+    stage_s: dict[str, float] = {}
+    if timings:
+        from repro.retrieval.pipeline import run_pipeline_staged
+
+        def record(name, secs):
+            stage_s[name] = stage_s.get(name, 0.0) + secs
+
+        _, ids, ev = run_pipeline_staged(index, queries.coords,
+                                         queries.vals, p, record=record)
+    else:
+        from repro.retrieval.pipeline import search_pipeline
+        _, ids, ev = search_pipeline(index, queries, p)
+    ids = np.asarray(ids)
+    ev = np.asarray(ev, np.int64)
+    # sorted before the mean: bit-identical under sample permutation
+    rec = np.sort(_per_query_recall(ids, exact_ids))
+    recall = float(rec.sum() / rec.size)
+    docs = float(int(ev.sum()) / ev.size)
+    return MeasuredPoint(
+        params=p, recall=recall, docs_evaluated=docs,
+        router_cost=router_work(index.config, p),
+        stage_seconds=tuple(sorted(stage_s.items())))
+
+
+def sweep(index: SeismicIndex, queries: PaddedSparse,
+          exact_ids: np.ndarray, *, k: int = 10, cut: int = 8,
+          grid: Sequence[SearchParams] | None = None,
+          timings: bool = False) -> list[MeasuredPoint]:
+    """Measure every grid point (default: :func:`default_grid`).
+
+    The returned list preserves grid order; dedupe happens here so a
+    hand-assembled grid with repeats doesn't measure twice.
+    """
+    if grid is None:
+        grid = default_grid(index, k=k, cut=cut)
+    seen: set[SearchParams] = set()
+    points = []
+    for p in grid:
+        if p in seen:
+            continue
+        seen.add(p)
+        points.append(measure_point(index, queries, exact_ids, p,
+                                    timings=timings))
+    return points

@@ -1,10 +1,16 @@
 """The staged batch-first retrieval pipeline and its natively-batched
-Pallas kernels (interpret-mode parity vs refs; no hypothesis needed).
+Pallas kernels (interpret-mode parity vs refs), plus the cross-stage
+invariants the autotuner leans on: ``merge_topk`` permutation /
+sentinel-duplicate invariance and k>C clamp edges, and selector
+policies returning fixed shapes under jit. Hypothesis hardens the
+merge properties when installed; the deterministic sweeps run always.
 """
 import numpy as np
 import pytest
 import jax
 import jax.numpy as jnp
+
+from helpers import given, needs_hypothesis, settings, st
 
 from repro.kernels.gather_dot.ops import gather_dot, gather_dot_batch
 from repro.kernels.gather_dot.ref import gather_dot_batch_ref, gather_dot_ref
@@ -270,3 +276,111 @@ def test_pipeline_tiny_block_budget_large_k(small_index, small_collection):
     s, ids, _ = search_pipeline(idx, queries, p)
     assert ids.shape == (queries.n, 2 * icfg.block_cap)
     assert (np.asarray(ids)[:, -1] == -1).all()   # padded tail
+
+
+# ----------------------- merge invariants the autotuner leans on
+#
+# The tuner's cost/recall measurements are only order-invariant and
+# reproducible if the merge stage itself is: a permutation of the
+# candidate axis, or extra sentinel-masked duplicate slots (exactly
+# what dedupe_batch and the refine stage emit), must not change the
+# merged top-k nor docs_evaluated.
+
+def _random_merge_inputs(seed, qn=3, c=24, n_docs=100):
+    rng = np.random.default_rng(seed)
+    cand = rng.integers(0, n_docs, (qn, c)).astype(np.int32)
+    sent = rng.random((qn, c)) < 0.2
+    cand[sent] = n_docs                              # sentinel slots
+    # distinct scores (ties would make the top-k order depend on input
+    # position — the pipeline never ties exactly except at -inf)
+    scores = np.empty((qn, c), np.float32)
+    for q in range(qn):
+        scores[q] = rng.permutation(np.arange(c, dtype=np.float32))
+    scores[sent] = -np.inf
+    return cand, scores, n_docs
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_merge_topk_permutation_invariant(seed):
+    from repro.retrieval import merge_topk
+    cand, scores, n_docs = _random_merge_inputs(seed)
+    perm = np.random.default_rng(seed + 100).permutation(cand.shape[1])
+    s0, i0, e0 = merge_topk(jnp.asarray(cand), jnp.asarray(scores),
+                            10, n_docs)
+    s1, i1, e1 = merge_topk(jnp.asarray(cand[:, perm]),
+                            jnp.asarray(scores[:, perm]), 10, n_docs)
+    np.testing.assert_array_equal(np.asarray(s0), np.asarray(s1))
+    np.testing.assert_array_equal(np.asarray(i0), np.asarray(i1))
+    np.testing.assert_array_equal(np.asarray(e0), np.asarray(e1))
+
+
+@pytest.mark.parametrize("seed", [3, 4])
+def test_merge_topk_sentinel_duplicate_slots_invariant(seed):
+    """Appending masked duplicate slots (sentinel id, -inf score — what
+    dedupe_batch turns repeated candidates into) must change nothing:
+    not the top-k, not docs_evaluated."""
+    from repro.retrieval import merge_topk
+    cand, scores, n_docs = _random_merge_inputs(seed)
+    qn, c = cand.shape
+    extra = 7
+    cand2 = np.concatenate(
+        [cand, np.full((qn, extra), n_docs, np.int32)], axis=1)
+    scores2 = np.concatenate(
+        [scores, np.full((qn, extra), -np.inf, np.float32)], axis=1)
+    s0, i0, e0 = merge_topk(jnp.asarray(cand), jnp.asarray(scores),
+                            10, n_docs)
+    s1, i1, e1 = merge_topk(jnp.asarray(cand2), jnp.asarray(scores2),
+                            10, n_docs)
+    np.testing.assert_array_equal(np.asarray(s0), np.asarray(s1))
+    np.testing.assert_array_equal(np.asarray(i0), np.asarray(i1))
+    np.testing.assert_array_equal(np.asarray(e0), np.asarray(e1))
+
+
+@needs_hypothesis
+@settings(max_examples=40, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(1, 40), st.integers(1, 32))
+def test_hypothesis_merge_topk_invariants(seed, k, c):
+    """Random k/C (including k > C clamp edges): permutation and
+    sentinel-slot invariance plus the [Q, k] padding contract."""
+    from repro.retrieval import merge_topk
+    cand, scores, n_docs = _random_merge_inputs(seed, qn=2, c=c)
+    perm = np.random.default_rng(seed ^ 0x5EED).permutation(c)
+    s0, i0, e0 = merge_topk(jnp.asarray(cand), jnp.asarray(scores),
+                            k, n_docs)
+    s1, i1, e1 = merge_topk(jnp.asarray(cand[:, perm]),
+                            jnp.asarray(scores[:, perm]), k, n_docs)
+    np.testing.assert_array_equal(np.asarray(i0), np.asarray(i1))
+    np.testing.assert_array_equal(np.asarray(s0), np.asarray(s1))
+    np.testing.assert_array_equal(np.asarray(e0), np.asarray(e1))
+    assert i0.shape == (2, k) and s0.shape == (2, k)
+    if k > c:                                   # clamped: padded tail
+        assert (np.asarray(i0)[:, c:] == -1).all()
+        assert (np.asarray(s0)[:, c:] == -np.inf).all()
+    ids = np.asarray(i0)
+    assert ((ids == -1) | (ids < n_docs)).all()  # sentinels never leak
+
+
+def test_selectors_fixed_shapes_under_jit(small_index, small_collection):
+    """Every registered selector policy must produce a fixed-shape
+    Selection ([Q, block_budget]) under jit — the tuner swaps policies
+    as static args and relies on no data-dependent shapes anywhere."""
+    from repro.retrieval.prep import prep_queries
+    from repro.retrieval.router import route_batch
+    idx, _ = small_index
+    _, queries, *_ = small_collection
+    budget = 12
+    for name in selector_names():
+        if name.startswith("_"):                # test-registered probes
+            continue
+        p = SearchParams(k=10, cut=8, block_budget=budget, policy=name)
+        select = get_selector(name)
+        q_dense, lists, _ = prep_queries(queries.coords, queries.vals,
+                                         idx.dim, p.cut)
+        batch = route_batch(idx, q_dense, lists, p)
+        sel = jax.eval_shape(
+            lambda b, _f=select: _f(idx, b, p), batch)
+        assert sel.blocks.shape == (queries.n, budget), name
+        assert sel.block_scores.shape == (queries.n, budget), name
+        # and the traced stage agrees with the abstract eval
+        out = jax.jit(lambda b, _f=select: _f(idx, b, p))(batch)
+        assert out.blocks.shape == (queries.n, budget), name

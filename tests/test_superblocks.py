@@ -36,25 +36,7 @@ from repro.retrieval.prep import prep_queries
 from repro.sparse.ops import PaddedSparse
 from repro.sparse.quant import dequantize_u8, quantize_u8, quantize_u8_ceil
 
-try:
-    from hypothesis import given, settings, strategies as st
-    HAVE_HYPOTHESIS = True
-except ImportError:          # container without dev deps: deterministic
-    HAVE_HYPOTHESIS = False  # sweeps below still verify the invariants
-
-    def given(*a, **k):      # no-op decorators so the module still
-        return lambda f: f   # collects (tests are skipif-ed anyway)
-
-    def settings(*a, **k):
-        return lambda f: f
-
-    class _St:
-        def integers(self, *a, **k):
-            return None
-    st = _St()
-
-needs_hypothesis = pytest.mark.skipif(
-    not HAVE_HYPOTHESIS, reason="property tests need hypothesis")
+from helpers import given, needs_hypothesis, settings, st
 
 
 # ----------------------------------------------------------- fixtures
@@ -134,6 +116,28 @@ def test_quantize_u8_ceil_never_rounds_down():
     rng = np.random.default_rng(11)
     v = rng.lognormal(0, 2, (64, 48)).astype(np.float32)
     v[rng.random(v.shape) < 0.3] = 0.0
+    q, scale, zero = quantize_u8_ceil(jnp.asarray(v))
+    recon = np.asarray(dequantize_u8(q, scale, zero))
+    assert (recon >= v - 1e-4 * np.abs(v) - 1e-6).all()
+    # padding (exact zeros) must reconstruct to exact zero
+    assert (recon[v == 0] == 0).all()
+
+
+@needs_hypothesis
+@settings(max_examples=50, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.floats(-3.0, 6.0),
+       st.floats(0.1, 4.0), st.floats(0.0, 100.0))
+def test_hypothesis_quantize_ceil_upper_bound_random_scale_zero(
+        seed, mu, sigma, shift):
+    """The round-up quantizer's upper bound must hold for ARBITRARY
+    value ranges: ``mu``/``sigma`` sweep the quantization scale over
+    ~9 orders of magnitude and ``shift`` pushes the zero point (vmin)
+    far off the origin. The autotuner's hierarchical grid points trust
+    this bound for whatever scale/zero a real collection produces."""
+    rng = np.random.default_rng(seed)
+    v = rng.lognormal(mu, sigma, (8, 24)).astype(np.float32)
+    v[rng.random(v.shape) < 0.3] = 0.0
+    v = np.where(v > 0, v + np.float32(shift), 0.0).astype(np.float32)
     q, scale, zero = quantize_u8_ceil(jnp.asarray(v))
     recon = np.asarray(dequantize_u8(q, scale, zero))
     assert (recon >= v - 1e-4 * np.abs(v) - 1e-6).all()

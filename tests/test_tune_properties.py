@@ -1,0 +1,313 @@
+"""Property suite for the recall-target autotuner (repro.tune).
+
+The tuner's contract is determinism + monotonicity, so everything here
+is a property, not an example:
+
+  * the recall/cost frontier is monotone — a higher recall target can
+    never select a cheaper operating point;
+  * the persisted ``TunedPolicy`` reproduces its knobs bit-exactly
+    (attach -> save_index -> load_index -> from_tuned round-trip, and
+    a JSON round-trip of the raw dataclass);
+  * tuning is invariant to the ORDER of the held-out query sample —
+    same point, same measured numbers, same fingerprint;
+  * repeated tuning on identical inputs is bit-identical (the
+    deterministic-seed check: no wall-clock, no RNG in the decision
+    path);
+  * stale persisted policies fail serve construction, not trace time.
+
+Runs under the ``deterministic`` hypothesis profile (tests/conftest.py
+registers it: derandomized, no example database) so CI cannot flake.
+The deterministic tests (ckpt round-trips, bit-exact re-tune, serve
+validation, frontier monotonicity) run even WITHOUT hypothesis via the
+shared ``tests/helpers.py`` shim; only the ``@given`` tests skip.
+"""
+import dataclasses
+import json
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from helpers import given, needs_hypothesis, settings, st
+
+from repro.core import SeismicConfig, build_index
+from repro.core.baselines import exact_search
+from repro.data import SyntheticSparseConfig, make_collection
+from repro.graph import build_doc_graph
+from repro.retrieval import SearchParams, search_pipeline
+from repro.sparse.ops import PaddedSparse
+from repro.tune import (MeasuredPoint, TunedPolicy, attach_tuned,
+                        pareto_frontier, sample_fingerprint,
+                        select_operating_point, sweep, tune,
+                        tune_and_attach, validate_policy)
+
+DEGREE = 6
+_CFG = SyntheticSparseConfig(dim=512, n_docs=1024, n_queries=16,
+                             doc_nnz=32, query_nnz=12, n_topics=16,
+                             topic_coords=96, seed=13)
+_ICFG = SeismicConfig(lam=96, beta=8, alpha=0.4, block_cap=24,
+                      summary_nnz=24)
+
+# small coupled grid: budgets x refine rounds (enough structure for a
+# real frontier, small enough that the sweep compiles in seconds)
+_GRID = [SearchParams(k=10, cut=8, block_budget=b, policy="budget",
+                      graph_degree=d, refine_rounds=r)
+         for b in (2, 4, 8, 16)
+         for d, r in ((0, 0), (DEGREE, 1), (DEGREE, 2))]
+
+
+_cache: dict = {}
+
+
+def _fixture():
+    """Built graph-carrying index + held-out sample + one shared sweep
+    (module-cached: hypothesis examples must not rebuild indexes)."""
+    if "fix" not in _cache:
+        docs_np, queries_np, _ = make_collection(_CFG)
+        docs = PaddedSparse(jnp.asarray(docs_np.coords),
+                            jnp.asarray(docs_np.vals), docs_np.dim)
+        queries = PaddedSparse(jnp.asarray(queries_np.coords),
+                               jnp.asarray(queries_np.vals),
+                               queries_np.dim)
+        idx = build_index(docs, _ICFG, list_chunk=16)
+        idx = build_doc_graph(idx, degree=DEGREE, batch=64,
+                              build_params=SearchParams(
+                                  k=DEGREE + 1, cut=8, block_budget=16,
+                                  policy="budget"))
+        _, eids = exact_search(docs, queries, 10)
+        eids = np.asarray(eids)
+        points = sweep(idx, queries, eids, k=10, grid=_GRID)
+        _cache["fix"] = (idx, queries, eids, points)
+    return _cache["fix"]
+
+
+# --------------------------------------------------- frontier properties
+
+def test_pareto_frontier_is_strictly_monotone():
+    _, _, _, points = _fixture()
+    front = pareto_frontier(points)
+    assert len(front) >= 2, "degenerate sweep: no trade-off measured"
+    for a, b in zip(front, front[1:]):
+        assert b.recall > a.recall
+        assert b.cost_key >= a.cost_key
+
+
+def test_frontier_dominates_all_points():
+    """Every swept point is dominated by (or on) the frontier, on the
+    TRUE cost pair (docs, router dots) — not the tie-break knob tuple,
+    which would hide an equal-cost higher-recall sibling."""
+    _, _, _, points = _fixture()
+    front = pareto_frontier(points)
+    for pt in points:
+        assert any(
+            f.recall >= pt.recall - 1e-9
+            and (f.docs_evaluated, f.router_cost)
+            <= (pt.docs_evaluated, pt.router_cost)
+            for f in front), pt
+
+
+@needs_hypothesis
+@settings(max_examples=30)
+@given(st.floats(0.30, 0.999), st.floats(0.30, 0.999))
+def test_higher_target_never_cheaper(t1, t2):
+    """Selection monotonicity: raising the recall target can only keep
+    or raise the selected cost, never lower it."""
+    _, _, _, points = _fixture()
+    lo, hi = sorted((t1, t2))
+    best = max(pt.recall for pt in points)
+    if hi > best:                       # clamp into the feasible range
+        lo, hi = lo * best, hi * best
+    a = select_operating_point(points, lo)
+    b = select_operating_point(points, hi)
+    assert b.cost_key >= a.cost_key
+
+
+def test_infeasible_target_raises_with_best_achievable():
+    _, _, _, points = _fixture()
+    with pytest.raises(ValueError, match="infeasible"):
+        select_operating_point(points, 1.5)
+
+
+# ------------------------------------------- bit-exact reproducibility
+
+def test_tune_is_deterministic_bit_for_bit():
+    """Two tunes on identical inputs produce the identical policy —
+    the decision path contains no wall time and no RNG."""
+    idx, queries, eids, _ = _fixture()
+    a = tune(idx, queries, eids, 0.85, grid=_GRID)
+    b = tune(idx, queries, eids, 0.85, grid=_GRID)
+    assert a == b
+
+
+def test_tuned_policy_roundtrips_through_ckpt(tmp_path):
+    """attach -> save_index -> load_index -> from_tuned reproduces the
+    knobs AND the search results bit-exactly."""
+    from repro.ckpt import load_index, save_index
+    idx, queries, eids, points = _fixture()
+    tidx = tune_and_attach(idx, queries, eids, targets=[0.8, 0.9],
+                           grid=_GRID)
+    save_index(str(tmp_path), tidx)
+    loaded = load_index(str(tmp_path))
+    assert loaded.tuned == tidx.tuned
+    p0 = SearchParams.from_tuned(tidx, 0.85)
+    p1 = SearchParams.from_tuned(loaded, 0.85)
+    assert p0 == p1
+    s0, i0, e0 = search_pipeline(tidx, queries, p0)
+    s1, i1, e1 = search_pipeline(loaded, queries, p1)
+    np.testing.assert_array_equal(np.asarray(s0), np.asarray(s1))
+    np.testing.assert_array_equal(np.asarray(i0), np.asarray(i1))
+    np.testing.assert_array_equal(np.asarray(e0), np.asarray(e1))
+
+
+def test_tuned_policy_json_roundtrip_exact():
+    """The manifest serialization (plain json) is lossless for every
+    field, floats included."""
+    idx, queries, eids, points = _fixture()
+    pol = tune(idx, queries, eids, 0.85, points=points)
+    d = json.loads(json.dumps(dataclasses.asdict(pol)))
+    assert TunedPolicy(**d) == pol
+
+
+def test_pre_tune_checkpoint_loads_untuned_and_bitexact(tmp_path):
+    """An index saved WITHOUT policies (the pre-tune manifest layout)
+    loads with tuned == () and searches bit-exact."""
+    from repro.ckpt import load_index, save_index
+    idx, queries, _, _ = _fixture()
+    save_index(str(tmp_path), idx)
+    loaded = load_index(str(tmp_path))
+    assert loaded.tuned == ()
+    p = SearchParams(k=10, cut=8, block_budget=8, policy="budget")
+    s0, i0, _ = search_pipeline(idx, queries, p)
+    s1, i1, _ = search_pipeline(loaded, queries, p)
+    np.testing.assert_array_equal(np.asarray(s0), np.asarray(s1))
+    np.testing.assert_array_equal(np.asarray(i0), np.asarray(i1))
+
+
+# ------------------------------------------------- order invariance
+
+@needs_hypothesis
+@settings(max_examples=5)
+@given(st.permutations(list(range(_CFG.n_queries))))
+def test_tune_order_invariant(perm):
+    """Tuning on a permuted held-out sample yields the IDENTICAL
+    policy: same knobs, same measured recall/cost, same fingerprint."""
+    idx, queries, eids, _ = _fixture()
+    base = tune(idx, queries, eids, 0.85, grid=_GRID)
+    perm = np.asarray(perm)
+    shuffled = PaddedSparse(queries.coords[perm], queries.vals[perm],
+                            queries.dim)
+    permuted = tune(idx, shuffled, eids[perm], 0.85, grid=_GRID)
+    assert permuted == base
+
+
+def test_tune_order_invariant_fixed_permutation():
+    """Deterministic single-permutation variant of the property above,
+    so order invariance stays covered where hypothesis is absent."""
+    idx, queries, eids, _ = _fixture()
+    base = tune(idx, queries, eids, 0.85, grid=_GRID)
+    perm = np.arange(_CFG.n_queries)[::-1]
+    shuffled = PaddedSparse(queries.coords[perm], queries.vals[perm],
+                            queries.dim)
+    assert tune(idx, shuffled, eids[perm], 0.85, grid=_GRID) == base
+
+
+@needs_hypothesis
+@settings(max_examples=10)
+@given(st.permutations(list(range(_CFG.n_queries))))
+def test_sample_fingerprint_order_invariant(perm):
+    _, queries, _, _ = _fixture()
+    perm = np.asarray(perm)
+    a = sample_fingerprint(queries.coords, queries.vals)
+    b = sample_fingerprint(np.asarray(queries.coords)[perm],
+                           np.asarray(queries.vals)[perm])
+    assert a == b
+
+
+def test_fingerprint_sensitive_to_sample_content():
+    _, queries, _, _ = _fixture()
+    vals = np.asarray(queries.vals).copy()
+    vals[0, 0] += 1.0
+    assert sample_fingerprint(queries.coords, vals) \
+        != sample_fingerprint(queries.coords, queries.vals)
+
+
+# --------------------------------------------- resolution + validation
+
+def test_from_tuned_picks_cheapest_satisfying_policy():
+    idx, queries, eids, points = _fixture()
+    tidx = tune_and_attach(idx, queries, eids, targets=[0.7, 0.95],
+                           grid=_GRID)
+    lo = min(tidx.tuned, key=lambda t: t.measured_cost)
+    hi = max(tidx.tuned, key=lambda t: t.measured_cost)
+    # a request the cheap policy already satisfies resolves to it
+    if lo.satisfies(0.7):
+        assert SearchParams.from_tuned(tidx, 0.7) == lo.to_params()
+    assert SearchParams.from_tuned(tidx, 0.95) == hi.to_params()
+    with pytest.raises(ValueError, match="no persisted TunedPolicy"):
+        SearchParams.from_tuned(tidx, 0.9999)
+    with pytest.raises(ValueError, match="no TunedPolicy"):
+        SearchParams.from_tuned(idx, 0.7)           # untuned index
+
+
+def test_stale_policy_fails_serve_construction():
+    """A persisted policy that outlived its index artifacts (graph
+    dropped, superblock tier mismatch) must fail at server build."""
+    from repro.serve import SeismicServer
+    idx, queries, eids, points = _fixture()
+    tidx = tune_and_attach(idx, queries, eids, targets=[0.85],
+                           grid=_GRID)
+    pol = tidx.tuned[0]
+    assert pol.graph_degree > 0, "grid should have tuned into refine"
+    stale = dataclasses.replace(tidx, knn_ids=None)
+    with pytest.raises(ValueError, match="kNN graph"):
+        SeismicServer(stale, SearchParams(k=10))
+    # consistent index + policies constructs fine
+    SeismicServer(tidx, SearchParams.from_tuned(tidx, 0.85))
+
+
+def test_validate_policy_rejects_degenerate_and_mismatched():
+    idx, *_ = _fixture()
+    with pytest.raises(ValueError, match="target"):
+        validate_policy(idx, TunedPolicy(target=0.0))
+    with pytest.raises(ValueError, match="degenerate"):
+        validate_policy(idx, TunedPolicy(target=0.9, block_budget=0))
+    with pytest.raises(ValueError, match="not a registered"):
+        validate_policy(idx, TunedPolicy(target=0.9, policy="nope"))
+    with pytest.raises(ValueError, match="superblock"):
+        validate_policy(idx, TunedPolicy(target=0.9,
+                                         superblock_fanout=4))
+    with pytest.raises(ValueError, match="exceeds the built"):
+        validate_policy(idx, TunedPolicy(target=0.9,
+                                         graph_degree=DEGREE + 1,
+                                         refine_rounds=1))
+
+
+def test_attach_tuned_orders_deterministically():
+    idx, queries, eids, points = _fixture()
+    a = tune(idx, queries, eids, 0.9, points=points)
+    b = tune(idx, queries, eids, 0.7, points=points)
+    assert attach_tuned(idx, [a, b]).tuned \
+        == attach_tuned(idx, [b, a]).tuned
+
+
+# --------------------------------------------- cost-model invariants
+
+def test_measured_point_cost_key_total_order():
+    """cost_key must order ANY two points deterministically (ties on
+    docs and router work break on the knob tuple, never ambiguously)."""
+    _, _, _, points = _fixture()
+    keys = [pt.cost_key for pt in points]
+    assert len(set(keys)) == len(keys)
+    sorted(keys)          # every pair comparable (mixed types would raise)
+
+
+def test_refine_cotuning_beats_budget_at_equal_recall():
+    """The tentpole claim, mechanically: some refined point reaches the
+    recall of a pure-budget point at strictly lower docs_evaluated —
+    i.e. the graph stage pays for a reduced block budget."""
+    _, _, _, points = _fixture()
+    pure = [pt for pt in points if pt.params.refine_rounds == 0]
+    refined = [pt for pt in points if pt.params.refine_rounds > 0]
+    assert any(r.recall >= p.recall and
+               r.docs_evaluated < p.docs_evaluated
+               for p in pure for r in refined)
