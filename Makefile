@@ -1,6 +1,7 @@
 PY ?= python
 
-.PHONY: test test-fast bench bench-serving bench-graph bench-tune dev
+.PHONY: test test-fast bench bench-serving bench-graph bench-tune \
+	bench-kernels dev
 
 dev:
 	$(PY) -m pip install -r requirements-dev.txt
@@ -31,3 +32,8 @@ bench-graph:
 # autotune smoke: tuned point beats hand configs + pre-tune back-compat
 bench-tune:
 	PYTHONPATH=src $(PY) -m benchmarks.autotune --smoke
+
+# kernel microbench smoke: tiling sweep + fused-path parity gates +
+# candidate-compaction tile-skip gate
+bench-kernels:
+	PYTHONPATH=src $(PY) -m benchmarks.kernel_microbench --smoke

@@ -116,7 +116,10 @@ def run(smoke: bool = False):
     grid = default_grid(idx, k=10, cut=8)
 
     t0 = time.time()
-    points = sweep(idx, queries, eids, k=10, grid=grid)
+    # timings=True: every point rides its per-stage advisory seconds
+    # (run_pipeline_staged); selection still orders on the
+    # deterministic cost_key only
+    points = sweep(idx, queries, eids, k=10, grid=grid, timings=True)
     sweep_s = time.time() - t0
     yield row("tune_sweep", sweep_s * 1e6 / max(len(points), 1),
               grid_points=len(points), queries=queries.n,
@@ -124,13 +127,15 @@ def run(smoke: bool = False):
 
     for i, pt in enumerate(pareto_frontier(points)):
         p = pt.params
+        adv = pt.advisory_seconds
         yield row(f"tune_frontier_{i}", 0.0, recall10=f"{pt.recall:.3f}",
                   docs_eval=f"{pt.docs_evaluated:.0f}",
                   router_dots=pt.router_cost, policy=p.policy,
                   block_budget=p.block_budget,
                   superblock_budget=(p.superblock_budget
                                      if p.superblock_fanout else 0),
-                  refine_rounds=p.refine_rounds)
+                  refine_rounds=p.refine_rounds,
+                  advisory_ms=("" if adv is None else f"{adv*1e3:.1f}"))
 
     hands = {name: measure_point(idx, queries, eids, p)
              for name, p in _hand_points(idx).items()}

@@ -1,0 +1,296 @@
+"""Kernel microbenchmark: tiling sweep + fusion parity/efficiency gates.
+
+Three sections, all CSV rows like every other benchmark module:
+
+  kb_tile_*       (tile_q, tile_n) sweep of the gather_dot and
+                  summary_dot launches around the VMEM chooser's pick:
+                  wall us/call next to the MODELED HBM bytes-moved
+                  (repro.kernels.tiling.bytes_moved) — the bandwidth
+                  story wall time can't tell on the CPU interpret path.
+                  Every tiling must score bit-identically (tile-
+                  invariance is part of the parity gate).
+  kb_fuse_*       fused router (flat + hierarchical) and fused refine
+                  vs their unfused fuse_level=0 stages on a built
+                  index, plus an end-to-end fuse_level 0/1/2 pipeline
+                  sweep: bit-exact or the gate trips. The work-model
+                  rows report the per-query bytes each fusion deletes
+                  (repro.retrieval.workmodel).
+  kb_compact_*    the candidate-compaction fast path on a HIGH-DEDUPE
+                  fixture: after ``compact_candidates`` the candidate-
+                  driven kernel must skip enough all-sentinel tiles
+                  that the scored-slot reduction matches the dead-slot
+                  rate up to one tile_n of rounding —
+                  ``reduction + tile_n/C >= dead_rate`` (the host-side
+                  ``cand_tiles_processed`` mirror of the kernel's
+                  pl.when predicate is the accounting).
+
+Exit gates (CI runs ``--smoke``; the full run gates identically): any
+``*_ok=False`` row fails the process — fused paths losing parity or
+compaction failing to shrink the scored candidate axis is a build
+breaker, not a soft regression.
+
+    PYTHONPATH=src python -m benchmarks.kernel_microbench [--smoke]
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import mean_recall, row, timeit_us
+from repro.core import SeismicConfig, build_index
+from repro.core.baselines import exact_search
+from repro.data import SyntheticSparseConfig, make_collection
+from repro.graph import build_doc_graph
+from repro.kernels.gather_dot.ops import (cand_tiles_processed,
+                                          gather_dot_batch,
+                                          gather_dot_cand_batch)
+from repro.kernels.gather_dot.ref import gather_dot_batch_ref
+from repro.kernels.summary_dot.ops import summary_dot_batch
+from repro.kernels.tiling import (bytes_moved, choose_tiles,
+                                  gather_row_bytes, summary_row_bytes)
+from repro.retrieval import SearchParams, search_pipeline
+from repro.retrieval.scorer import (compact_candidates, dedupe_batch,
+                                    score_candidates)
+from repro.retrieval.workmodel import refine_bytes, router_bytes, scorer_bytes
+from repro.sparse.ops import PaddedSparse
+
+FULL = SyntheticSparseConfig(dim=1024, n_docs=4096, n_queries=32,
+                             doc_nnz=48, query_nnz=16, n_topics=32,
+                             topic_coords=128, seed=13)
+SMOKE = SyntheticSparseConfig(dim=512, n_docs=1024, n_queries=16,
+                              doc_nnz=32, query_nnz=12, n_topics=16,
+                              topic_coords=96, seed=13)
+DEGREE = 4
+
+
+def _fixture(smoke: bool):
+    cfg = SMOKE if smoke else FULL
+    docs_np, queries_np, _ = make_collection(cfg)
+    docs = PaddedSparse(jnp.asarray(docs_np.coords),
+                        jnp.asarray(docs_np.vals), docs_np.dim)
+    queries = PaddedSparse(jnp.asarray(queries_np.coords),
+                           jnp.asarray(queries_np.vals), queries_np.dim)
+    icfg = SeismicConfig(lam=96, beta=8, alpha=0.4, block_cap=24,
+                         summary_nnz=24, superblock_fanout=4)
+    idx = build_doc_graph(build_index(docs, icfg, list_chunk=16),
+                          degree=DEGREE)
+    _, eids = exact_search(docs, queries, 10)
+    return idx, queries, np.asarray(eids)
+
+
+# ------------------------------------------------------- tiling sweep
+
+
+def _tile_sweep_rows(idx, queries, smoke):
+    """gather_dot over a [Q, C, nnz] candidate fixture and summary_dot
+    over probed summaries, at several tilings around the chooser pick.
+    All tilings must agree bit-for-bit with the reference oracle."""
+    rng = np.random.default_rng(0)
+    qn = int(queries.coords.shape[0])
+    d = idx.dim
+    n = 256 if smoke else 512
+    nnz = int(idx.fwd.coords.shape[1])
+    q_dense = jnp.zeros((qn, d), jnp.float32).at[
+        jnp.arange(qn)[:, None], queries.coords].add(queries.vals)
+    cand = jnp.asarray(rng.integers(0, idx.n_docs, (qn, n)), jnp.int32)
+    coords = jnp.take(idx.fwd.coords, cand, axis=0).astype(jnp.int32)
+    vals = jnp.take(idx.fwd.vals, cand, axis=0).astype(jnp.float32)
+
+    pick = choose_tiles(qn, n, row_bytes=gather_row_bytes(nnz, quant=False),
+                        q_row_bytes=4 * d)
+    tilings = sorted({(8, 128), (8, min(pick.tile_n, 256)),
+                      (pick.tile_q, pick.tile_n)})
+    # oracle agreement is allclose (XLA may reassociate the nnz sum
+    # differently outside the kernel); TILE-invariance is bitwise — the
+    # per-element sum never depends on the grid carve-up
+    ref = np.asarray(gather_dot_batch_ref(q_dense, coords, vals))
+    first = None
+    ok = True
+    for tq, tn in tilings:
+        us = timeit_us(lambda tq=tq, tn=tn: gather_dot_batch(
+            q_dense, coords, vals, tile_q=tq, tile_n=tn))
+        got = np.asarray(gather_dot_batch(q_dense, coords, vals,
+                                          tile_q=tq, tile_n=tn))
+        first = got if first is None else first
+        same = (np.allclose(got, ref, rtol=1e-5, atol=1e-6)
+                and np.array_equal(got, first))
+        ok &= same
+        tag = "pick" if (tq, tn) == (pick.tile_q, pick.tile_n) else "alt"
+        yield row(f"kb_tile_gather_{tq}x{tn}", us,
+                  kind=tag, parity=same,
+                  model_bytes=bytes_moved(
+                      qn, n, tq, tn,
+                      row_bytes=gather_row_bytes(nnz, quant=False),
+                      q_row_bytes=4 * d))
+
+    # summary_dot over the flat probed-summary axis
+    cut = 4
+    lists = jnp.asarray(rng.integers(0, idx.sum_coords.shape[0],
+                                     (qn, cut)), jnp.int32)
+    nb, s = idx.sum_coords.shape[1], idx.sum_coords.shape[2]
+    sc = idx.sum_coords[lists].reshape(qn, cut * nb, s)
+    sq = idx.sum_q[lists].reshape(qn, cut * nb, s)
+    scl = idx.sum_scale[lists].reshape(qn, cut * nb)
+    zro = idx.sum_zero[lists].reshape(qn, cut * nb)
+    l_ax = cut * nb
+    ref_s = np.asarray(summary_dot_batch(q_dense, sc, sq, scl, zro,
+                                         tile_q=8, tile_l=128))
+    pick_s = choose_tiles(qn, l_ax, row_bytes=summary_row_bytes(s),
+                          q_row_bytes=4 * d)
+    for tq, tl in sorted({(8, 128), (pick_s.tile_q, pick_s.tile_n)}):
+        us = timeit_us(lambda tq=tq, tl=tl: summary_dot_batch(
+            q_dense, sc, sq, scl, zro, tile_q=tq, tile_l=tl))
+        got = np.asarray(summary_dot_batch(q_dense, sc, sq, scl, zro,
+                                           tile_q=tq, tile_l=tl))
+        same = np.array_equal(got, ref_s)   # bitwise across tilings
+        ok &= same
+        yield row(f"kb_tile_summary_{tq}x{tl}", us, parity=same,
+                  model_bytes=bytes_moved(
+                      qn, l_ax, tq, tl,
+                      row_bytes=summary_row_bytes(s), q_row_bytes=4 * d))
+    yield row("kb_tile_parity", 0.0, tile_invariant_ok=bool(ok))
+
+
+# ----------------------------------------------- fusion parity + model
+
+
+def _fuse_rows(idx, queries, eids):
+    cfg = idx.config
+    base = dict(k=10, cut=4, block_budget=12, policy="budget",
+                graph_degree=DEGREE, refine_rounds=2)
+    variants = {
+        "flat": SearchParams(**base),
+        "hier": SearchParams(**base, superblock_fanout=cfg.superblock_fanout,
+                             superblock_budget=6),
+    }
+    all_ok = True
+    for tag, p0 in variants.items():
+        outs, times = {}, {}
+        for fl in (0, 1, 2):
+            p = dataclasses.replace(p0, fuse_level=fl)
+            s, i, e = jax.block_until_ready(search_pipeline(idx, queries, p))
+            outs[fl] = (np.asarray(s), np.asarray(i), np.asarray(e))
+            times[fl] = timeit_us(lambda p=p: search_pipeline(
+                idx, queries, p))
+        ok = all(
+            np.array_equal(outs[0][j], outs[fl][j], equal_nan=True)
+            for fl in (1, 2) for j in range(3))
+        all_ok &= ok
+        rec = mean_recall(outs[2][1], eids)
+        # per-query work-model bytes the fusions delete
+        rb = {fl: router_bytes(
+            cut=p0.cut, n_blocks=cfg.n_blocks, summary_nnz=cfg.summary_nnz,
+            dim=idx.dim, fuse_level=fl,
+            n_superblocks=cfg.n_superblocks if tag == "hier" else 0,
+            fanout=cfg.superblock_fanout if tag == "hier" else 0,
+            superblock_budget=6, superblock_nnz=cfg.superblock_nnz)
+            for fl in (0, 2)}
+        fb = {fl: refine_bytes(
+            k=p0.k, degree=DEGREE, rounds=p0.refine_rounds,
+            nnz=int(idx.fwd.coords.shape[1]),
+            quant=idx.fwd_scale is not None, dim=idx.dim, fuse_level=fl)
+            for fl in (0, 2)}
+        yield row(f"kb_fuse_{tag}", times[2],
+                  us_level0=f"{times[0]:.0f}", us_level1=f"{times[1]:.0f}",
+                  bit_exact_012=ok, recall10=f"{rec:.3f}",
+                  router_bytes_l0=rb[0], router_bytes_l2=rb[2],
+                  router_bytes_x=f"{rb[0] / rb[2]:.2f}",
+                  refine_bytes_l0=fb[0], refine_bytes_l2=fb[2],
+                  refine_bytes_x=f"{fb[0] / fb[2]:.2f}")
+        all_ok &= rb[2] < rb[0] and fb[2] < fb[0]
+    yield row("kb_fuse_parity", 0.0, fused_parity_ok=bool(all_ok))
+
+
+# -------------------------------------------------- compaction gate
+
+
+def _compact_rows(idx, queries, smoke):
+    """High-dedupe fixture: a candidate axis drawn from a tiny id pool
+    so most slots dedupe to the sentinel. After compaction the
+    candidate-driven kernel must skip the sentinel tail."""
+    rng = np.random.default_rng(1)
+    qn = int(queries.coords.shape[0])
+    c_ax = 1024 if smoke else 2048
+    pool = 60                                   # ~60 live ids per query
+    raw = jnp.asarray(rng.integers(0, pool, (qn, c_ax)), jnp.int32)
+    cand = compact_candidates(dedupe_batch(raw, idx.n_docs))
+    q_dense = jnp.zeros((qn, idx.dim), jnp.float32).at[
+        jnp.arange(qn)[:, None], queries.coords].add(queries.vals)
+
+    nnz = int(idx.fwd.coords.shape[1])
+    quant = idx.fwd_scale is not None
+    # tiles pinned small: the gate probes the SKIP mechanism, and a
+    # chooser-sized tile can legally cover the whole (tiny) fixture axis
+    tq, tn = 8, 128
+    processed = cand_tiles_processed(cand, idx.n_docs, tq, tn)
+    total_tiles = processed.size
+    scored_slots = int(processed.sum()) * tq * tn
+    total_slots = total_tiles * tq * tn
+    live = np.asarray((cand < idx.n_docs).sum(axis=1))
+    dead_rate = 1.0 - live.max() / c_ax
+    reduction = 1.0 - scored_slots / total_slots
+    # equality up to one tile_n of rounding per row-tile
+    ok = reduction + tn / c_ax + 1e-9 >= dead_rate
+    ok &= reduction > 0.5           # and the skip must actually bite
+
+    # parity: compacted fast path == level-0 host scoring. Compaction
+    # only permutes each row, so the sorted score rows must agree
+    # (allclose: the host path's nnz-sum may reassociate under XLA)
+    s0 = np.asarray(score_candidates(idx, q_dense,
+                                     dedupe_batch(raw, idx.n_docs), False))
+    s1 = np.asarray(gather_dot_cand_batch(
+        q_dense, cand, idx.fwd.coords, idx.fwd.vals, idx.fwd_scale,
+        idx.fwd_zero, n_docs=idx.n_docs, tile_q=tq, tile_n=tn))
+    f0, f1 = np.sort(s0, axis=1), np.sort(s1, axis=1)
+    sent = ~np.isfinite(f0)
+    same = (np.array_equal(sent, ~np.isfinite(f1))
+            and np.allclose(f0[~sent], f1[~sent], rtol=1e-5, atol=1e-6))
+    us = timeit_us(lambda: gather_dot_cand_batch(
+        q_dense, cand, idx.fwd.coords, idx.fwd.vals, idx.fwd_scale,
+        idx.fwd_zero, n_docs=idx.n_docs, tile_q=tq, tile_n=tn))
+    sb = {fl: scorer_bytes(n_slots=c_ax,
+                           scored_slots=scored_slots // qn if fl else c_ax,
+                           nnz=nnz, quant=quant, dim=idx.dim, fuse_level=fl)
+          for fl in (0, 1)}
+    yield row("kb_compact", us, tile_q=tq, tile_n=tn,
+              cand_slots=c_ax, live_max=int(live.max()),
+              scored_slots=scored_slots // qn,
+              dead_rate=f"{dead_rate:.3f}", reduction=f"{reduction:.3f}",
+              scorer_bytes_l0=sb[0], scorer_bytes_l1=sb[1],
+              scorer_bytes_x=f"{sb[0] / sb[1]:.2f}",
+              score_parity=bool(same), compaction_ok=bool(ok and same))
+
+
+def run(smoke: bool = False):
+    idx, queries, eids = _fixture(smoke)
+    yield from _tile_sweep_rows(idx, queries, smoke)
+    yield from _fuse_rows(idx, queries, eids)
+    yield from _compact_rows(idx, queries, smoke)
+
+
+def main(argv=None) -> None:
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny fixture (CI smoke); same exit gates")
+    args = ap.parse_args(argv)
+    print("name,us_per_call,derived")
+    bad = []
+    for line in run(smoke=args.smoke):
+        print(line)
+        if any(f"{g}=False" in line
+               for g in ("tile_invariant_ok", "fused_parity_ok",
+                         "compaction_ok")):
+            bad.append(line)
+    if bad:
+        raise SystemExit(
+            "kernel microbench gates failed (fused paths must stay "
+            "bit-exact and compaction must shrink the scored candidate "
+            "axis):\n" + "\n".join(bad))
+
+
+if __name__ == "__main__":
+    main()

@@ -11,7 +11,8 @@ import time
 
 MODULES = ["fig1_concentration", "table1_tradeoff", "table2_space_build",
            "fig5_blocking", "fig6_summaries", "pipeline_throughput",
-           "serving_load", "graph_refine", "autotune"]
+           "serving_load", "graph_refine", "autotune",
+           "kernel_microbench"]
 
 
 def main() -> None:

@@ -31,6 +31,13 @@ ever grows under it and recall@k is monotone non-decreasing in
 ``refine_rounds == 0`` or ``graph_degree == 0`` is a bit-exact no-op:
 the stage returns its inputs untouched at trace time, so pipelines
 without the knob compile to the PR 3 program unchanged.
+
+``SearchParams.fuse_level`` changes execution, not results: level 1
+compacts each round's frontier before the candidate-driven scoring
+kernel (sentinel tiles skipped); level 2 fuses the whole round —
+expand, dedupe, seen-mask, compact, rescore — into one Pallas launch
+(:mod:`repro.kernels.refine_fused`), so the ``[Q, k * graph_degree]``
+expansion is never materialized in HBM. All levels are bit-exact.
 """
 from __future__ import annotations
 
@@ -102,11 +109,24 @@ def refine_batch(index: SeismicIndex, q_dense: jax.Array,
     # widening shape stays static under jit.
     scored = jnp.where(ids >= 0, ids, index.n_docs)
     for _ in range(p.refine_rounds):
-        cand = dedupe_batch(expand_neighbors(index, ids, p.graph_degree),
-                            index.n_docs)
-        seen = (cand[:, :, None] == scored[:, None, :]).any(-1)
-        cand = jnp.where(seen, index.n_docs, cand)
-        new_s = score_candidates(index, q_dense, cand, p.use_kernel)
+        if p.fuse_level >= 2:
+            # one launch: expand + dedupe + seen-mask + compact +
+            # rescore — the [Q, k*degree] expansion never leaves VMEM
+            from repro.kernels.refine_fused import refine_round_batch
+            cand, new_s = refine_round_batch(
+                ids, scored, q_dense, index.knn_ids, index.fwd.coords,
+                index.fwd.vals, index.fwd_scale, index.fwd_zero,
+                n_docs=index.n_docs, degree=p.graph_degree)
+        else:
+            from repro.retrieval.scorer import compact_candidates
+            cand = dedupe_batch(
+                expand_neighbors(index, ids, p.graph_degree), index.n_docs)
+            seen = (cand[:, :, None] == scored[:, None, :]).any(-1)
+            cand = jnp.where(seen, index.n_docs, cand)
+            if p.fuse_level >= 1:
+                cand = compact_candidates(cand)
+            new_s = score_candidates(index, q_dense, cand, p.use_kernel,
+                                     fuse_level=p.fuse_level)
         all_ids = jnp.concatenate(
             [jnp.where(ids >= 0, ids, index.n_docs), cand], axis=1)
         all_s = jnp.concatenate([scores, new_s], axis=1)

@@ -100,10 +100,110 @@ def gather_dot_batch_pallas(q_dense: jax.Array, coords: jax.Array,
 
 def gather_dot_pallas(q_dense: jax.Array, coords: jax.Array,
                       vals: jax.Array, *, tile_n: int = 128,
-                      interpret: bool = True) -> jax.Array:
+                      interpret: bool | None = None) -> jax.Array:
     """Single-query compatibility shim: scores [N] via the batched
     kernel with Q=1 (kept for callers/tests of the pre-batch API).
     N must be a multiple of tile_n (ops.py pads)."""
     from repro.kernels.gather_dot.ops import _pad_batch_call
     return _pad_batch_call(q_dense[None], coords[None], vals[None],
                            None, None, tile_n=tile_n, interpret=interpret)[0]
+
+
+# --------------------------------------------------------------------------
+# Candidate-driven variant: the kernel receives candidate DOC IDS and the
+# whole forward plane, gathers each candidate's (coords, vals) row itself,
+# and skips tiles that are 100% sentinel. This is the compaction partner
+# (SearchParams.fuse_level >= 1): the scorer packs live candidates to a
+# prefix, so at high dedupe rates most candidate tiles are pure sentinel
+# and the kernel's pl.when predicate skips their gather + dot entirely —
+# tile_n work shrinks with the dedupe rate instead of being paid on every
+# padded slot. Host-side nothing [Q, C, nnz]-shaped is ever materialized.
+#
+# Coverage boundary: the forward-plane operands ride in whole-array
+# blocks, which interpret mode (CPU CI) executes exactly; the Mosaic
+# lowering needs them VMEM-resident or an ANY-space DMA variant — see
+# src/repro/kernels/README.md ("interpret vs Mosaic").
+# --------------------------------------------------------------------------
+
+
+def _cand_scores(q, cand, fwd_coords, fwd_vals, scale, zero, n_docs):
+    """Shared scoring body: gather candidate rows, (dequant,) dot, mask
+    sentinels to -inf. Bit-identical math to the host-gather path."""
+    c = jnp.take(fwd_coords, cand, axis=0, mode="clip").astype(jnp.int32)
+    v = jnp.take(fwd_vals, cand, axis=0, mode="clip")
+    tq, tn, nnz = c.shape
+    gathered = jnp.take_along_axis(
+        q, c.reshape(tq, tn * nnz), axis=1).reshape(tq, tn, nnz)
+    if scale is not None:
+        u8 = v.astype(q.dtype)
+        s = jnp.take(scale, cand, mode="clip").astype(q.dtype)
+        z = jnp.take(zero, cand, mode="clip").astype(q.dtype)
+        deq = (u8 - 1.0) * s[..., None] + z[..., None]
+        v = jnp.where(u8 > 0, deq, 0.0)     # level 0 == padding
+    else:
+        v = v.astype(q.dtype)
+    out = (gathered * v).sum(axis=-1)
+    return jnp.where(cand < n_docs, out, -jnp.inf)
+
+
+def _gather_dot_cand_kernel(cand_ref, q_ref, fwdc_ref, fwdv_ref, out_ref,
+                            *, n_docs):
+    cand = cand_ref[...]                        # [tq, tn]
+    out_ref[...] = jnp.full(cand.shape, -jnp.inf, out_ref.dtype)
+
+    @pl.when(jnp.any(cand < n_docs))            # all-sentinel tile: skip
+    def _process():
+        out_ref[...] = _cand_scores(q_ref[...], cand, fwdc_ref[...],
+                                    fwdv_ref[...], None, None, n_docs)
+
+
+def _gather_dot_cand_quant_kernel(cand_ref, q_ref, fwdc_ref, fwdv_ref,
+                                  fs_ref, fz_ref, out_ref, *, n_docs):
+    cand = cand_ref[...]                        # [tq, tn]
+    out_ref[...] = jnp.full(cand.shape, -jnp.inf, out_ref.dtype)
+
+    @pl.when(jnp.any(cand < n_docs))            # all-sentinel tile: skip
+    def _process():
+        out_ref[...] = _cand_scores(q_ref[...], cand, fwdc_ref[...],
+                                    fwdv_ref[...], fs_ref[...], fz_ref[...],
+                                    n_docs)
+
+
+@functools.partial(jax.jit, static_argnames=("n_docs", "tile_q", "tile_n",
+                                             "interpret"))
+def gather_dot_cand_pallas(q_dense: jax.Array, cand: jax.Array,
+                           fwd_coords: jax.Array, fwd_vals: jax.Array,
+                           fwd_scale: jax.Array | None = None,
+                           fwd_zero: jax.Array | None = None, *,
+                           n_docs: int, tile_q: int = 8, tile_n: int = 128,
+                           interpret: bool = True) -> jax.Array:
+    """scores [Q, C] for candidate doc ids [Q, C] against the forward
+    plane [N, nnz]; sentinel ids (>= n_docs) score -inf, all-sentinel
+    tiles are skipped. Q % tile_q == 0 and C % tile_n == 0 (ops.py pads
+    with the sentinel, so padding lands in skipped tiles).
+    """
+    qn, c = cand.shape
+    assert q_dense.shape[0] == qn and qn % tile_q == 0 and c % tile_n == 0, (
+        q_dense.shape, cand.shape, tile_q, tile_n)
+    grid = (qn // tile_q, c // tile_n)
+    d = q_dense.shape[1]
+    n, nnz = fwd_coords.shape
+    tile_spec = pl.BlockSpec((tile_q, tile_n), lambda i, j: (i, j))
+    q_spec = pl.BlockSpec((tile_q, d), lambda i, j: (i, 0))
+    plane_spec = pl.BlockSpec((n, nnz), lambda i, j: (0, 0))
+    doc_spec = pl.BlockSpec((n,), lambda i, j: (0,))
+    quant = fwd_scale is not None
+    kernel = (_gather_dot_cand_quant_kernel if quant
+              else _gather_dot_cand_kernel)
+    in_specs = [tile_spec, q_spec, plane_spec, plane_spec] \
+        + ([doc_spec, doc_spec] if quant else [])
+    args = (cand, q_dense, fwd_coords, fwd_vals) \
+        + ((fwd_scale, fwd_zero) if quant else ())
+    return pl.pallas_call(
+        functools.partial(kernel, n_docs=n_docs),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=tile_spec,
+        out_shape=jax.ShapeDtypeStruct((qn, c), q_dense.dtype),
+        interpret=interpret,
+    )(*args)

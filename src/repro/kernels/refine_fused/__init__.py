@@ -1,0 +1,3 @@
+from repro.kernels.refine_fused.ops import refine_round_batch
+
+__all__ = ["refine_round_batch"]

@@ -1,0 +1,58 @@
+"""Public wrapper for the fused refine round: pick tile_q from the
+VMEM model (the frontier axis lives inside the kernel), pad Q, launch,
+slice back. Interpret mode resolves through the shared runtime helper.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.refine_fused.refine_fused import refine_round_pallas
+from repro.kernels.runtime import default_interpret
+from repro.kernels.tiling import choose_tile_q, gather_row_bytes
+
+
+def _plane_bytes(*arrays) -> int:
+    return sum(int(a.size) * a.dtype.itemsize for a in arrays)
+
+
+def refine_round_batch(ids: jax.Array, scored: jax.Array,
+                       q_dense: jax.Array, knn_ids: jax.Array,
+                       fwd_coords: jax.Array, fwd_vals: jax.Array,
+                       fwd_scale: jax.Array | None = None,
+                       fwd_zero: jax.Array | None = None, *,
+                       n_docs: int, degree: int,
+                       tile_q: int | None = None,
+                       interpret: bool | None = None
+                       ) -> tuple[jax.Array, jax.Array]:
+    """One fused refine round (expand + dedupe + seen-mask + compact +
+    rescore): ids [Q, k] (-1 pad) x scored [Q, W] -> (cand [Q, k*degree]
+    live-prefix frontier, scores [Q, k*degree], sentinels at -inf)."""
+    interpret = default_interpret(interpret)
+    qn, k = ids.shape
+    nnz = fwd_coords.shape[1]
+    quant = fwd_scale is not None
+    planes = [knn_ids, fwd_coords, fwd_vals]
+    if quant:
+        planes += [fwd_scale, fwd_zero]
+    if tile_q is None:
+        c = k * degree
+        # per query row: dense query + ids/scored tiles + the expanded
+        # frontier's gathered rows + both outputs
+        per_q = (4 * q_dense.shape[1] + 4 * (k + scored.shape[1])
+                 + c * (gather_row_bytes(nnz, quant=quant) + 4 * nnz + 16))
+        tile_q = choose_tile_q(qn, fixed_bytes=_plane_bytes(*planes),
+                               per_query_bytes=per_q)
+    pq = (-qn) % tile_q
+    if pq:
+        ids = jnp.pad(ids, ((0, pq), (0, 0)), constant_values=-1)
+        scored = jnp.pad(scored, ((0, pq), (0, 0)), constant_values=n_docs)
+        q_dense = jnp.pad(q_dense, ((0, pq), (0, 0)))
+    cand, scores = refine_round_pallas(
+        ids, scored, q_dense, knn_ids, fwd_coords, fwd_vals,
+        fwd_scale, fwd_zero, n_docs=n_docs, degree=degree,
+        tile_q=tile_q, interpret=interpret)
+    return cand[:qn], scores[:qn]
+
+
+__all__ = ["refine_round_batch"]

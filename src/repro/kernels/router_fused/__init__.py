@@ -1,0 +1,4 @@
+from repro.kernels.router_fused.ops import (router_flat_batch,
+                                            router_hier_batch)
+
+__all__ = ["router_flat_batch", "router_hier_batch"]

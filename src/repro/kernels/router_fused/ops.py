@@ -1,0 +1,80 @@
+"""Public wrappers for the fused router kernels: pick tile_q from the
+VMEM model (the candidate axis lives inside the kernel), pad Q, launch,
+slice back. Interpret mode resolves through the shared runtime helper.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.router_fused.router_fused import (router_flat_pallas,
+                                                     router_hier_pallas)
+from repro.kernels.runtime import default_interpret
+from repro.kernels.tiling import choose_tile_q
+
+
+def _plane_bytes(*arrays) -> int:
+    return sum(int(a.size) * a.dtype.itemsize for a in arrays)
+
+
+def _pad_q(tile_q, lists, q_dense):
+    pq = (-lists.shape[0]) % tile_q
+    if pq:
+        lists = jnp.pad(lists, ((0, pq), (0, 0)))
+        q_dense = jnp.pad(q_dense, ((0, pq), (0, 0)))
+    return lists, q_dense
+
+
+def router_flat_batch(lists: jax.Array, q_dense: jax.Array,
+                      sum_coords: jax.Array, sum_q: jax.Array,
+                      sum_scale: jax.Array, sum_zero: jax.Array,
+                      block_len: jax.Array, *, tile_q: int | None = None,
+                      interpret: bool | None = None) -> jax.Array:
+    """Fused flat route -> r [Q, cut*nb] (-inf dead blocks)."""
+    interpret = default_interpret(interpret)
+    qn, cut = lists.shape
+    nb, s = sum_coords.shape[1], sum_coords.shape[2]
+    if tile_q is None:
+        # per query row: dense query + the in-VMEM gathered summaries
+        per_q = 4 * q_dense.shape[1] + cut * nb * (5 * s + 12)
+        tile_q = choose_tile_q(qn, fixed_bytes=_plane_bytes(
+            sum_coords, sum_q, sum_scale, sum_zero, block_len),
+            per_query_bytes=per_q)
+    lists_p, q_p = _pad_q(tile_q, lists, q_dense)
+    out = router_flat_pallas(lists_p, q_p, sum_coords, sum_q, sum_scale,
+                             sum_zero, block_len, tile_q=tile_q,
+                             interpret=interpret)
+    return out[:qn]
+
+
+def router_hier_batch(lists: jax.Array, q_dense: jax.Array,
+                      sup_coords: jax.Array, sup_q: jax.Array,
+                      sup_scale: jax.Array, sup_zero: jax.Array,
+                      sum_coords: jax.Array, sum_q: jax.Array,
+                      sum_scale: jax.Array, sum_zero: jax.Array,
+                      block_len: jax.Array, *, m: int, fanout: int,
+                      tile_q: int | None = None,
+                      interpret: bool | None = None
+                      ) -> tuple[jax.Array, jax.Array]:
+    """Fused two-stage route -> (rb [Q, m*fanout], flat [Q, m*fanout])."""
+    interpret = default_interpret(interpret)
+    qn, cut = lists.shape
+    ns, s2 = sup_coords.shape[1], sup_coords.shape[2]
+    s = sum_coords.shape[2]
+    if tile_q is None:
+        per_q = (4 * q_dense.shape[1]
+                 + cut * ns * (5 * s2 + 12)      # stage-A gather
+                 + m * fanout * (5 * s + 20))    # child gather + outputs
+        tile_q = choose_tile_q(qn, fixed_bytes=_plane_bytes(
+            sup_coords, sup_q, sup_scale, sup_zero,
+            sum_coords, sum_q, sum_scale, sum_zero, block_len),
+            per_query_bytes=per_q)
+    lists_p, q_p = _pad_q(tile_q, lists, q_dense)
+    rb, flat = router_hier_pallas(
+        lists_p, q_p, sup_coords, sup_q, sup_scale, sup_zero,
+        sum_coords, sum_q, sum_scale, sum_zero, block_len,
+        m=m, fanout=fanout, tile_q=tile_q, interpret=interpret)
+    return rb[:qn], flat[:qn]
+
+
+__all__ = ["router_flat_batch", "router_hier_batch"]

@@ -88,7 +88,7 @@ def summary_dot_batch_pallas(q_dense: jax.Array, sum_coords: jax.Array,
 def summary_dot_pallas(q_dense: jax.Array, sum_coords: jax.Array,
                        sum_q: jax.Array, sum_scale: jax.Array,
                        sum_zero: jax.Array, *,
-                       interpret: bool = True) -> jax.Array:
+                       interpret: bool | None = None) -> jax.Array:
     """Single-query compatibility shim: r [cut, nb] via the batched
     kernel with Q=1 (kept for callers/tests of the pre-batch API)."""
     from repro.kernels.summary_dot.ops import _pad_batch_call

@@ -1,0 +1,154 @@
+"""Shape- and VMEM-budget-driven tile selection for the retrieval
+kernels (summary_dot, gather_dot, and the fused router/refine family).
+
+The kernels used to hardcode ``tile_q=8, tile_n=128`` — the minimum
+hardware-aligned tile. That is correct for any shape but leaves
+bandwidth on the table for large launches (more grid steps, more query
+re-fetches per candidate tile) and over-pads tiny ones. The chooser
+replaces the constants with a deterministic function of the problem
+shape and a VMEM budget:
+
+  * tiles stay aligned to the f32 register layout — ``tile_q`` a
+    multiple of the 8-row sublane, ``tile_n`` a multiple of the
+    128-lane vector width;
+  * tiles never exceed the padded problem size (no pure-padding grid
+    steps) nor a per-axis cap (huge tiles serialize the grid and kill
+    the pipelining the BlockSpec machinery buys);
+  * the per-grid-step footprint — the VMEM-resident query tile plus
+    double-buffered streamed rows plus the output tile — must fit
+    ``vmem_budget`` bytes. Preference order: widest ``tile_n`` first
+    (longer contiguous HBM bursts on the streamed candidate axis),
+    tallest ``tile_q`` second (amortizes query-tile residency across
+    more rows).
+
+Everything is computed from static shapes at trace time, so a choice
+never varies between runs of the same launch shape — parity tests pin
+that results are tile-invariant anyway.
+
+``bytes_moved`` is the companion traffic model the kernel microbench
+reports (and the fusion smoke gates compare): HBM bytes a tiled launch
+moves, counting streamed rows once and the query tile once per
+candidate-axis grid step.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+SUBLANE = 8        # f32 sublane height — tile_q alignment
+LANE = 128         # lane width — tile_n alignment
+# Per-core VMEM is ~16 MiB on current TPUs; budget half of it for one
+# grid step so double-buffering the next step's operands always fits.
+VMEM_BUDGET_BYTES = 8 * 1024 * 1024
+MAX_TILE_Q = 64    # caps keep the grid parallel even under huge budgets
+MAX_TILE_N = 2048
+
+
+def _round_up(x: int, mult: int) -> int:
+    return -(-x // mult) * mult
+
+
+@dataclasses.dataclass(frozen=True)
+class TileChoice:
+    """One resolved tiling with its modeled footprint."""
+
+    tile_q: int
+    tile_n: int
+    vmem_bytes: int      # modeled per-grid-step VMEM footprint
+    fits: bool           # False only for the minimum-tile fallback
+
+
+def tile_vmem_bytes(tile_q: int, tile_n: int, *, row_bytes: int,
+                    q_row_bytes: int, out_bytes: int = 4) -> int:
+    """Modeled VMEM footprint of one grid step.
+
+    ``row_bytes`` — bytes per streamed candidate/summary row (coords +
+    values + per-row dequant constants); ``q_row_bytes`` — bytes per
+    VMEM-resident query row (4 * d for f32). Streamed rows are
+    double-buffered (the DMA for grid step j+1 overlaps compute on j).
+    """
+    return (tile_q * q_row_bytes
+            + 2 * tile_q * tile_n * row_bytes
+            + tile_q * tile_n * out_bytes)
+
+
+def choose_tiles(qn: int, n: int, *, row_bytes: int, q_row_bytes: int,
+                 out_bytes: int = 4,
+                 vmem_budget: int = VMEM_BUDGET_BYTES,
+                 max_tile_q: int = MAX_TILE_Q,
+                 max_tile_n: int = MAX_TILE_N) -> TileChoice:
+    """Pick (tile_q, tile_n) for a [qn, n]-shaped launch.
+
+    Deterministic in the arguments. Falls back to the minimum aligned
+    tile (SUBLANE x LANE) when even that exceeds the budget (pathologic
+    row widths) — ``fits=False`` flags it for the microbench report.
+    """
+    if qn <= 0 or n <= 0:
+        raise ValueError(f"degenerate launch shape ({qn}, {n})")
+    tq_cap = min(max_tile_q, _round_up(qn, SUBLANE))
+    tn_cap = min(max_tile_n, _round_up(n, LANE))
+    for tn in range(tn_cap, 0, -LANE):
+        # widest n first; for each width take the tallest fitting tq
+        for tq in range(tq_cap, 0, -SUBLANE):
+            used = tile_vmem_bytes(tq, tn, row_bytes=row_bytes,
+                                   q_row_bytes=q_row_bytes,
+                                   out_bytes=out_bytes)
+            if used <= vmem_budget:
+                return TileChoice(tile_q=tq, tile_n=tn, vmem_bytes=used,
+                                  fits=True)
+    used = tile_vmem_bytes(SUBLANE, LANE, row_bytes=row_bytes,
+                           q_row_bytes=q_row_bytes, out_bytes=out_bytes)
+    return TileChoice(tile_q=SUBLANE, tile_n=LANE, vmem_bytes=used,
+                      fits=False)
+
+
+def choose_tile_q(qn: int, *, fixed_bytes: int, per_query_bytes: int,
+                  vmem_budget: int = VMEM_BUDGET_BYTES,
+                  max_tile_q: int = MAX_TILE_Q) -> int:
+    """Tile height for query-grid-only kernels (the fused router/refine
+    launches, whose candidate axis lives inside the kernel).
+
+    ``fixed_bytes`` is the footprint shared by every grid step (the
+    kernel-resident index planes); ``per_query_bytes`` the per-row
+    state (dense query row + per-row intermediates/outputs).
+    """
+    tq_cap = min(max_tile_q, _round_up(max(qn, 1), SUBLANE))
+    for tq in range(tq_cap, 0, -SUBLANE):
+        if fixed_bytes + tq * per_query_bytes <= vmem_budget:
+            return tq
+    return SUBLANE
+
+
+def bytes_moved(qn: int, n: int, tile_q: int, tile_n: int, *,
+                row_bytes: int, q_row_bytes: int,
+                out_bytes: int = 4) -> int:
+    """Modeled HBM traffic of one tiled [qn, n] launch.
+
+    Streamed rows cross HBM once; the query tile is re-fetched once per
+    candidate-axis grid step; the output is written once. Padded edges
+    count (the hardware moves them), which is exactly why the chooser
+    refuses tiles wider than the padded problem.
+    """
+    pq = _round_up(qn, tile_q)
+    pn = _round_up(n, tile_n)
+    grid_n = pn // tile_n
+    return (pq * pn * row_bytes          # streamed candidate/summary rows
+            + grid_n * pq * q_row_bytes  # query tile per candidate tile
+            + pq * pn * out_bytes)       # output scores
+
+
+def summary_row_bytes(s: int) -> int:
+    """Streamed bytes per summary row: i32 coords + u8 levels + f32
+    (scale, zero)."""
+    return s * (4 + 1) + 8
+
+
+def gather_row_bytes(nnz: int, *, quant: bool) -> int:
+    """Streamed bytes per candidate row: i32 coords + values (u8 when
+    the forward index is compact, f32 otherwise) + per-doc (scale,
+    zero) on the quantized plane."""
+    return nnz * (4 + (1 if quant else 4)) + (8 if quant else 0)
+
+
+__all__ = ["SUBLANE", "LANE", "VMEM_BUDGET_BYTES", "TileChoice",
+           "tile_vmem_bytes", "choose_tiles", "choose_tile_q",
+           "bytes_moved", "summary_row_bytes", "gather_row_bytes"]

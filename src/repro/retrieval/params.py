@@ -27,6 +27,24 @@ class SearchParams:
     threshold_factor: float = 0.75  # global_threshold: keep blocks with
     #                                 summary >= factor * per-query max
     use_kernel: bool = False      # batched Pallas gather/summary kernels
+    fuse_level: int = 0           # kernel-fusion ladder (execution detail,
+    #                               results identical at every level):
+    #                               0 = unfused reference path (bit-exact
+    #                                   with the pre-fusion pipeline);
+    #                               1 = candidate compaction — scorer and
+    #                                   refine pack live candidates to a
+    #                                   prefix and score through the
+    #                                   candidate-driven gather_dot kernel
+    #                                   (in-kernel forward gather, all-
+    #                                   sentinel tiles skipped);
+    #                               2 = level 1 + fused router (stage A +
+    #                                   top-M + child gather + stage B in
+    #                                   one launch) and fused refine
+    #                                   (expand + dedupe + rescore in one
+    #                                   launch). Fused stages are Pallas-
+    #                                   only (interpret off-TPU);
+    #                                   `use_kernel` still governs the
+    #                                   unfused stages.
     superblock_fanout: int = 0    # hierarchical routing: 0 = flat (score
     #                               every block summary); > 0 = two-stage
     #                               BMP-style route over the coarse
@@ -46,9 +64,15 @@ class SearchParams:
     #                               expands + rescores + re-merges;
     #                               0 = refine stage is a bit-exact no-op)
 
+    def __post_init__(self):
+        if self.fuse_level not in (0, 1, 2):
+            raise ValueError(
+                f"fuse_level must be 0, 1, or 2, got {self.fuse_level}")
+
     @classmethod
     def from_tuned(cls, index, target: float, *,
-                   use_kernel: bool = False) -> "SearchParams":
+                   use_kernel: bool = False,
+                   fuse_level: int = 0) -> "SearchParams":
         """Resolve the cheapest ``TunedPolicy`` persisted on ``index``
         whose MEASURED recall meets ``target`` (a policy tuned for 0.90
         that measured 0.95 satisfies a 0.92 request).
@@ -73,4 +97,5 @@ class SearchParams:
                 "target or widen the tuning grid")
         chosen = min(feasible, key=lambda t: (t.measured_cost,
                                               t.router_cost, t.target))
-        return chosen.to_params(use_kernel=use_kernel)
+        return chosen.to_params(use_kernel=use_kernel,
+                                fuse_level=fuse_level)

@@ -46,7 +46,8 @@ def run_pipeline(index: SeismicIndex, q_coords: jax.Array,
     q_dense, lists, _ = prep_queries(q_coords, q_vals, index.dim, p.cut)
     batch = route_batch(index, q_dense, lists, p)
     sel = select(index, batch, p)
-    cand, scores = score_selection(index, batch, sel, p.use_kernel)
+    cand, scores = score_selection(index, batch, sel, p.use_kernel,
+                                   fuse_level=p.fuse_level)
     top_s, top_ids, ev = merge_topk(cand, scores, p.k, index.n_docs)
     return refine_batch(index, q_dense, top_s, top_ids, ev, p)
 
@@ -82,7 +83,8 @@ def stage_fns(index: SeismicIndex, p: SearchParams
             lambda qd, ls: route_batch(index, qd, ls, p)),
         "selector": jax.jit(lambda b: select(index, b, p)),
         "scorer": jax.jit(
-            lambda b, s: score_selection(index, b, s, p.use_kernel)),
+            lambda b, s: score_selection(index, b, s, p.use_kernel,
+                                         fuse_level=p.fuse_level)),
         "merge": jax.jit(lambda c, s: merge_topk(c, s, p.k, index.n_docs)),
         "refine": jax.jit(
             lambda qd, s, i, e: refine_batch(index, qd, s, i, e, p)),

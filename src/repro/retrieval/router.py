@@ -23,6 +23,15 @@ Two routed paths behind ``SearchParams.superblock_fanout``:
 With ``use_kernel`` both tiers use the batched summary_dot Pallas
 kernel (u8 dequant fused) — the identical kernel, just different
 summary arrays.
+
+With ``fuse_level >= 2`` the whole route collapses into ONE fused
+Pallas launch per tier (:mod:`repro.kernels.router_fused`): the
+host-side summary gathers (``index.sum_coords[lists]`` and, for the
+hierarchical path, the ``[Q, M, f, S]`` child-summary gather between
+stage A and stage B) move inside the kernel and never touch HBM. Only
+the hierarchical scatter back into the flat layout stays on the host —
+it is output-sized, not summary-sized. Results are bit-exact with the
+unfused path (parity tests pin it).
 """
 from __future__ import annotations
 
@@ -66,6 +75,12 @@ def _summary_scores(q_dense, sc, sq, scale, zero, use_kernel):
 def _route_flat(index: SeismicIndex, q_dense: jax.Array, lists: jax.Array,
                 p: SearchParams) -> RoutedBatch:
     """Summary inner products for all blocks of the probed lists."""
+    if p.fuse_level >= 2:
+        from repro.kernels.router_fused import router_flat_batch
+        r = router_flat_batch(lists, q_dense, index.sum_coords,
+                              index.sum_q, index.sum_scale,
+                              index.sum_zero, index.block_len)
+        return RoutedBatch(q_dense=q_dense, lists=lists, r=r)
     qn, cut = lists.shape
     nb = index.config.n_blocks
     s = index.sum_coords.shape[-1]
@@ -91,6 +106,19 @@ def _route_hierarchical(index: SeismicIndex, q_dense: jax.Array,
     qn, cut = lists.shape
     cfg = index.config
     nb, f, ns = cfg.n_blocks, cfg.superblock_fanout, cfg.n_superblocks
+    if p.fuse_level >= 2:
+        # one launch for stage A + top-M + child gather + stage B; the
+        # host keeps only the output-sized scatter below
+        from repro.kernels.router_fused import router_hier_batch
+        m = min(p.superblock_budget, cut * ns)
+        rb, flat = router_hier_batch(
+            lists, q_dense, index.sup_coords, index.sup_q,
+            index.sup_scale, index.sup_zero, index.sum_coords,
+            index.sum_q, index.sum_scale, index.sum_zero,
+            index.block_len, m=m, fanout=f)
+        r = jnp.full((qn, cut * nb), NEG, q_dense.dtype)
+        r = r.at[jnp.arange(qn)[:, None], flat].max(rb)
+        return RoutedBatch(q_dense=q_dense, lists=lists, r=r)
     s2 = index.sup_coords.shape[-1]
     # ---- stage A: coarse tier, one batched summary_dot over cut * ns
     sc = index.sup_coords[lists].reshape(qn, cut * ns, s2)

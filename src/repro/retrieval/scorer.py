@@ -6,6 +6,19 @@ exact inner products against the forward index. With ``use_kernel``
 the batched gather_dot Pallas kernel scores all [Q, C] candidates in
 one launch; a compact (u8) forward index dequantizes inside the
 kernel.
+
+With ``fuse_level >= 1`` two things change (bit-exact results,
+different execution):
+
+* candidates are COMPACTED after dedupe — a second sort packs the live
+  ids into a sorted prefix and the duplicate/dead sentinels into the
+  tail (:func:`compact_candidates`);
+* scoring switches to the candidate-driven kernel
+  (:func:`repro.kernels.gather_dot.ops.gather_dot_cand_batch`): the
+  forward gather happens inside the kernel (no host-side [Q, C, nnz]
+  intermediate) and all-sentinel candidate tiles are skipped entirely,
+  so scored work shrinks with the dedupe rate instead of being paid on
+  every padded slot.
 """
 from __future__ import annotations
 
@@ -50,13 +63,39 @@ def dedupe_batch(cand: jax.Array, n_docs: int) -> jax.Array:
     return jnp.where(dup, n_docs, s)
 
 
+def compact_candidates(cand: jax.Array) -> jax.Array:
+    """Pack live candidate ids into a sorted prefix, sentinels into the
+    tail. [Q, C] -> [Q, C].
+
+    After :func:`dedupe_batch` the live ids are ascending but the
+    duplicate sentinels sit interspersed among them; one more sort
+    moves every sentinel (== n_docs, larger than any live id) to the
+    tail while PRESERVING the relative order of the live ids — both
+    orders are ascending, so downstream ``merge_topk`` tie-breaking
+    (first occurrence wins) is unchanged and results stay bit-exact.
+    The payoff is the candidate-driven kernel's tile skip: live work
+    concentrates in the leading tiles and the sentinel tail is never
+    gathered or scored.
+    """
+    return jnp.sort(cand, axis=-1)
+
+
 def score_candidates(index: SeismicIndex, q_dense: jax.Array,
-                     cand: jax.Array, use_kernel: bool) -> jax.Array:
+                     cand: jax.Array, use_kernel: bool, *,
+                     fuse_level: int = 0) -> jax.Array:
     """Exact <q, doc> for candidate ids [Q, C] (sentinel -> -inf).
 
     With a compact (fwd_quant) index the per-doc u8 dequant fuses into
     the gather-dot; scores stay 'exact' up to ~0.4% value quantization.
+    At ``fuse_level >= 1`` the candidate-driven kernel gathers forward
+    rows in-kernel and skips all-sentinel tiles (see module docstring);
+    ``use_kernel`` governs only the unfused path.
     """
+    if fuse_level >= 1:
+        from repro.kernels.gather_dot.ops import gather_dot_cand_batch
+        return gather_dot_cand_batch(
+            q_dense, cand, index.fwd.coords, index.fwd.vals,
+            index.fwd_scale, index.fwd_zero, n_docs=index.n_docs)
     c = jnp.take(index.fwd.coords, cand, axis=0,
                  mode="clip").astype(jnp.int32)              # [Q, C, nnz]
     v = jnp.take(index.fwd.vals, cand, axis=0, mode="clip")
@@ -81,17 +120,22 @@ def score_candidates(index: SeismicIndex, q_dense: jax.Array,
 
 
 def score_selection(index: SeismicIndex, batch: RoutedBatch,
-                    sel: Selection, use_kernel: bool
-                    ) -> tuple[jax.Array, jax.Array]:
+                    sel: Selection, use_kernel: bool, *,
+                    fuse_level: int = 0) -> tuple[jax.Array, jax.Array]:
     """Selected blocks -> (cand [Q, B*cap], exact scores [Q, B*cap]).
 
     Blocks carrying a -inf selection score (dead / pruned / already
-    evaluated) contribute only sentinel candidates.
+    evaluated) contribute only sentinel candidates. ``fuse_level >= 1``
+    compacts the deduped candidates before the (candidate-driven)
+    kernel scores them — bit-exact, see module docstring.
     """
     docs = gather_block_docs(index, batch.lists, sel.blocks)
     docs = jnp.where(jnp.isfinite(sel.block_scores)[..., None], docs,
                      index.n_docs)
     qn = docs.shape[0]
     cand = dedupe_batch(docs.reshape(qn, -1), index.n_docs)
-    scores = score_candidates(index, batch.q_dense, cand, use_kernel)
+    if fuse_level >= 1:
+        cand = compact_candidates(cand)
+    scores = score_candidates(index, batch.q_dense, cand, use_kernel,
+                              fuse_level=fuse_level)
     return cand, scores

@@ -93,8 +93,8 @@ def select_adaptive(index: SeismicIndex, batch: RoutedBatch,
     k-th-best estimate theta; stage 2 keeps only blocks with
     summary >= theta / heap_factor (capped at block_budget). Recovers
     the paper's dynamic pruning without a serial heap."""
-    from repro.retrieval.scorer import (dedupe_batch, gather_block_docs,
-                                        score_candidates)
+    from repro.retrieval.scorer import (compact_candidates, dedupe_batch,
+                                        gather_block_docs, score_candidates)
     # ---- stage 1: bootstrap theta from the top probe_budget blocks
     # (clamped: a block_budget below probe_budget degrades to pure
     # budget routing instead of a negative stage-2 top_k)
@@ -103,7 +103,10 @@ def select_adaptive(index: SeismicIndex, batch: RoutedBatch,
     qn = batch.r.shape[0]
     cand1 = gather_block_docs(index, batch.lists, b1).reshape(qn, -1)
     cand1 = dedupe_batch(cand1, index.n_docs)
-    s1 = score_candidates(index, batch.q_dense, cand1, p.use_kernel)
+    if p.fuse_level >= 1:
+        cand1 = compact_candidates(cand1)
+    s1 = score_candidates(index, batch.q_dense, cand1, p.use_kernel,
+                          fuse_level=p.fuse_level)
     theta = jax.lax.top_k(s1, p.k)[0][:, -1]                # [Q]
     theta = jnp.where(jnp.isfinite(theta), theta, NEG)
     # ---- stage 2: Alg. 2 line 6 -> keep blocks w/ r >= theta/heap_factor

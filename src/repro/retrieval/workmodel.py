@@ -1,0 +1,114 @@
+"""Deterministic per-query HBM-traffic model of the retrieval stages.
+
+The fusion ladder (``SearchParams.fuse_level``) changes how many times
+intermediate arrays cross HBM without changing any result, so wall
+time on the CPU interpret path says nothing about what the fusions
+buy. This module is the accounting that does: closed-form byte counts
+per query for the router, scorer, and refine stages, derived from the
+static launch shapes — the same arithmetic the kernel wrappers use for
+tile selection (:mod:`repro.kernels.tiling`).
+
+Conventions, applied uniformly so levels are comparable:
+
+* bytes every level must move are counted once — streamed index rows
+  (summaries / forward rows / graph rows), the dense query row, stage
+  outputs;
+* a HOST-MATERIALIZED intermediate (the unfused paths' gathered
+  summary planes, the ``[C, nnz]`` gathered forward rows, the refine
+  expansion) costs ``2 x`` its size — written once by the gather,
+  read once by the consumer. Fused levels delete exactly these terms;
+* candidate-axis work that the compaction kernel SKIPS (all-sentinel
+  tiles, see ``gather_dot.ops.cand_tiles_processed``) is charged only
+  for the processed slots the caller passes in.
+
+The model is advisory (benchmarks report it; the microbench smoke gate
+asserts fused levels strictly reduce it) — selection logic never
+depends on it.
+"""
+from __future__ import annotations
+
+from repro.kernels.tiling import gather_row_bytes, summary_row_bytes
+
+
+def router_bytes(*, cut: int, n_blocks: int, summary_nnz: int, dim: int,
+                 fuse_level: int, n_superblocks: int = 0, fanout: int = 0,
+                 superblock_budget: int = 0,
+                 superblock_nnz: int = 0) -> int:
+    """Modeled HBM bytes per query for phase R (flat or hierarchical).
+
+    ``fanout == 0`` models the flat route; otherwise the two-stage
+    route with ``min(superblock_budget, cut * n_superblocks)`` kept
+    superblocks. ``fuse_level >= 2`` deletes the host-gathered summary
+    intermediates (the ``[cut*nb, S]`` probe gather; hierarchically
+    also the ``[M, f, S]`` child gather between the stages).
+    """
+    q = 4 * dim
+    if fanout <= 0:
+        rows = cut * n_blocks
+        row_b = summary_row_bytes(summary_nnz)
+        base = q + rows * row_b + 4 * rows          # stream + r output
+        if fuse_level >= 2:
+            return base
+        return base + 2 * rows * row_b              # gathered intermediate
+    m = min(superblock_budget, cut * n_superblocks)
+    rows_a = cut * n_superblocks
+    row_a = summary_row_bytes(superblock_nnz)
+    rows_b = m * fanout
+    row_b = summary_row_bytes(summary_nnz)
+    base = (q + rows_a * row_a + rows_b * row_b
+            + 8 * rows_b                            # (rb, flat) outputs
+            + 4 * cut * n_blocks)                   # flat-layout scatter
+    if fuse_level >= 2:
+        return base
+    return base + 2 * (rows_a * row_a + rows_b * row_b)
+
+
+def scorer_bytes(*, n_slots: int, scored_slots: int, nnz: int, quant: bool,
+                 dim: int, fuse_level: int) -> int:
+    """Modeled HBM bytes per query for phase S.
+
+    ``n_slots`` — candidate slots entering the stage (block_budget *
+    block_cap after dedupe padding); ``scored_slots`` — slots the
+    candidate-driven kernel actually processes (``n_slots`` again at
+    level 0, the ``cand_tiles_processed`` count at level >= 1).
+    Level 0 additionally pays the host-gathered ``[n_slots, nnz]``
+    forward-row intermediate both ways.
+    """
+    row_b = gather_row_bytes(nnz, quant=quant)
+    q = 4 * dim
+    ids_io = 8 * n_slots                            # cand ids in, scores out
+    if fuse_level >= 1:
+        return q + ids_io + scored_slots * row_b
+    return q + ids_io + n_slots * row_b + 2 * n_slots * row_b
+
+
+def refine_bytes(*, k: int, degree: int, rounds: int, nnz: int,
+                 quant: bool, dim: int, fuse_level: int,
+                 scored_slots_per_round: int | None = None) -> int:
+    """Modeled HBM bytes per query for the refine stage.
+
+    Per round the frontier is ``k * degree`` slots. Level < 2 pays the
+    ``[k*degree]`` expansion + dedupe intermediates and (at level 0)
+    the gathered forward rows both ways; level 2 runs the whole round
+    in one launch and streams only the graph row + forward rows.
+    """
+    if rounds <= 0 or degree <= 0:
+        return 0
+    c = k * degree
+    scored = c if scored_slots_per_round is None else scored_slots_per_round
+    row_b = gather_row_bytes(nnz, quant=quant)
+    q = 4 * dim
+    graph = 4 * k * degree                          # streamed knn rows
+    out = 8 * c                                     # (cand, scores) per round
+    if fuse_level >= 2:
+        per_round = q + graph + scored * row_b + out
+    elif fuse_level >= 1:
+        # expansion + dedupe ids written and re-read host-side
+        per_round = q + graph + 2 * (2 * 4 * c) + scored * row_b + out
+    else:
+        per_round = (q + graph + 2 * (2 * 4 * c)
+                     + c * row_b + 2 * c * row_b + out)
+    return rounds * per_round
+
+
+__all__ = ["router_bytes", "scorer_bytes", "refine_bytes"]

@@ -1,10 +1,15 @@
 """Deadline-based micro-batching front-end over the staged pipeline.
 
 ``AsyncSeismicServer`` accepts single queries (``submit``) from any
-thread, coalesces whatever is in flight into fixed-shape
-``[max_batch, query_nnz]`` launches of the jitted ``search_pipeline``
-(dispatch on batch-full OR oldest-deadline-expiry, never recompiling),
-and fulfills per-request futures. Around that core sit admission
+thread and coalesces whatever is in flight into fixed-shape
+``[width, query_nnz]`` launches of the jitted ``search_pipeline``
+(dispatch on batch-full OR oldest-deadline-expiry, never recompiling).
+Launch widths come from a pre-compiled LADDER (default ``8/32/128``
+clipped to ``max_batch``): each dispatch picks the smallest compiled
+width covering the coalesced batch, so a lone tail request stops
+paying the full ``max_batch`` of padded pipeline work. Every width is
+compiled at warmup; per-width dispatch counts land in telemetry
+(``launch_width_<w>``). The server then fulfills per-request futures. Around that core sit admission
 control (bounded queue, ``reject`` / ``shed_oldest``), a quantized-
 fingerprint LRU result cache, request coalescing (concurrently
 in-flight requests with identical quantized fingerprints share one
@@ -54,9 +59,13 @@ class AsyncSeismicServer:
 
     Parameters
     ----------
-    max_batch     fixed launch width; the jitted pipeline compiles once
-                  for ``[max_batch, query_nnz]`` and every dispatch
-                  pads up to it.
+    max_batch     maximum launch width; a dispatch never carries more
+                  than this many distinct requests.
+    launch_widths ascending pre-compiled launch widths (the ladder).
+                  ``None`` selects the default rungs ``(8, 32, 128)``
+                  clipped to ``max_batch`` (which is always the top
+                  rung). Each dispatch pads to the smallest rung
+                  covering the batch instead of always ``max_batch``.
     query_nnz     fixed per-query nnz width; longer queries keep their
                   ``query_nnz`` heaviest coordinates.
     deadline_s    default max time a request may wait for co-batching
@@ -74,8 +83,11 @@ class AsyncSeismicServer:
                   the fused launch; keep off unless profiling).
     """
 
+    DEFAULT_WIDTHS = (8, 32, 128)
+
     def __init__(self, index: SeismicIndex, params: SearchParams, *,
                  max_batch: int = 32, query_nnz: int = 32,
+                 launch_widths: tuple[int, ...] | None = None,
                  deadline_s: float = 2e-3, queue_bound: int = 1024,
                  admission: str = "reject", cache_size: int = 0,
                  coalesce: bool = True, stage_timing: bool = False,
@@ -86,6 +98,19 @@ class AsyncSeismicServer:
         self.index = index
         self.params = params
         self.max_batch = max_batch
+        if launch_widths is None:
+            launch_widths = tuple(w for w in self.DEFAULT_WIDTHS
+                                  if w < max_batch)
+        else:
+            if any(w <= 0 or w > max_batch for w in launch_widths):
+                raise ValueError(
+                    f"launch_widths {launch_widths} must lie in "
+                    f"[1, max_batch={max_batch}]")
+            launch_widths = tuple(w for w in launch_widths
+                                  if w < max_batch)
+        # max_batch is always the top rung, so every batch has a cover
+        self.launch_widths = tuple(sorted(set(launch_widths))) \
+            + (max_batch,)
         self.query_nnz = query_nnz
         self.deadline_s = deadline_s
         self.stage_timing = stage_timing
@@ -129,16 +154,17 @@ class AsyncSeismicServer:
         self.stop()
 
     def warmup(self) -> None:
-        """Compile the fixed-shape launch before serving traffic."""
-        coords = jnp.zeros((self.max_batch, self.query_nnz), jnp.int32)
-        vals = jnp.zeros((self.max_batch, self.query_nnz), jnp.float32)
-        if self.stage_timing:
-            jax.block_until_ready(run_pipeline_staged(
-                self.index, coords, vals, self.params, fns=self._fns))
-        else:
-            jax.block_until_ready(search_pipeline(
-                self.index, PaddedSparse(coords, vals, self.index.dim),
-                self.params))
+        """Compile every ladder width before serving traffic."""
+        for width in self.launch_widths:
+            coords = jnp.zeros((width, self.query_nnz), jnp.int32)
+            vals = jnp.zeros((width, self.query_nnz), jnp.float32)
+            if self.stage_timing:
+                jax.block_until_ready(run_pipeline_staged(
+                    self.index, coords, vals, self.params, fns=self._fns))
+            else:
+                jax.block_until_ready(search_pipeline(
+                    self.index, PaddedSparse(coords, vals, self.index.dim),
+                    self.params))
 
     # ------------------------------------------------------ submission
 
@@ -255,12 +281,21 @@ class AsyncSeismicServer:
             f._fail(status)
         req.future._fail(status)
 
+    def _pick_width(self, n: int) -> int:
+        """Smallest pre-compiled ladder rung covering ``n`` requests."""
+        for w in self.launch_widths:
+            if w >= n:
+                return w
+        return self.max_batch
+
     def _launch(self, batch: list[Request]) -> None:
         """One fixed-shape pipeline launch serving ``len(batch)`` rows."""
         tel = self.telemetry
         n = len(batch)
-        coords = np.zeros((self.max_batch, self.query_nnz), np.int32)
-        vals = np.zeros((self.max_batch, self.query_nnz), np.float32)
+        width = self._pick_width(n)
+        tel.inc(f"launch_width_{width}")
+        coords = np.zeros((width, self.query_nnz), np.int32)
+        vals = np.zeros((width, self.query_nnz), np.float32)
         for i, r in enumerate(batch):
             coords[i], vals[i] = r.coords, r.vals
         dispatch_t = time.monotonic()

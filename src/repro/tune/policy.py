@@ -35,7 +35,8 @@ import numpy as np
 from repro.retrieval.params import SearchParams
 
 # SearchParams quality knobs a tuned policy pins (everything except the
-# execution-detail ``use_kernel``, which the caller picks per backend)
+# execution details ``use_kernel`` / ``fuse_level``, which the caller
+# picks per backend — they never change results)
 KNOB_FIELDS = ("k", "cut", "block_budget", "heap_factor", "policy",
                "probe_budget", "threshold_factor", "superblock_fanout",
                "superblock_budget", "graph_degree", "refine_rounds")
@@ -70,10 +71,13 @@ class TunedPolicy:
     sample_fingerprint: str = ""   # order-invariant sample digest
     modeled: bool = False          # True: config-time model, not measured
 
-    def to_params(self, *, use_kernel: bool = False) -> SearchParams:
+    def to_params(self, *, use_kernel: bool = False,
+                  fuse_level: int = 0) -> SearchParams:
         """The pipeline params this policy pins — bit-exact: every knob
-        is stored on the policy, nothing is re-derived."""
-        return SearchParams(use_kernel=use_kernel,
+        is stored on the policy, nothing is re-derived. ``use_kernel``
+        and ``fuse_level`` are execution details (results identical at
+        every level), so the caller picks them per backend."""
+        return SearchParams(use_kernel=use_kernel, fuse_level=fuse_level,
                             **{f: getattr(self, f) for f in KNOB_FIELDS})
 
     def satisfies(self, target: float) -> bool:

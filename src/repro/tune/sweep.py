@@ -49,6 +49,15 @@ class MeasuredPoint:
     stage_seconds: tuple = ()    # advisory: (("prep", s), ...) wall time
 
     @property
+    def advisory_seconds(self) -> float | None:
+        """Total staged wall seconds for the sample — the ADVISORY cost
+        column (None when the point was measured without timings).
+        Reported next to the deterministic costs, never selected on."""
+        if not self.stage_seconds:
+            return None
+        return sum(s for _, s in self.stage_seconds)
+
+    @property
     def cost_key(self) -> tuple:
         """Deterministic total order for frontier/selection: scoring
         work first, routing work second, then the knob tuple so exact

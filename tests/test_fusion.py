@@ -1,0 +1,381 @@
+"""The fuse_level ladder and the VMEM-driven tile chooser: verification
+suite (see src/repro/kernels/README.md).
+
+What is pinned here, mechanically:
+
+  * tile invariance — the batched kernels produce BITWISE-identical
+    outputs under different (tile_q, tile_n) pinnings of the same
+    launch (each output element is an independent sum), and allclose
+    vs the pure-jnp oracle (XLA may reassociate the nnz reduction
+    differently outside the kernel, so oracle comparisons are not
+    bitwise);
+  * the candidate-driven gather_dot — parity vs host-side gather,
+    sentinel slots at exactly -inf, and the ``cand_tiles_processed``
+    host mirror matching the kernel's tile-skip predicate;
+  * ``compact_candidates`` — order-preserving for live ids (the
+    bit-exactness of fuse_level >= 1 rests on it);
+  * fused router (flat + hierarchical) and fused refine stage parity
+    vs the level-0 stages;
+  * end-to-end: fuse_level 0/1/2 BITWISE-identical (scores, ids,
+    docs_evaluated) across index variants x selector policies;
+  * the tile chooser: alignment, caps, budget, fallback, determinism.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.core import SeismicConfig, build_index
+from repro.data import SyntheticSparseConfig, make_collection
+from repro.graph import build_doc_graph, expand_neighbors
+from repro.kernels import tiling
+from repro.kernels.gather_dot.ops import (cand_tiles_processed,
+                                          gather_dot_batch,
+                                          gather_dot_cand_batch)
+from repro.kernels.gather_dot.ref import gather_dot_batch_ref
+from repro.kernels.refine_fused import refine_round_batch
+from repro.kernels.summary_dot.ops import summary_dot_batch
+from repro.kernels.summary_dot.ref import summary_dot_batch_ref
+from repro.retrieval import SearchParams, search_pipeline
+from repro.retrieval.prep import prep_queries
+from repro.retrieval.router import route_batch
+from repro.retrieval.scorer import compact_candidates, dedupe_batch
+from repro.sparse.ops import PaddedSparse
+from repro.sparse.quant import quantize_u8
+
+DEGREE = 4
+
+
+# ----------------------------------------------------------- fixtures
+
+_cache: dict = {}
+
+
+def _built():
+    """(flat idx, hier idx, graph idx, quant-graph idx, queries) —
+    built once per module."""
+    if "fix" not in _cache:
+        cfg = SyntheticSparseConfig(dim=512, n_docs=1024, n_queries=8,
+                                    doc_nnz=32, query_nnz=12, n_topics=16,
+                                    topic_coords=96, seed=11)
+        docs_np, queries_np, _ = make_collection(cfg)
+        docs = PaddedSparse(jnp.asarray(docs_np.coords),
+                            jnp.asarray(docs_np.vals), docs_np.dim)
+        queries = PaddedSparse(jnp.asarray(queries_np.coords),
+                               jnp.asarray(queries_np.vals), queries_np.dim)
+        icfg = SeismicConfig(lam=96, beta=8, alpha=0.4, block_cap=24,
+                             summary_nnz=24)
+        idx = build_index(docs, icfg, list_chunk=16)
+        hidx = build_index(docs, dataclasses.replace(icfg,
+                                                     superblock_fanout=4),
+                           list_chunk=16)
+        bp = SearchParams(k=DEGREE + 1, cut=8, block_budget=16,
+                          policy="budget")
+        gidx = build_doc_graph(idx, degree=DEGREE, batch=256,
+                               build_params=bp)
+        qidx = build_doc_graph(idx, degree=DEGREE, batch=256,
+                               compact_forward=True, build_params=bp)
+        _cache["fix"] = (idx, hidx, gidx, qidx, queries)
+    return _cache["fix"]
+
+
+def _assert_same_results(a, b):
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# ------------------------------------------ batched kernels: tile sweeps
+
+_GD_TILINGS = [(8, 128), (8, 256), (16, 128), (32, 256)]
+
+
+@pytest.mark.parametrize("qn,n", [(8, 128), (13, 200), (5, 129)])
+def test_gather_dot_batch_tile_invariance(qn, n):
+    rng = np.random.default_rng(qn * 1000 + n)
+    d, nnz = 512, 24
+    q = jnp.asarray(rng.lognormal(0, 1, (qn, d)), jnp.float32)
+    coords = jnp.asarray(rng.integers(0, d, (qn, n, nnz)), jnp.int32)
+    vals = jnp.asarray(rng.lognormal(0, 1, (qn, n, nnz)), jnp.float32)
+    want = np.asarray(gather_dot_batch_ref(q, coords, vals))
+    outs = [np.asarray(gather_dot_batch(q, coords, vals, tile_q=tq,
+                                        tile_n=tn, interpret=True))
+            for tq, tn in _GD_TILINGS]
+    for got in outs:
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+        np.testing.assert_array_equal(got, outs[0])
+
+
+def test_gather_dot_batch_quant_tile_invariance():
+    """u8 fused-dequant plane: same tile-invariance contract."""
+    rng = np.random.default_rng(77)
+    qn, n, d, nnz = 11, 300, 512, 16
+    q = jnp.asarray(rng.lognormal(0, 1, (qn, d)), jnp.float32)
+    coords = jnp.asarray(rng.integers(0, d, (qn, n, nnz)), jnp.int32)
+    vals = jnp.asarray(rng.lognormal(0, 1, (qn, n, nnz)), jnp.float32)
+    q8, scale, zero = quantize_u8(vals)
+    want = np.asarray(gather_dot_batch_ref(q, coords, q8, scale, zero))
+    outs = [np.asarray(gather_dot_batch(q, coords, q8, scale, zero,
+                                        tile_q=tq, tile_n=tn,
+                                        interpret=True))
+            for tq, tn in _GD_TILINGS]
+    for got in outs:
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+        np.testing.assert_array_equal(got, outs[0])
+
+
+@pytest.mark.parametrize("qn,l", [(8, 128), (9, 97), (24, 260)])
+@pytest.mark.parametrize("tq,tl", [(16, 128), (8, 256)])
+def test_summary_dot_batch_tile_parity(qn, l, tq, tl):
+    rng = np.random.default_rng(qn + l + tq)
+    d, s = 1024, 32
+    q = jnp.asarray(rng.lognormal(0, 1, (qn, d)), jnp.float32)
+    coords = jnp.asarray(rng.integers(0, d, (qn, l, s)), jnp.int32)
+    vals = rng.lognormal(0, 1, (qn, l, s)).astype(np.float32)
+    vals[rng.random((qn, l, s)) < 0.3] = 0.0
+    q8, scale, zero = quantize_u8(jnp.asarray(vals))
+    got = np.asarray(summary_dot_batch(q, coords, q8, scale, zero,
+                                       tile_q=tq, tile_l=tl,
+                                       interpret=True))
+    want = np.asarray(summary_dot_batch_ref(q, coords, q8, scale, zero))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+    base = np.asarray(summary_dot_batch(q, coords, q8, scale, zero,
+                                        tile_q=8, tile_l=128,
+                                        interpret=True))
+    np.testing.assert_array_equal(got, base)
+
+
+# -------------------------------------- candidate-driven gather + skip
+
+def _live_prefix_cand(rng, qn, c, n_docs, max_live):
+    cand = np.full((qn, c), n_docs, np.int32)
+    for i in range(qn):
+        live = int(rng.integers(1, max_live))
+        cand[i, :live] = rng.integers(0, n_docs, live)
+    return jnp.asarray(cand)
+
+
+def test_gather_dot_cand_batch_parity_and_skip_model():
+    """Parity vs host-side gather; sentinel slots exactly -inf; the
+    host mirror of the skip predicate marks exactly the tiles with at
+    least one live candidate."""
+    rng = np.random.default_rng(3)
+    qn, c, n_docs, d, nnz = 10, 384, 512, 256, 12
+    fwd_coords = jnp.asarray(rng.integers(0, d, (n_docs, nnz)), jnp.int32)
+    fwd_vals = jnp.asarray(rng.lognormal(0, 1, (n_docs, nnz)), jnp.float32)
+    q = jnp.asarray(rng.lognormal(0, 1, (qn, d)), jnp.float32)
+    cand = _live_prefix_cand(rng, qn, c, n_docs, max_live=180)
+    got = np.asarray(gather_dot_cand_batch(
+        q, cand, fwd_coords, fwd_vals, n_docs=n_docs,
+        tile_q=8, tile_n=128, interpret=True))
+    safe = jnp.clip(cand, 0, n_docs - 1)
+    want = np.asarray(gather_dot_batch_ref(
+        q, jnp.take(fwd_coords, safe, axis=0),
+        jnp.take(fwd_vals, safe, axis=0)))
+    dead = np.asarray(cand) >= n_docs
+    np.testing.assert_allclose(got[~dead], want[~dead],
+                               rtol=1e-5, atol=1e-6)
+    assert np.all(np.isneginf(got[dead]))
+    proc = cand_tiles_processed(cand, n_docs, 8, 128)
+    gq, gn = proc.shape
+    padded = np.pad(np.asarray(cand), ((0, gq * 8 - qn), (0, gn * 128 - c)),
+                    constant_values=n_docs)
+    expect = (padded < n_docs).reshape(gq, 8, gn, 128).any(axis=(1, 3))
+    np.testing.assert_array_equal(proc, expect)
+    assert proc.sum() < proc.size     # the fixture really has dead tiles
+
+
+def test_gather_dot_cand_batch_tile_invariance():
+    rng = np.random.default_rng(4)
+    qn, c, n_docs, d, nnz = 9, 200, 256, 128, 8
+    fwd_coords = jnp.asarray(rng.integers(0, d, (n_docs, nnz)), jnp.int32)
+    fwd_vals = jnp.asarray(rng.lognormal(0, 1, (n_docs, nnz)), jnp.float32)
+    q = jnp.asarray(rng.lognormal(0, 1, (qn, d)), jnp.float32)
+    cand = _live_prefix_cand(rng, qn, c, n_docs, max_live=c)
+    outs = [np.asarray(gather_dot_cand_batch(
+        q, cand, fwd_coords, fwd_vals, n_docs=n_docs,
+        tile_q=tq, tile_n=tn, interpret=True))
+        for tq, tn in [(8, 128), (8, 256), (16, 128)]]
+    for got in outs[1:]:
+        np.testing.assert_array_equal(got, outs[0])
+
+
+def test_compact_candidates_order_preserving():
+    """Compaction packs live ids into a prefix WITHOUT reordering them
+    — the bit-exactness of fuse_level >= 1 merge tie-breaking rests on
+    this."""
+    rng = np.random.default_rng(5)
+    n_docs = 100
+    raw = jnp.asarray(rng.integers(0, n_docs, (6, 64)), jnp.int32)
+    deduped = np.asarray(dedupe_batch(raw, n_docs))
+    packed = np.asarray(compact_candidates(jnp.asarray(deduped)))
+    for q in range(deduped.shape[0]):
+        live = deduped[q][deduped[q] < n_docs]
+        n_live = live.size
+        np.testing.assert_array_equal(packed[q, :n_live], live)
+        assert (packed[q, n_live:] == n_docs).all()
+
+
+# ----------------------------------------------- fused stages vs level 0
+#
+# Stage-level comparisons run eagerly, so kernel-vs-host float sums may
+# reassociate: finite scores compare allclose, masks and ids exactly.
+# The end-to-end sweep below is BITWISE (same jit program structure).
+
+def _routed(idx, queries, p):
+    q_dense, lists, _ = prep_queries(queries.coords, queries.vals,
+                                     idx.dim, p.cut)
+    return route_batch(idx, q_dense, lists, p)
+
+
+def test_fused_flat_router_stage_parity():
+    idx, _, _, _, queries = _built()
+    p = SearchParams(k=10, cut=8, block_budget=12)
+    r0 = np.asarray(_routed(idx, queries, p).r)
+    r2 = np.asarray(_routed(idx, queries,
+                            dataclasses.replace(p, fuse_level=2)).r)
+    assert r0.shape == r2.shape
+    np.testing.assert_array_equal(np.isneginf(r0), np.isneginf(r2))
+    m = np.isfinite(r0)
+    np.testing.assert_allclose(r2[m], r0[m], rtol=1e-5, atol=1e-5)
+
+
+def test_fused_hier_router_stage_parity():
+    _, hidx, _, _, queries = _built()
+    p = SearchParams(k=10, cut=8, block_budget=12, superblock_fanout=4,
+                     superblock_budget=6)
+    r0 = np.asarray(_routed(hidx, queries, p).r)
+    r2 = np.asarray(_routed(hidx, queries,
+                            dataclasses.replace(p, fuse_level=2)).r)
+    np.testing.assert_array_equal(np.isneginf(r0), np.isneginf(r2))
+    m = np.isfinite(r0)
+    np.testing.assert_allclose(r2[m], r0[m], rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("quant", [False, True])
+def test_fused_refine_round_stage_parity(quant):
+    """One fused round == expand + dedupe + seen-mask + compact +
+    rescore: identical frontier ids, allclose scores, same -inf mask."""
+    _, _, gidx, qidx, queries = _built()
+    idx = qidx if quant else gidx
+    from repro.retrieval.scorer import score_candidates
+    p = SearchParams(k=10, cut=8, block_budget=12)
+    q_dense, lists, _ = prep_queries(queries.coords, queries.vals,
+                                     idx.dim, p.cut)
+    _, ids, _ = search_pipeline(idx, queries, p)
+    scored = jnp.where(ids >= 0, ids, idx.n_docs)
+    cand_f, s_f = refine_round_batch(
+        ids, scored, q_dense, idx.knn_ids, idx.fwd.coords, idx.fwd.vals,
+        idx.fwd_scale, idx.fwd_zero, n_docs=idx.n_docs, degree=DEGREE)
+    cand_u = dedupe_batch(expand_neighbors(idx, ids, DEGREE), idx.n_docs)
+    seen = (cand_u[:, :, None] == scored[:, None, :]).any(-1)
+    cand_u = compact_candidates(jnp.where(seen, idx.n_docs, cand_u))
+    s_u = score_candidates(idx, q_dense, cand_u, False)
+    np.testing.assert_array_equal(np.asarray(cand_f), np.asarray(cand_u))
+    sf, su = np.asarray(s_f), np.asarray(s_u)
+    np.testing.assert_array_equal(np.isneginf(sf), np.isneginf(su))
+    m = np.isfinite(su)
+    np.testing.assert_allclose(sf[m], su[m], rtol=1e-5, atol=1e-5)
+
+
+# --------------------------------------------- end-to-end bitwise sweep
+
+def _fuse_sweep(idx, queries, p):
+    outs = [search_pipeline(idx, queries,
+                            dataclasses.replace(p, fuse_level=lvl))
+            for lvl in (0, 1, 2)]
+    _assert_same_results(outs[0], outs[1])
+    _assert_same_results(outs[0], outs[2])
+
+
+@pytest.mark.parametrize("policy", ["budget", "adaptive",
+                                    "global_threshold"])
+def test_e2e_fuse_levels_bitexact_flat(policy):
+    idx, _, _, _, queries = _built()
+    _fuse_sweep(idx, queries,
+                SearchParams(k=10, cut=8, block_budget=12, policy=policy))
+
+
+def test_e2e_fuse_levels_bitexact_hier():
+    _, hidx, _, _, queries = _built()
+    _fuse_sweep(hidx, queries,
+                SearchParams(k=10, cut=8, block_budget=12,
+                             superblock_fanout=4, superblock_budget=6))
+
+
+@pytest.mark.parametrize("quant", [False, True])
+def test_e2e_fuse_levels_bitexact_refined(quant):
+    _, _, gidx, qidx, queries = _built()
+    _fuse_sweep(qidx if quant else gidx, queries,
+                SearchParams(k=10, cut=8, block_budget=12,
+                             graph_degree=DEGREE, refine_rounds=2))
+
+
+# ------------------------------------------------------- tile chooser
+
+def test_choose_tiles_alignment_caps_and_determinism():
+    ch = tiling.choose_tiles(40, 1000, row_bytes=100, q_row_bytes=4096)
+    assert ch.tile_q % tiling.SUBLANE == 0
+    assert ch.tile_n % tiling.LANE == 0
+    assert ch.tile_q <= tiling.MAX_TILE_Q
+    assert ch.tile_n <= tiling.MAX_TILE_N
+    # never wider than the padded problem
+    assert ch.tile_q <= 40 + (-40) % tiling.SUBLANE
+    assert ch.tile_n <= 1000 + (-1000) % tiling.LANE
+    assert ch.fits and ch.vmem_bytes <= tiling.VMEM_BUDGET_BYTES
+    assert ch == tiling.choose_tiles(40, 1000, row_bytes=100,
+                                     q_row_bytes=4096)
+
+
+def test_choose_tiles_prefers_wide_n_then_tall_q():
+    # generous budget on a big problem -> both caps reached
+    ch = tiling.choose_tiles(512, 65536, row_bytes=8, q_row_bytes=64)
+    assert (ch.tile_q, ch.tile_n) == (tiling.MAX_TILE_Q, tiling.MAX_TILE_N)
+    # a budget sized for exactly 8x256 shrinks the tile but stays legal
+    tight = tiling.choose_tiles(
+        512, 65536, row_bytes=8, q_row_bytes=64,
+        vmem_budget=tiling.tile_vmem_bytes(8, 256, row_bytes=8,
+                                           q_row_bytes=64))
+    assert tight.fits
+    assert tight.vmem_bytes <= ch.vmem_bytes
+    assert (tight.tile_q, tight.tile_n) != (ch.tile_q, ch.tile_n)
+
+
+def test_choose_tiles_fallback_on_pathological_rows():
+    ch = tiling.choose_tiles(8, 128, row_bytes=10 ** 9, q_row_bytes=4)
+    assert (ch.tile_q, ch.tile_n) == (tiling.SUBLANE, tiling.LANE)
+    assert not ch.fits
+
+
+def test_choose_tiles_rejects_degenerate_shapes():
+    with pytest.raises(ValueError):
+        tiling.choose_tiles(0, 128, row_bytes=4, q_row_bytes=4)
+
+
+def test_choose_tile_q_budget_and_floor():
+    per_q = 1024
+    # fixed planes leave room for exactly 16 query rows
+    fixed = tiling.VMEM_BUDGET_BYTES - 16 * per_q
+    assert tiling.choose_tile_q(64, fixed_bytes=fixed,
+                                per_query_bytes=per_q) == 16
+    # over-budget planes still return the sublane floor
+    assert tiling.choose_tile_q(
+        64, fixed_bytes=2 * tiling.VMEM_BUDGET_BYTES,
+        per_query_bytes=per_q) == tiling.SUBLANE
+    # small batches never get a tile taller than their padded height
+    assert tiling.choose_tile_q(3, fixed_bytes=0,
+                                per_query_bytes=1) == tiling.SUBLANE
+
+
+def test_bytes_moved_model_shape():
+    small = tiling.bytes_moved(8, 256, 8, 128, row_bytes=64,
+                               q_row_bytes=2048)
+    big = tiling.bytes_moved(16, 512, 8, 128, row_bytes=64,
+                             q_row_bytes=2048)
+    assert big > small
+    # wider candidate tiles re-fetch the query tile fewer times
+    wide = tiling.bytes_moved(8, 512, 8, 256, row_bytes=64,
+                              q_row_bytes=2048)
+    narrow = tiling.bytes_moved(8, 512, 8, 128, row_bytes=64,
+                                q_row_bytes=2048)
+    assert wide < narrow

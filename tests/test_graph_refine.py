@@ -183,6 +183,21 @@ def test_refine_kernel_parity():
     np.testing.assert_array_equal(np.asarray(e0), np.asarray(e1))
 
 
+@pytest.mark.parametrize("rounds", [1, 3])
+def test_refine_fuse_levels_bitexact(rounds):
+    """fuse_level 0/1/2 refinement (unfused / compacted frontier /
+    single-launch fused round) must be BITWISE identical on scores,
+    ids, and docs_evaluated."""
+    _, gidx, queries, _ = _built()
+    p0 = SearchParams(k=10, cut=8, block_budget=4, policy="budget",
+                      graph_degree=DEGREE, refine_rounds=rounds)
+    outs = [search_pipeline(gidx, queries,
+                            dataclasses.replace(p0, fuse_level=lvl))
+            for lvl in (0, 1, 2)]
+    _assert_same_results(outs[0], outs[1])
+    _assert_same_results(outs[0], outs[2])
+
+
 def test_compact_forward_graph_pipeline():
     """compact_forward=True: u8 forward plane shared by scorer and
     refine; the refined search still beats the unrefined one on the

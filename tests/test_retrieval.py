@@ -198,6 +198,27 @@ def test_pipeline_kernel_path_matches_jnp(small_index, small_collection):
     np.testing.assert_array_equal(np.asarray(e0), np.asarray(e1))
 
 
+@pytest.mark.parametrize("policy", ["budget", "adaptive",
+                                    "global_threshold"])
+def test_pipeline_fuse_levels_bitexact(small_index, small_collection,
+                                       policy):
+    """The fuse_level ladder (0 = unfused, 1 = candidate compaction +
+    candidate-driven scorer kernel, 2 = + fused router) must be
+    BITWISE identical on scores, ids, and docs_evaluated — fusion
+    reshapes execution, never results (tests/test_fusion.py carries
+    the stage-level and hierarchical/refined variants)."""
+    import dataclasses
+    idx, _ = small_index
+    _, queries, *_ = small_collection
+    p0 = SearchParams(k=10, cut=8, block_budget=32, policy=policy)
+    outs = [search_pipeline(idx, queries,
+                            dataclasses.replace(p0, fuse_level=lvl))
+            for lvl in (0, 1, 2)]
+    for lvl_out in outs[1:]:
+        for x, y in zip(outs[0], lvl_out):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
 def test_adaptive_small_block_budget(small_index, small_collection):
     """block_budget < probe_budget must degrade to pure budget routing,
     not crash on a negative stage-2 top_k."""

@@ -99,6 +99,66 @@ def test_queries_wider_than_nnz_budget(small_index, small_collection):
     assert (res.ids >= -1).all()
 
 
+# ---------------------------------------------- launch-width ladder
+
+def test_launch_width_ladder_defaults(small_index):
+    """Default rungs are (8, 32, 128) clipped to max_batch, which is
+    always the top rung."""
+    idx, _ = small_index
+    mk = lambda mb: AsyncSeismicServer(idx, _params(), max_batch=mb)
+    assert mk(32).launch_widths == (8, 32)
+    assert mk(8).launch_widths == (8,)
+    assert mk(200).launch_widths == (8, 32, 128, 200)
+    assert mk(3).launch_widths == (3,)
+
+
+def test_launch_width_explicit_and_validation(small_index):
+    idx, _ = small_index
+    srv = AsyncSeismicServer(idx, _params(), max_batch=16,
+                             launch_widths=(4, 2, 4))
+    assert srv.launch_widths == (2, 4, 16)     # sorted, deduped, top rung
+    with pytest.raises(ValueError, match="launch_widths"):
+        AsyncSeismicServer(idx, _params(), max_batch=16,
+                           launch_widths=(0, 4))
+    with pytest.raises(ValueError, match="launch_widths"):
+        AsyncSeismicServer(idx, _params(), max_batch=16,
+                           launch_widths=(4, 32))
+
+
+def test_pick_width_smallest_cover(small_index):
+    idx, _ = small_index
+    srv = AsyncSeismicServer(idx, _params(), max_batch=16,
+                             launch_widths=(2, 4))
+    assert [srv._pick_width(n) for n in (1, 2, 3, 4, 5, 16)] \
+        == [2, 2, 4, 4, 16, 16]
+
+
+def test_launch_width_dispatch_and_telemetry(small_index,
+                                             small_collection):
+    """A 3-request batch dispatches at the smallest covering rung (4),
+    not max_batch, and the per-width telemetry counter records it —
+    results still match the raw pipeline."""
+    idx, _ = small_index
+    _, queries, *_ = small_collection
+    srv = _server(small_index, max_batch=8, launch_widths=(2, 4),
+                  deadline_s=0.05)
+    with srv:
+        futs = [srv.submit(np.asarray(queries.coords[i]),
+                           np.asarray(queries.vals[i]))
+                for i in range(3)]
+        res = [f.result(10.0) for f in futs]
+    assert all(r.occupancy == 3 for r in res)
+    counters = srv.telemetry_export()["counters"]
+    assert counters["launch_width_4"] == 1
+    assert "launch_width_8" not in counters
+    p = _params()
+    want_s, want_ids, _ = search_pipeline(idx, queries, p)
+    for i, r in enumerate(res):
+        np.testing.assert_array_equal(r.ids, np.asarray(want_ids)[i])
+        np.testing.assert_allclose(r.scores, np.asarray(want_s)[i],
+                                   rtol=1e-6)
+
+
 # -------------------------------------------------- admission control
 
 def test_admission_reject_new(small_index, small_collection):
