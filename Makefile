@@ -1,7 +1,7 @@
 PY ?= python
 
 .PHONY: test test-fast bench bench-serving bench-graph bench-tune \
-	bench-kernels dev
+	bench-kernels bench-obs dev
 
 dev:
 	$(PY) -m pip install -r requirements-dev.txt
@@ -37,3 +37,7 @@ bench-tune:
 # candidate-compaction tile-skip gate
 bench-kernels:
 	PYTHONPATH=src $(PY) -m benchmarks.kernel_microbench --smoke
+
+# observability overhead smoke: component-gated <5% p50 / <3% QPS
+bench-obs:
+	PYTHONPATH=src $(PY) -m benchmarks.obs_overhead --smoke

@@ -121,8 +121,8 @@ def _policy_rows(tag, idx, p, queries, eids):
 def _fuse_row(policy, idx, ph, queries, eids):
     """fuse_level 0 vs 2 on the hierarchical index: equal recall,
     reduced modeled router/scorer (and refine, when enabled) bytes."""
-    from repro.kernels.gather_dot.ops import cand_tiles_processed
-    from repro.kernels.tiling import choose_tiles, gather_row_bytes
+    from repro.kernels.gather_dot.ops import (cand_tile_choice,
+                                              cand_tiles_processed)
     cfg = idx.config
     recs, times = {}, {}
     for fl in (0, 2):
@@ -140,9 +140,7 @@ def _fuse_row(policy, idx, ph, queries, eids):
     qn, c_ax = cand.shape
     nnz = int(idx.fwd.coords.shape[1])
     quant = idx.fwd_scale is not None
-    ch = choose_tiles(qn, c_ax,
-                      row_bytes=gather_row_bytes(nnz, quant=quant) + 4,
-                      q_row_bytes=4 * idx.dim)
+    ch = cand_tile_choice(qn, c_ax, nnz, quant=quant, dim=idx.dim)
     proc = cand_tiles_processed(np.asarray(cand), idx.n_docs,
                                 ch.tile_q, ch.tile_n)
     scored = int(proc.sum()) * ch.tile_q * ch.tile_n // qn

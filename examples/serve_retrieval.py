@@ -1,6 +1,8 @@
 """Serving demo: the synchronous SeismicServer facade, the async
-deadline micro-batching server, serving a TUNED operating point
-resolved from the index, and a small LMDecoder generation loop.
+deadline micro-batching server, end-to-end observability (request
+tracing + a live Prometheus/trace HTTP endpoint), serving a TUNED
+operating point resolved from the index, and a small LMDecoder
+generation loop.
 
 Every retrieval launch runs the six-stage pipeline
 (prep -> router -> selector -> scorer -> merge -> refine; see
@@ -95,6 +97,56 @@ def async_demo(queries, index):
           f"({tel['cache']['hits']} hits)")
 
 
+def observability_demo(queries, index):
+    """Serve traced traffic with a live metrics endpoint: scrape the
+    Prometheus exposition over HTTP, print a snapshot table and the
+    slowest request span trees, and save one Chrome trace."""
+    import json
+    import urllib.request
+
+    from repro.obs import Observability, start_exporter
+    from repro.obs.report import slowest_traces_table, snapshot_table
+
+    print("== Observability: tracing + metrics endpoint ==")
+    obs = Observability.create(stage_sample_every=4)   # demo: lots of detail
+    server = AsyncSeismicServer(
+        index, SearchParams(k=10, cut=10, block_budget=16,
+                            policy="adaptive"),
+        max_batch=32, query_nnz=queries.nnz_max, deadline_s=0.005,
+        cache_size=128, obs=obs)
+    coords = np.asarray(queries.coords)
+    vals = np.asarray(queries.vals)
+    with server, start_exporter(obs.registry, obs.tracer) as exporter:
+        futs = [server.submit(coords[i % queries.n], vals[i % queries.n])
+                for i in range(128)]
+        for f in futs:
+            f.wait()
+        with urllib.request.urlopen(exporter.url + "/metrics") as r:
+            metrics = r.read().decode()
+        with urllib.request.urlopen(exporter.url + "/traces") as r:
+            chrome = json.load(r)
+    print(f"   scraped {exporter.url}/metrics "
+          f"({len(metrics.splitlines())} lines); excerpt:")
+    for line in metrics.splitlines():
+        if line.startswith(("seismic_cache_hit_rate",
+                            "seismic_docs_evaluated_mean",
+                            "seismic_stage_modeled_bytes_per_query")):
+            print("     " + line)
+    print("   -- metric snapshot (excerpt) --")
+    snap = {k: v for k, v in obs.registry.snapshot().items()
+            if k in ("seismic_latency_seconds", "seismic_events_total")}
+    for line in snapshot_table(snap, max_rows=12).splitlines():
+        print("     " + line)
+    print("   -- slowest traced requests --")
+    for line in slowest_traces_table(chrome, n=3).splitlines():
+        print("     " + line)
+    path = "/tmp/seismic_trace.json"
+    with open(path, "w", encoding="utf-8") as f:
+        json.dump(chrome, f)
+    print(f"   Chrome trace ({len(chrome['traceEvents'])} events) -> "
+          f"{path} (load in Perfetto / chrome://tracing)")
+
+
 def tuned_demo(docs, queries, index):
     """Tune an operating point for a recall target on a held-out query
     sample, persist it ON the index, and serve with params resolved
@@ -141,5 +193,6 @@ if __name__ == "__main__":
     docs, queries, index = build_demo_index()
     retrieval_demo(docs, queries, index)
     async_demo(queries, index)
+    observability_demo(queries, index)
     tuned_demo(docs, queries, index)
     decode_demo()

@@ -86,6 +86,54 @@ def expand_neighbors(index: SeismicIndex, ids: jax.Array,
     return nbrs.reshape(qn, -1).astype(jnp.int32)
 
 
+def scored_init(ids: jax.Array, n_docs: int) -> jax.Array:
+    """The seen-set seed for round 0: the original merge's ids with
+    padding mapped to the sentinel."""
+    return jnp.where(ids >= 0, ids, n_docs)
+
+
+def refine_one_round(index: SeismicIndex, q_dense: jax.Array,
+                     scores: jax.Array, ids: jax.Array, ev: jax.Array,
+                     scored: jax.Array, p: SearchParams
+                     ) -> tuple[jax.Array, jax.Array, jax.Array,
+                                jax.Array]:
+    """ONE expand + rescore + re-merge round.
+
+    ``scored`` is every id scored in any earlier round (or the
+    original merge), sentinel-padded; the round masks it out of the
+    expansion so only the genuinely new frontier pays scoring work,
+    and returns it widened by this round's candidates. Factored out of
+    :func:`refine_batch` so the staged/traced pipeline can run (and
+    time) rounds individually — same ops, bit-exact either way.
+    """
+    from repro.retrieval.merge import merge_topk
+    from repro.retrieval.scorer import dedupe_batch, score_candidates
+    if p.fuse_level >= 2:
+        # one launch: expand + dedupe + seen-mask + compact +
+        # rescore — the [Q, k*degree] expansion never leaves VMEM
+        from repro.kernels.refine_fused import refine_round_batch
+        cand, new_s = refine_round_batch(
+            ids, scored, q_dense, index.knn_ids, index.fwd.coords,
+            index.fwd.vals, index.fwd_scale, index.fwd_zero,
+            n_docs=index.n_docs, degree=p.graph_degree)
+    else:
+        from repro.retrieval.scorer import compact_candidates
+        cand = dedupe_batch(
+            expand_neighbors(index, ids, p.graph_degree), index.n_docs)
+        seen = (cand[:, :, None] == scored[:, None, :]).any(-1)
+        cand = jnp.where(seen, index.n_docs, cand)
+        if p.fuse_level >= 1:
+            cand = compact_candidates(cand)
+        new_s = score_candidates(index, q_dense, cand, p.use_kernel,
+                                 fuse_level=p.fuse_level)
+    all_ids = jnp.concatenate(
+        [jnp.where(ids >= 0, ids, index.n_docs), cand], axis=1)
+    all_s = jnp.concatenate([scores, new_s], axis=1)
+    ev = ev + (cand < index.n_docs).sum(axis=-1)
+    scores, ids, _ = merge_topk(all_ids, all_s, p.k, index.n_docs)
+    return scores, ids, ev, jnp.concatenate([scored, cand], axis=1)
+
+
 def refine_batch(index: SeismicIndex, q_dense: jax.Array,
                  scores: jax.Array, ids: jax.Array, ev: jax.Array,
                  p: SearchParams
@@ -100,37 +148,13 @@ def refine_batch(index: SeismicIndex, q_dense: jax.Array,
     if p.refine_rounds <= 0 or p.graph_degree <= 0:
         return scores, ids, ev
     validate_refine_params(index, p)
-    from repro.retrieval.merge import merge_topk
-    from repro.retrieval.scorer import dedupe_batch, score_candidates
     # every id scored in any earlier round (or the original merge):
     # masked out of each round's expansion, so only the genuinely new
     # frontier is rescored and ev counts distinct documents. Grows by
     # k * graph_degree per round — the rounds loop is unrolled, so the
     # widening shape stays static under jit.
-    scored = jnp.where(ids >= 0, ids, index.n_docs)
+    scored = scored_init(ids, index.n_docs)
     for _ in range(p.refine_rounds):
-        if p.fuse_level >= 2:
-            # one launch: expand + dedupe + seen-mask + compact +
-            # rescore — the [Q, k*degree] expansion never leaves VMEM
-            from repro.kernels.refine_fused import refine_round_batch
-            cand, new_s = refine_round_batch(
-                ids, scored, q_dense, index.knn_ids, index.fwd.coords,
-                index.fwd.vals, index.fwd_scale, index.fwd_zero,
-                n_docs=index.n_docs, degree=p.graph_degree)
-        else:
-            from repro.retrieval.scorer import compact_candidates
-            cand = dedupe_batch(
-                expand_neighbors(index, ids, p.graph_degree), index.n_docs)
-            seen = (cand[:, :, None] == scored[:, None, :]).any(-1)
-            cand = jnp.where(seen, index.n_docs, cand)
-            if p.fuse_level >= 1:
-                cand = compact_candidates(cand)
-            new_s = score_candidates(index, q_dense, cand, p.use_kernel,
-                                     fuse_level=p.fuse_level)
-        all_ids = jnp.concatenate(
-            [jnp.where(ids >= 0, ids, index.n_docs), cand], axis=1)
-        all_s = jnp.concatenate([scores, new_s], axis=1)
-        ev = ev + (cand < index.n_docs).sum(axis=-1)
-        scores, ids, _ = merge_topk(all_ids, all_s, p.k, index.n_docs)
-        scored = jnp.concatenate([scored, cand], axis=1)
+        scores, ids, ev, scored = refine_one_round(
+            index, q_dense, scores, ids, ev, scored, p)
     return scores, ids, ev

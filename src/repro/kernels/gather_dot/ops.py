@@ -28,10 +28,22 @@ from repro.kernels.gather_dot.gather_dot import (gather_dot_batch_pallas,
                                                  gather_dot_pallas)
 from repro.kernels.gather_dot.ref import gather_dot_batch_ref, gather_dot_ref
 from repro.kernels.runtime import default_interpret
-from repro.kernels.tiling import choose_tiles, gather_row_bytes
+from repro.kernels.tiling import TileChoice, choose_tiles, gather_row_bytes
 
 _TILE_Q = 8     # minimum aligned tile (f32 sublane) — chooser floor
 _TILE_N = 128   # minimum aligned tile (lane width) — chooser floor
+
+
+def cand_tile_choice(qn: int, c: int, nnz: int, *, quant: bool,
+                     dim: int) -> TileChoice:
+    """THE tile choice of the candidate-driven kernel for a [qn, c]
+    launch — one definition shared by ``gather_dot_cand_batch``, the
+    microbench/throughput reports, and the obs device accounting, so
+    every ``cand_tiles_processed`` mirror evaluates the kernel's
+    actual tiling (the +4 charges the in-kernel candidate-id column)."""
+    return choose_tiles(qn, c,
+                        row_bytes=gather_row_bytes(nnz, quant=quant) + 4,
+                        q_row_bytes=4 * dim)
 
 
 def _pad_batch_call(q_dense, coords, vals, scale, zero, *,
@@ -94,10 +106,9 @@ def gather_dot_cand_batch(q_dense: jax.Array, cand: jax.Array,
     qn, c = cand.shape
     nnz = fwd_coords.shape[1]
     if tile_q is None or tile_n is None:
-        ch = choose_tiles(qn, c,
-                          row_bytes=gather_row_bytes(
-                              nnz, quant=fwd_scale is not None) + 4,
-                          q_row_bytes=4 * q_dense.shape[1])
+        ch = cand_tile_choice(qn, c, nnz,
+                              quant=fwd_scale is not None,
+                              dim=q_dense.shape[1])
         tile_q = tile_q if tile_q is not None else ch.tile_q
         tile_n = tile_n if tile_n is not None else ch.tile_n
     pq = (-qn) % tile_q
@@ -144,5 +155,5 @@ def gather_dot(q_dense: jax.Array, coords: jax.Array,
 
 
 __all__ = ["gather_dot", "gather_dot_batch", "gather_dot_cand_batch",
-           "cand_tiles_processed", "gather_dot_ref",
+           "cand_tile_choice", "cand_tiles_processed", "gather_dot_ref",
            "gather_dot_batch_ref"]

@@ -1,0 +1,138 @@
+"""Device-truthful stage accounting: pair each stage's measured
+blocking wall time with its modeled HBM traffic.
+
+On the CPU interpret path, wall time says little about what a fusion
+level buys on device — but the *modeled* HBM bytes per stage
+(:mod:`repro.retrieval.workmodel`, the same arithmetic the kernel
+wrappers use for tile selection) are hardware-truthful by
+construction. This module turns the one-off benchmark rows into
+continuously exported metrics: on every staged (sampled) launch it
+updates, per stage and per fuse level,
+
+    seismic_stage_modeled_bytes_per_query{stage,fuse_level}
+        modeled HBM bytes one query moves through the stage. The
+        scorer's value is DYNAMIC: at ``fuse_level >= 1`` it charges
+        only the candidate tiles the kernel actually processes, via
+        the ``cand_tiles_processed`` host mirror of the tile-skip
+        predicate — so cache-friendly traffic (high dedupe rates)
+        shows up as shrinking modeled bytes, live.
+
+    seismic_stage_achieved_bytes_per_second{stage,fuse_level}
+        modeled bytes moved by the launch divided by the stage's
+        measured blocking wall time — achieved-vs-modeled bandwidth.
+        On a real TPU this approaches HBM bandwidth for the streaming
+        stages; on the interpret path it is a consistency signal
+        (fused levels should move fewer modeled bytes per second of
+        *unchanged* wall time).
+
+Only the three stages with a traffic model (router / scorer / refine)
+are accounted; prep, selector, and merge move output-sized arrays the
+model treats as free.
+"""
+from __future__ import annotations
+
+from typing import TYPE_CHECKING
+
+import numpy as np
+
+from repro.retrieval.workmodel import (refine_bytes, router_bytes,
+                                       scorer_bytes)
+
+if TYPE_CHECKING:
+    from repro.core.types import SeismicIndex
+    from repro.obs.registry import MetricsRegistry
+    from repro.retrieval.params import SearchParams
+
+MODELED_STAGES = ("router", "scorer", "refine")
+
+
+def scored_slots_mirror(cand, n_docs: int, nnz: int, dim: int, *,
+                        quant: bool) -> int:
+    """Per-query candidate slots the fused scorer kernel actually
+    processes, from the ``cand_tiles_processed`` host mirror of its
+    tile-skip predicate (bit-for-bit the kernel's own decision — same
+    tile choice, same padded layout)."""
+    from repro.kernels.gather_dot.ops import (cand_tile_choice,
+                                              cand_tiles_processed)
+    a = np.asarray(cand)
+    qn, c = a.shape
+    ch = cand_tile_choice(qn, c, nnz, quant=quant, dim=dim)
+    proc = cand_tiles_processed(a, n_docs, ch.tile_q, ch.tile_n)
+    return int(proc.sum()) * ch.tile_q * ch.tile_n // max(qn, 1)
+
+
+class DeviceAccounting:
+    """Registry-backed achieved-vs-modeled bandwidth accounting for one
+    (index, params) serving configuration."""
+
+    def __init__(self, index: "SeismicIndex", p: "SearchParams",
+                 registry: "MetricsRegistry"):
+        self.index = index
+        self.p = p
+        self.fuse = str(p.fuse_level)
+        cfg = index.config
+        self.nnz = int(index.fwd.coords.shape[1])
+        self.quant = index.fwd_scale is not None
+        self._modeled = registry.gauge(
+            "seismic_stage_modeled_bytes_per_query",
+            "Modeled HBM bytes per query per stage "
+            "(repro.retrieval.workmodel)",
+            ("stage", "fuse_level"))
+        self._bw = registry.gauge(
+            "seismic_stage_achieved_bytes_per_second",
+            "Modeled stage bytes moved / measured blocking stage wall "
+            "time", ("stage", "fuse_level"))
+        # router and refine traffic is static in the launch shape
+        self._static = {
+            "router": router_bytes(
+                cut=p.cut, n_blocks=cfg.n_blocks,
+                summary_nnz=cfg.summary_nnz, dim=index.dim,
+                fuse_level=p.fuse_level, n_superblocks=cfg.n_superblocks,
+                fanout=p.superblock_fanout,
+                superblock_budget=p.superblock_budget,
+                superblock_nnz=cfg.superblock_nnz),
+            "refine": refine_bytes(
+                k=p.k, degree=p.graph_degree, rounds=p.refine_rounds,
+                nnz=self.nnz, quant=self.quant, dim=index.dim,
+                fuse_level=p.fuse_level),
+        }
+        for stage, b in self._static.items():
+            self._modeled.labels(stage, self.fuse).set(b)
+
+    def scorer_bytes_per_query(self, cand=None) -> int:
+        """Scorer traffic for one launch's candidate tensor (``cand``
+        as produced by the scorer stage; ``None`` models the worst case
+        with every slot scored)."""
+        if cand is None:
+            n_slots = self.p.block_budget * self.index.config.block_cap
+            scored = n_slots
+        else:
+            a = np.asarray(cand)
+            n_slots = a.shape[1]
+            if self.p.fuse_level >= 1:
+                scored = scored_slots_mirror(
+                    a, self.index.n_docs, self.nnz, self.index.dim,
+                    quant=self.quant)
+            else:
+                scored = n_slots
+        return scorer_bytes(n_slots=n_slots, scored_slots=scored,
+                            nnz=self.nnz, quant=self.quant,
+                            dim=self.index.dim,
+                            fuse_level=self.p.fuse_level)
+
+    def observe(self, stage_seconds: dict[str, float], width: int,
+                cand=None) -> None:
+        """Record one staged launch: ``stage_seconds`` maps stage name
+        to blocking wall seconds, ``width`` is the launch width (rows),
+        ``cand`` the scorer stage's candidate output if captured."""
+        per_query = dict(self._static)
+        per_query["scorer"] = self.scorer_bytes_per_query(cand)
+        for stage in MODELED_STAGES:
+            b = per_query[stage]
+            self._modeled.labels(stage, self.fuse).set(b)
+            dt = stage_seconds.get(stage)
+            if dt is not None and dt > 0 and b > 0:
+                self._bw.labels(stage, self.fuse).set(b * width / dt)
+
+
+__all__ = ["DeviceAccounting", "scored_slots_mirror", "MODELED_STAGES"]

@@ -73,8 +73,12 @@ def stage_fns(index: SeismicIndex, p: SearchParams
     own so a caller can ``block_until_ready`` between stages and
     attribute wall time, at the cost of materializing inter-stage
     arrays (slightly slower end-to-end than the fused
-    ``search_pipeline``). Keyed by ``STAGES`` name.
+    ``search_pipeline``). Keyed by ``STAGES`` name, plus
+    ``refine_round`` — a single refine round for the traced path's
+    per-round child spans (compiled lazily, one program per widening
+    ``scored`` shape).
     """
+    from repro.graph.refine import refine_one_round
     select = get_selector(p.policy)
     return {
         "prep": jax.jit(
@@ -88,34 +92,71 @@ def stage_fns(index: SeismicIndex, p: SearchParams
         "merge": jax.jit(lambda c, s: merge_topk(c, s, p.k, index.n_docs)),
         "refine": jax.jit(
             lambda qd, s, i, e: refine_batch(index, qd, s, i, e, p)),
+        "refine_round": jax.jit(
+            lambda qd, s, i, e, sc: refine_one_round(index, qd, s, i, e,
+                                                     sc, p)),
     }
 
 
 def run_pipeline_staged(index: SeismicIndex, q_coords: jax.Array,
                         q_vals: jax.Array, p: SearchParams,
                         fns: dict[str, Callable] | None = None,
-                        record: Callable[[str, float], None] | None = None
+                        record: Callable[[str, float], None] | None = None,
+                        span_cb: Callable[[str, float, float], None]
+                        | None = None,
+                        split_refine: bool = False,
+                        probe: Callable[[str, object], None] | None = None
                         ) -> tuple[jax.Array, jax.Array, jax.Array]:
     """Stage-by-stage pipeline with per-stage wall-time reporting.
 
     ``record(stage_name, seconds)`` is called once per stage with the
-    blocking wall time. Pass a prebuilt ``fns`` (from ``stage_fns``) to
-    reuse compiled stages across calls; fixed input shapes never
-    recompile. Output matches ``search_pipeline``.
+    blocking wall time; ``span_cb(stage_name, t0, t1)`` additionally
+    receives the ``time.monotonic`` start/end stamps (the tracer hook).
+    With ``split_refine`` the refine stage runs round-by-round and
+    ``refine_round_<j>`` intervals are reported to ``span_cb`` (nested
+    inside the ``refine`` interval) — identical results, one extra jit
+    boundary per round. ``probe(name, value)`` exposes chosen
+    intermediates (currently ``("cand", scorer candidate ids)``) to
+    device accounting without changing any dataflow. Pass a prebuilt
+    ``fns`` (from ``stage_fns``) to reuse compiled stages across
+    calls; fixed input shapes never recompile. Output matches
+    ``search_pipeline``.
     """
     if fns is None:
         fns = stage_fns(index, p)
 
     def timed(name, fn, *args):
-        t0 = time.perf_counter()
+        t0 = time.monotonic()
         out = jax.block_until_ready(fn(*args))
+        t1 = time.monotonic()
         if record is not None:
-            record(name, time.perf_counter() - t0)
+            record(name, t1 - t0)
+        if span_cb is not None:
+            span_cb(name, t0, t1)
         return out
 
     q_dense, lists, _ = timed("prep", fns["prep"], q_coords, q_vals)
     batch = timed("router", fns["router"], q_dense, lists)
     sel = timed("selector", fns["selector"], batch)
     cand, scores = timed("scorer", fns["scorer"], batch, sel)
+    if probe is not None:
+        probe("cand", cand)
     top_s, top_ids, ev = timed("merge", fns["merge"], cand, scores)
-    return timed("refine", fns["refine"], q_dense, top_s, top_ids, ev)
+    if not (split_refine and p.refine_rounds > 0 and p.graph_degree > 0):
+        return timed("refine", fns["refine"], q_dense, top_s, top_ids, ev)
+    # round-by-round refine: same ops as refine_batch, one jit boundary
+    # per round so each round's wall time is attributable
+    from repro.graph.refine import scored_init, validate_refine_params
+    validate_refine_params(index, p)
+    t0 = time.monotonic()
+    scored = scored_init(top_ids, index.n_docs)
+    s, i, e = top_s, top_ids, ev
+    for j in range(p.refine_rounds):
+        s, i, e, scored = timed(f"refine_round_{j}", fns["refine_round"],
+                                q_dense, s, i, e, scored)
+    t1 = time.monotonic()
+    if record is not None:
+        record("refine", t1 - t0)
+    if span_cb is not None:
+        span_cb("refine", t0, t1)
+    return s, i, e

@@ -5,7 +5,13 @@ staged retrieval pipeline (see README.md in this package).
     queue       bounded deadline request queue + admission control
     batcher     AsyncSeismicServer (the micro-batching server)
     cache       quantized-fingerprint LRU result cache
-    telemetry   latency histograms / counters exported as plain dicts
+    telemetry   compatibility facade over repro.obs.MetricsRegistry
+                (plain-dict export shape unchanged)
+
+Pass ``obs=repro.obs.Observability.create()`` to either server for
+request tracing, the serving gauges, sampled per-stage spans, and
+device accounting — one registry scraped by the ``repro.obs``
+exporters. See ``src/repro/obs/README.md``.
 """
 from repro.serve.batcher import AsyncSeismicServer, ServeResult
 from repro.serve.cache import LRUCache, query_fingerprint

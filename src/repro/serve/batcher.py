@@ -17,6 +17,18 @@ launch slot — the LRU only catches repeats *after* the first
 completes), and telemetry (per-stage latency when ``stage_timing`` is
 on, queue depth, batch occupancy, cache hit-rate).
 
+Observability (``obs=Observability.create()``): a trace id is minted
+at ``submit`` and every request produces a span tree — ``request``
+root, ``queue_wait`` and ``launch`` children, and (on every
+``stage_sample_every``-th launch) the six ``stage_*`` children plus
+per-``refine_round_<j>`` grandchildren, recorded into the tracer's
+ring buffer and exportable as Chrome trace-event JSON. The registry
+gains serving gauges (cache hit-rate, shed/reject rate, deadline-miss
+rate, per-width occupancy, tuned-policy drift) and, via
+:class:`repro.obs.device.DeviceAccounting`, achieved-vs-modeled HBM
+bytes per stage per fuse level on every sampled (staged) launch. See
+``src/repro/obs/README.md`` for the span model and metric names.
+
 The synchronous ``SeismicServer`` facade in ``engine`` remains the
 simple offline-batch path; this class is the serving path every
 future scaling layer (sharded serving, replication) plugs into.
@@ -54,6 +66,25 @@ class ServeResult:
     occupancy: int = 0         # real queries in the serving launch
 
 
+def attach_stage_spans(tracer, trace, parent, triples) -> None:
+    """Turn ``run_pipeline_staged`` span triples ``(name, t0, t1)``
+    into child spans of ``parent``: ``stage_<name>`` for the six
+    stages, with ``refine_round_<j>`` entries nested under the
+    ``stage_refine`` span."""
+    rounds = [t for t in triples if t[0].startswith("refine_round_")]
+    refine_span = None
+    for name, a, b in triples:
+        if name.startswith("refine_round_"):
+            continue
+        sp = tracer.add_span(trace, f"stage_{name}", a, b, parent=parent)
+        if name == "refine":
+            refine_span = sp
+    for name, a, b in rounds:
+        tracer.add_span(trace, name, a, b,
+                        parent=refine_span if refine_span is not None
+                        else parent)
+
+
 class AsyncSeismicServer:
     """Micro-batching async retrieval server over one Seismic index.
 
@@ -78,9 +109,20 @@ class AsyncSeismicServer:
                   requests with identical quantized fingerprints (the
                   LRU cache only catches repeats after the first
                   completes; this catches the simultaneous burst).
-    stage_timing  serve through the stage-by-stage pipeline and record
-                  ``stage_*`` latency histograms (slightly slower than
-                  the fused launch; keep off unless profiling).
+    stage_timing  serve EVERY launch through the stage-by-stage
+                  pipeline and record ``stage_*`` latency histograms
+                  (slightly slower than the fused launch; with ``obs``
+                  attached prefer its sampled stage tracing instead).
+    obs           an ``repro.obs.Observability`` bundle: enables
+                  request tracing, the serving gauges, and sampled
+                  staged launches with device accounting. When given
+                  and ``telemetry`` is not, the telemetry facade
+                  writes into the bundle's registry so one scrape
+                  sees everything.
+    deadline_grace_s  slack before a dispatch past its deadline counts
+                  as a deadline MISS (deadline-triggered dispatches
+                  legitimately run a hair past it; a miss means the
+                  batcher fell behind by more than this).
     """
 
     DEFAULT_WIDTHS = (8, 32, 128)
@@ -91,7 +133,8 @@ class AsyncSeismicServer:
                  deadline_s: float = 2e-3, queue_bound: int = 1024,
                  admission: str = "reject", cache_size: int = 0,
                  coalesce: bool = True, stage_timing: bool = False,
-                 telemetry: ServerTelemetry | None = None):
+                 telemetry: ServerTelemetry | None = None,
+                 obs=None, deadline_grace_s: float = 1e-3):
         validate_refine_params(index, params)   # fail before threads spin
         from repro.tune.policy import validate_tuned_index
         validate_tuned_index(index)             # stale TunedPolicy -> now
@@ -113,16 +156,88 @@ class AsyncSeismicServer:
             + (max_batch,)
         self.query_nnz = query_nnz
         self.deadline_s = deadline_s
+        self.deadline_grace_s = deadline_grace_s
         self.stage_timing = stage_timing
+        self.obs = obs
         self.queue = RequestQueue(bound=queue_bound, policy=admission)
         self.cache = LRUCache(cache_size) if cache_size > 0 else None
         self.coalesce = coalesce
         self._inflight: dict[bytes, Request] = {}
         self._coalesce_lock = threading.Lock()
-        self.telemetry = telemetry if telemetry is not None \
-            else ServerTelemetry()
-        self._fns = stage_fns(index, params) if stage_timing else None
+        if telemetry is not None:
+            self.telemetry = telemetry
+        else:
+            self.telemetry = ServerTelemetry(
+                registry=obs.registry if obs is not None else None)
+        self._tracer = obs.tracer if obs is not None else None
+        staged_wanted = stage_timing or (
+            obs is not None and obs.stage_sample_every > 0)
+        self._fns = stage_fns(index, params) if staged_wanted else None
+        self._device = None
+        if self._fns is not None:
+            from repro.obs.device import DeviceAccounting
+            self._device = DeviceAccounting(index, params,
+                                            self.telemetry.registry)
+        self._launch_seq = 0                    # worker thread only
+        self._width_stats: dict[int, list[int]] = {}   # w -> [launches,
+        self._ev_sum = 0.0                             #       slots]
+        self._ev_n = 0
+        self._register_gauges()
         self._thread: threading.Thread | None = None
+
+    # ------------------------------------------------------ observability
+
+    def _event(self, name: str):
+        """Current value of one ``seismic_events_total`` counter."""
+        return self.telemetry.registry.counter(
+            "seismic_events_total", labels=("event",)).labels(name).value
+
+    def _register_gauges(self) -> None:
+        """Derived serving gauges, evaluated lazily at scrape time.
+        One bundle per server: sharing an Observability registry across
+        servers would make the last one win these callbacks."""
+        reg = self.telemetry.registry
+        reg.gauge("seismic_cache_hit_rate",
+                  "LRU result-cache hit rate since start").labels() \
+            .set_fn(lambda: self.cache.stats()["hit_rate"]
+                    if self.cache is not None else 0.0)
+        reg.gauge("seismic_shed_rate",
+                  "(shed + rejected) / submitted requests").labels() \
+            .set_fn(lambda: (self._event("shed")
+                             + self._event("rejected"))
+                    / max(1, self._event("requests")))
+        reg.gauge("seismic_deadline_miss_rate",
+                  "dispatches later than deadline + grace / dispatched"
+                  ).labels() \
+            .set_fn(lambda: self._event("deadline_missed")
+                    / max(1, self._event("dispatched")))
+        self._width_occ = reg.gauge(
+            "seismic_launch_width_occupancy",
+            "Mean real-request fill fraction per compiled launch width",
+            ("width",))
+        self._ev_mean = reg.gauge(
+            "seismic_docs_evaluated_mean",
+            "Running mean docs exactly scored per served query"
+            ).labels()
+        from repro.tune.policy import KNOB_FIELDS
+        self._tuned_match = next(
+            (t for t in (getattr(self.index, "tuned", ()) or ())
+             if all(getattr(t, f) == getattr(self.params, f)
+                    for f in KNOB_FIELDS)), None)
+        if self._tuned_match is not None:
+            cost = self._tuned_match.measured_cost
+            reg.gauge("seismic_tuned_drift_docs",
+                      "Served mean docs_evaluated minus the attached "
+                      "TunedPolicy's measured cost", ("target",)) \
+                .labels(f"{self._tuned_match.target:g}") \
+                .set_fn(lambda: (self._ev_sum / self._ev_n - cost)
+                        if self._ev_n else 0.0)
+            reg.gauge("seismic_tuned_drift_ratio",
+                      "Served mean docs_evaluated over the attached "
+                      "TunedPolicy's measured cost", ("target",)) \
+                .labels(f"{self._tuned_match.target:g}") \
+                .set_fn(lambda: (self._ev_sum / self._ev_n / cost)
+                        if self._ev_n and cost else 1.0)
 
     # ------------------------------------------------------- lifecycle
 
@@ -154,17 +269,20 @@ class AsyncSeismicServer:
         self.stop()
 
     def warmup(self) -> None:
-        """Compile every ladder width before serving traffic."""
+        """Compile every ladder width before serving traffic — the
+        fused program always, plus the staged (and per-refine-round)
+        programs when stage timing or sampled stage tracing is on."""
         for width in self.launch_widths:
             coords = jnp.zeros((width, self.query_nnz), jnp.int32)
             vals = jnp.zeros((width, self.query_nnz), jnp.float32)
-            if self.stage_timing:
-                jax.block_until_ready(run_pipeline_staged(
-                    self.index, coords, vals, self.params, fns=self._fns))
-            else:
+            if not self.stage_timing:
                 jax.block_until_ready(search_pipeline(
                     self.index, PaddedSparse(coords, vals, self.index.dim),
                     self.params))
+            if self._fns is not None:
+                jax.block_until_ready(run_pipeline_staged(
+                    self.index, coords, vals, self.params,
+                    fns=self._fns, split_refine=True))
 
     # ------------------------------------------------------ submission
 
@@ -177,11 +295,15 @@ class AsyncSeismicServer:
         attaches to that request's launch slot instead of occupying
         its own (``coalesce``). Rejected / shed requests get a failed
         future (``status`` set), never an exception on the submitting
-        thread.
+        thread. With tracing on, every path ends the request's trace
+        with a ``status`` attr.
         """
         tel = self.telemetry
         tel.inc("requests")
         c, v = self._normalize(coords, vals)
+        now = time.monotonic()
+        tr = self._tracer.start_trace("request", now) \
+            if self._tracer is not None else None
         key = None
         if self.cache is not None or self.coalesce:
             key = query_fingerprint(c, v)
@@ -192,12 +314,14 @@ class AsyncSeismicServer:
                 ids, scores, ev = hit
                 fut._set(ServeResult(ids=ids.copy(), scores=scores.copy(),
                                      docs_evaluated=ev, cached=True))
+                if tr is not None:
+                    self._tracer.end_trace(tr, time.monotonic(),
+                                           status="done", cached=True)
                 return fut
-        now = time.monotonic()
         req = Request(coords=c, vals=v, submit_t=now,
                       deadline=now + (self.deadline_s if deadline_s is None
                                       else deadline_s),
-                      future=ServeFuture(), cache_key=key)
+                      future=ServeFuture(), cache_key=key, trace=tr)
         # the check-attach-or-enqueue-and-register must be atomic, or
         # two racing duplicates both become primaries / a follower
         # attaches to a request whose slot already fulfilled
@@ -205,7 +329,11 @@ class AsyncSeismicServer:
             if self.coalesce:
                 primary = self._inflight.get(key)
                 if primary is not None:
-                    primary.followers.append((req.future, now))
+                    primary.followers.append((req.future, now, tr))
+                    if tr is not None:
+                        tr.root.attrs["coalesced_into"] = \
+                            primary.trace.trace_id \
+                            if primary.trace is not None else "untraced"
                     tel.inc("coalesced")
                     return req.future
             status, shed = self.queue.put(req)
@@ -216,6 +344,9 @@ class AsyncSeismicServer:
         if status != "ok":
             tel.inc(status)                 # "rejected" or "closed"
             req.future._fail(status)
+            if tr is not None:
+                self._tracer.end_trace(tr, time.monotonic(),
+                                       status=status)
         elif shed is not None:
             tel.inc("shed")
             self._fail_all(shed, "shed")
@@ -277,9 +408,14 @@ class AsyncSeismicServer:
 
     def _fail_all(self, req: Request, status: str) -> None:
         """Fail a request's future and every coalesced follower."""
-        for f, _ in self._finish_inflight(req):
+        now = time.monotonic()
+        for f, _, ftr in self._finish_inflight(req):
             f._fail(status)
+            if ftr is not None:
+                self._tracer.end_trace(ftr, now, status=status)
         req.future._fail(status)
+        if req.trace is not None:
+            self._tracer.end_trace(req.trace, now, status=status)
 
     def _pick_width(self, n: int) -> int:
         """Smallest pre-compiled ladder rung covering ``n`` requests."""
@@ -294,30 +430,53 @@ class AsyncSeismicServer:
         n = len(batch)
         width = self._pick_width(n)
         tel.inc(f"launch_width_{width}")
+        tel.inc("dispatched", n)
+        seq = self._launch_seq
+        self._launch_seq += 1
+        staged = self.stage_timing or (
+            self._fns is not None and self.obs is not None
+            and self.obs.sample_stages(seq))
         coords = np.zeros((width, self.query_nnz), np.int32)
         vals = np.zeros((width, self.query_nnz), np.float32)
         for i, r in enumerate(batch):
             coords[i], vals[i] = r.coords, r.vals
         dispatch_t = time.monotonic()
-        t0 = time.perf_counter()
-        if self.stage_timing:
+        triples: list[tuple[str, float, float]] = []
+        probed: dict[str, object] = {}
+        t0 = time.monotonic()
+        if staged:
             scores, ids, ev = run_pipeline_staged(
                 self.index, jnp.asarray(coords), jnp.asarray(vals),
                 self.params, fns=self._fns,
-                record=lambda s, dt: tel.record_latency(f"stage_{s}", dt))
+                record=lambda s, dt: tel.record_latency(f"stage_{s}", dt),
+                span_cb=lambda name, a, b: triples.append((name, a, b)),
+                split_refine=True, probe=probed.__setitem__)
         else:
             scores, ids, ev = jax.block_until_ready(search_pipeline(
                 self.index,
                 PaddedSparse(jnp.asarray(coords), jnp.asarray(vals),
                              self.index.dim),
                 self.params))
-        tel.record_latency("launch", time.perf_counter() - t0)
+        t1 = time.monotonic()
+        tel.record_latency("launch", t1 - t0)
         tel.inc("batches")
         tel.observe_occupancy(n)
+        ws = self._width_stats.setdefault(width, [0, 0])
+        ws[0] += 1
+        ws[1] += n
+        self._width_occ.labels(str(width)).set(ws[1] / (ws[0] * width))
+        if staged and self._device is not None:
+            stage_seconds = {name: b - a for name, a, b in triples}
+            self._device.observe(stage_seconds, width,
+                                 cand=probed.get("cand"))
         ids = np.asarray(ids)
         scores = np.asarray(scores)
         ev = np.asarray(ev)
+        self._ev_sum += float(ev[:n].sum())
+        self._ev_n += n
+        self._ev_mean.set(self._ev_sum / self._ev_n)
         done_t = time.monotonic()
+        leader = batch[0]
         served = 0
         for i, r in enumerate(batch):
             if self.cache is not None and r.cache_key is not None:
@@ -326,13 +485,26 @@ class AsyncSeismicServer:
                 self.cache.put(r.cache_key,
                                (ids[i].copy(), scores[i].copy(),
                                 int(ev[i])))
+            if dispatch_t > r.deadline + self.deadline_grace_s:
+                tel.inc("deadline_missed")
             tel.record_latency("queue_wait", dispatch_t - r.submit_t)
             tel.record_latency("request_e2e", done_t - r.submit_t)
+            if r.trace is not None:
+                self._tracer.add_span(r.trace, "queue_wait",
+                                      r.submit_t, dispatch_t)
+                launch_span = self._tracer.add_span(
+                    r.trace, "launch", dispatch_t, t1, width=width,
+                    occupancy=n, batch_seq=seq, staged=staged)
+                # stages ran once for the batch: their spans attach to
+                # the batch leader's launch span only
+                if r is leader and staged:
+                    attach_stage_spans(self._tracer, r.trace,
+                                       launch_span, triples)
             # retire from the in-flight map BEFORE fulfilling: once the
             # followers snapshot is taken no new duplicate can attach
             # to this slot (they re-enter as cache hits / new primaries)
             followers = self._finish_inflight(r)
-            for f, t_sub in followers:
+            for f, t_sub, ftr in followers:
                 # a follower attached mid-execution waited 0 in queue
                 tel.record_latency("queue_wait",
                                    max(0.0, dispatch_t - t_sub))
@@ -341,9 +513,20 @@ class AsyncSeismicServer:
                     ids=ids[i].copy(), scores=scores[i].copy(),
                     docs_evaluated=int(ev[i]), coalesced=True,
                     latency_s=done_t - t_sub, occupancy=n))
+                if ftr is not None:
+                    self._tracer.add_span(ftr, "queue_wait",
+                                          max(t_sub, r.submit_t),
+                                          dispatch_t)
+                    self._tracer.add_span(ftr, "launch", dispatch_t, t1,
+                                          width=width, occupancy=n,
+                                          batch_seq=seq, staged=staged)
+                    self._tracer.end_trace(ftr, done_t, status="done")
             r.future._set(ServeResult(
                 ids=ids[i], scores=scores[i], docs_evaluated=int(ev[i]),
                 cached=False, latency_s=done_t - r.submit_t, occupancy=n))
+            if r.trace is not None:
+                self._tracer.end_trace(r.trace, done_t, status="done",
+                                       docs_evaluated=int(ev[i]))
             served += 1 + len(followers)
         tel.inc("served", served)
 

@@ -79,7 +79,7 @@ class SeismicServer:
 
     def __init__(self, index: SeismicIndex, params: SearchParams,
                  max_batch: int = 256, *,
-                 telemetry: ServerTelemetry | None = None):
+                 telemetry: ServerTelemetry | None = None, obs=None):
         from repro.graph.refine import validate_refine_params
         from repro.tune.policy import validate_tuned_index
         validate_refine_params(index, params)   # fail before first launch
@@ -87,7 +87,51 @@ class SeismicServer:
         self.index = index
         self.params = params
         self.max_batch = max_batch
+        if telemetry is None and obs is not None:
+            telemetry = ServerTelemetry(registry=obs.registry)
         self.telemetry = telemetry
+        self.obs = obs
+        self._fns = None
+        self._device = None
+        if obs is not None and obs.stage_sample_every > 0:
+            from repro.obs.device import DeviceAccounting
+            from repro.retrieval.pipeline import stage_fns
+            self._fns = stage_fns(index, params)
+            self._device = DeviceAccounting(index, params,
+                                            self.telemetry.registry)
+        self._launch_seq = 0
+
+    def _search_staged(self, chunk: PaddedSparse, n_real: int):
+        """One sampled chunk through the staged pipeline: emits a
+        ``launch`` trace with per-stage (and per-refine-round) child
+        spans and feeds device accounting. Bit-exact with the fused
+        path."""
+        from repro.retrieval.pipeline import run_pipeline_staged
+        from repro.serve.batcher import attach_stage_spans
+        tracer = self.obs.tracer
+        triples: list[tuple[str, float, float]] = []
+        probed: dict[str, object] = {}
+        tel = self.telemetry
+        t0 = time.monotonic()
+        out = run_pipeline_staged(
+            self.index, chunk.coords, chunk.vals, self.params,
+            fns=self._fns,
+            record=(lambda s, dt: tel.record_latency(f"stage_{s}", dt))
+            if tel is not None else None,
+            span_cb=lambda name, a, b: triples.append((name, a, b)),
+            split_refine=True, probe=probed.__setitem__)
+        t1 = time.monotonic()
+        if tracer is not None:
+            tr = tracer.start_trace("launch", t0,
+                                    width=chunk.coords.shape[0],
+                                    occupancy=n_real, sync=True)
+            attach_stage_spans(tracer, tr, tr.root, triples)
+            tracer.end_trace(tr, t1, status="done")
+        if self._device is not None:
+            stage_seconds = {name: b - a for name, a, b in triples}
+            self._device.observe(stage_seconds, chunk.coords.shape[0],
+                                 cand=probed.get("cand"))
+        return out, t1 - t0
 
     def search(self, queries: PaddedSparse) -> RetrievalResult:
         q = queries
@@ -106,6 +150,18 @@ class SeismicServer:
         for s in range(0, q.coords.shape[0], self.max_batch):
             chunk = PaddedSparse(q.coords[s:s + self.max_batch],
                                  q.vals[s:s + self.max_batch], q.dim)
+            seq = self._launch_seq
+            self._launch_seq += 1
+            if self._fns is not None and self.obs.sample_stages(seq):
+                out, dt = self._search_staged(chunk,
+                                              min(self.max_batch, n - s))
+                if self.telemetry is not None:
+                    self.telemetry.record_latency("launch", dt)
+                    self.telemetry.inc("batches")
+                    self.telemetry.observe_occupancy(
+                        min(self.max_batch, n - s))
+                outs.append(out)
+                continue
             if self.telemetry is None:      # async dispatch, convert at end
                 outs.append(search_pipeline(self.index, chunk, self.params))
                 continue

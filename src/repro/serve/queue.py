@@ -68,12 +68,16 @@ class Request:
     deadline: float             # absolute monotonic dispatch deadline
     future: ServeFuture
     cache_key: bytes | None = None
-    # in-flight coalescing: (future, submit_t) of identical-fingerprint
-    # requests submitted while this one was queued/executing —
-    # fulfilled from this request's launch slot with their OWN submit
-    # times, so per-request latency stays honest (appended only under
-    # the batcher's coalesce lock)
-    followers: list[tuple[ServeFuture, float]] = \
+    # per-request trace (repro.obs.trace.Trace) minted at submit when
+    # the server carries an Observability bundle; rides the queue so
+    # the batcher can close the span tree at fulfil time
+    trace: object | None = None
+    # in-flight coalescing: (future, submit_t, trace) of identical-
+    # fingerprint requests submitted while this one was
+    # queued/executing — fulfilled from this request's launch slot
+    # with their OWN submit times, so per-request latency stays honest
+    # (appended only under the batcher's coalesce lock)
+    followers: list[tuple[ServeFuture, float, object | None]] = \
         dataclasses.field(default_factory=list)
 
 

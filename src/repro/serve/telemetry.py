@@ -1,71 +1,39 @@
-"""Serving telemetry: latency histograms, counters, batch occupancy,
-queue depth — exported as plain dicts so benchmarks and load tests can
-consume them without any observability dependency.
+"""Serving telemetry — now a thin compatibility facade over the
+unified metrics registry (:mod:`repro.obs.registry`).
 
-All record paths are lock-protected (the batcher worker thread and the
-submitting threads write concurrently) and cheap: a histogram record is
-one bisect into fixed log-spaced bucket edges.
+``ServerTelemetry`` keeps its PR-2 API (``record_latency`` / ``inc`` /
+``observe_occupancy`` / ``observe_queue_depth`` / ``export``) and its
+plain-dict export shape, but every record lands in a
+``MetricsRegistry`` as a labeled metric family:
+
+    record_latency(name, s)   -> seismic_latency_seconds{span=name}
+    inc(name, n)              -> seismic_events_total{event=name}
+    observe_occupancy(n)      -> seismic_launch_occupancy_total{n_real=n}
+    observe_queue_depth(d)    -> seismic_queue_depth / _queue_depth_max
+
+so the same numbers the load benchmarks always consumed as dicts are
+now ALSO scrapeable through the Prometheus / JSONL exporters, with no
+double bookkeeping. Pass a shared registry (e.g. from an
+``Observability`` bundle) to merge server telemetry with the tracing
+and device-accounting metrics; by default each facade owns a fresh
+one.
+
+``Histogram`` re-exports the registry histogram: log-spaced buckets
+with quantile estimates that are monotone in ``p`` and always inside
+``[vmin, vmax]`` (a single cumulative-count walk shared with every
+registry histogram — the PR-2 first-bucket geometric-mean estimate and
+its odd ``vmin``/``vmax`` clamping are gone).
 """
 from __future__ import annotations
 
-import bisect
-import math
-import threading
+from repro.obs.registry import Histogram, MetricsRegistry
 
-
-class Histogram:
-    """Fixed log-spaced-bucket histogram (default 1us .. 1000s).
-
-    Percentiles are bucket-resolution estimates: the geometric mean of
-    the bucket the p-quantile falls into. Good to ~15% with the default
-    64 buckets over 9 decades — plenty for latency reporting.
-    """
-
-    def __init__(self, lo: float = 1e-6, hi: float = 1e3,
-                 n_buckets: int = 64):
-        self.lo, self.hi = lo, hi
-        ratio = (hi / lo) ** (1.0 / n_buckets)
-        self.edges = [lo * ratio ** i for i in range(1, n_buckets + 1)]
-        self.counts = [0] * (n_buckets + 1)   # last bucket = overflow
-        self.n = 0
-        self.total = 0.0
-        self.vmin = math.inf
-        self.vmax = -math.inf
-
-    def record(self, x: float) -> None:
-        self.counts[bisect.bisect_left(self.edges, x)] += 1
-        self.n += 1
-        self.total += x
-        self.vmin = min(self.vmin, x)
-        self.vmax = max(self.vmax, x)
-
-    def percentile(self, p: float) -> float:
-        """p in [0, 1] -> bucket-resolution quantile estimate."""
-        if self.n == 0:
-            return 0.0
-        target = p * self.n
-        cum = 0
-        for i, c in enumerate(self.counts):
-            cum += c
-            if cum >= target:
-                left = self.lo if i == 0 else self.edges[i - 1]
-                right = self.edges[min(i, len(self.edges) - 1)]
-                return min(max(math.sqrt(left * right), self.vmin),
-                           self.vmax)
-        return self.vmax
-
-    def summary(self) -> dict:
-        if self.n == 0:
-            return {"count": 0, "mean": 0.0, "p50": 0.0, "p95": 0.0,
-                    "p99": 0.0, "min": 0.0, "max": 0.0}
-        return {"count": self.n, "mean": self.total / self.n,
-                "p50": self.percentile(0.50), "p95": self.percentile(0.95),
-                "p99": self.percentile(0.99), "min": self.vmin,
-                "max": self.vmax}
+__all__ = ["Histogram", "ServerTelemetry"]
 
 
 class ServerTelemetry:
-    """Thread-safe metric sink shared by the queue, batcher, and cache.
+    """Thread-safe metric sink shared by the queue, batcher, and cache
+    (compatibility facade over :class:`repro.obs.MetricsRegistry`).
 
     Latency histograms are keyed by name (``request_e2e``,
     ``queue_wait``, ``launch``, and ``stage_<name>`` when the server
@@ -73,50 +41,68 @@ class ServerTelemetry:
     admission events; occupancy is a per-launch integer histogram.
     """
 
-    def __init__(self):
-        self._lock = threading.Lock()
-        self._hists: dict[str, Histogram] = {}
-        self._counters: dict[str, int] = {}
-        self._occupancy: dict[int, int] = {}
-        self._depth_max = 0
-        self._depth_last = 0
+    def __init__(self, registry: MetricsRegistry | None = None):
+        self.registry = registry if registry is not None \
+            else MetricsRegistry()
+        self._lat = self.registry.histogram(
+            "seismic_latency_seconds",
+            "Serving latency by span (request_e2e / queue_wait / "
+            "launch / stage_*)", ("span",))
+        self._events = self.registry.counter(
+            "seismic_events_total",
+            "Serving events (requests / batches / served / rejected / "
+            "shed / coalesced / launch_width_* / ...)", ("event",))
+        self._occ = self.registry.counter(
+            "seismic_launch_occupancy_total",
+            "Launches by real (un-padded) request count", ("n_real",))
+        self._depth = self.registry.gauge(
+            "seismic_queue_depth", "Admission queue depth at last "
+            "observation").labels()
+        self._depth_max = self.registry.gauge(
+            "seismic_queue_depth_max", "Max observed admission queue "
+            "depth").labels()
 
     def record_latency(self, name: str, seconds: float) -> None:
-        with self._lock:
-            h = self._hists.get(name)
-            if h is None:
-                h = self._hists[name] = Histogram()
-            h.record(seconds)
+        self._lat.labels(name).record(seconds)
 
     def inc(self, name: str, n: int = 1) -> None:
-        with self._lock:
-            self._counters[name] = self._counters.get(name, 0) + n
+        self._events.labels(name).inc(n)
 
     def observe_occupancy(self, n_real: int) -> None:
-        with self._lock:
-            self._occupancy[n_real] = self._occupancy.get(n_real, 0) + 1
+        self._occ.labels(str(n_real)).inc()
 
     def observe_queue_depth(self, depth: int) -> None:
-        with self._lock:
-            self._depth_last = depth
-            self._depth_max = max(self._depth_max, depth)
+        self._depth.set(depth)
+        self._depth_max.set(max(self._depth_max.value, depth))
 
     def export(self) -> dict:
-        """Plain-dict snapshot (JSON-serializable, no live references)."""
-        with self._lock:
-            launches = sum(self._occupancy.values())
-            served = sum(k * v for k, v in self._occupancy.items())
-            return {
-                "counters": dict(self._counters),
-                "latency_s": {k: h.summary()
-                              for k, h in sorted(self._hists.items())},
-                "batch": {
-                    "launches": launches,
-                    "mean_occupancy":
-                        served / launches if launches else 0.0,
-                    "occupancy_counts": {str(k): v for k, v in
-                                         sorted(self._occupancy.items())},
-                },
-                "queue": {"depth_max": self._depth_max,
-                          "depth_last": self._depth_last},
-            }
+        """Plain-dict snapshot (JSON-serializable, no live references).
+
+        Shape unchanged since PR 2 — benchmarks, tests, and the
+        examples keep consuming it; the registry is the superset
+        surface for exporters.
+        """
+        counters = {}
+        for (event,), child in self._events.samples():
+            counters[event] = child.value
+        hists = {}
+        for (span,), child in self._lat.samples():
+            hists[span] = child.summary()
+        occupancy = {}
+        for (n_real,), child in self._occ.samples():
+            occupancy[int(n_real)] = child.value
+        launches = sum(occupancy.values())
+        served = sum(k * v for k, v in occupancy.items())
+        return {
+            "counters": counters,
+            "latency_s": {k: hists[k] for k in sorted(hists)},
+            "batch": {
+                "launches": launches,
+                "mean_occupancy":
+                    served / launches if launches else 0.0,
+                "occupancy_counts": {str(k): v for k, v in
+                                     sorted(occupancy.items())},
+            },
+            "queue": {"depth_max": self._depth_max.value,
+                      "depth_last": self._depth.value},
+        }

@@ -1,0 +1,277 @@
+"""Observability primitives (repro.obs): the histogram quantile
+estimator, the labeled metrics registry, Prometheus text round-trip,
+the HTTP/JSONL exporters, and the trace ring buffer.
+
+Runs under the ``deterministic`` hypothesis profile; the monotone-
+percentile property test skips cleanly when hypothesis is absent
+(deterministic sweeps in this module cover the same invariants).
+"""
+import json
+import threading
+import urllib.error
+import urllib.request
+
+import pytest
+
+from helpers import given, needs_hypothesis, settings, st
+from repro.obs import (MetricsRegistry, Tracer, chrome_trace,
+                       chrome_trace_json, parse_prometheus_text,
+                       prometheus_text, start_exporter, validate_trace,
+                       write_jsonl_snapshot)
+from repro.obs.registry import Histogram
+
+
+# ------------------------------------------------- histogram estimator
+
+def test_histogram_percentile_monotone_and_bounded():
+    """The satellite fix: estimates monotone non-decreasing in p and
+    always inside [vmin, vmax], with exact endpoints."""
+    h = Histogram()
+    for x in [3e-6, 5e-5, 1e-4, 1e-4, 2e-3, 0.7, 0.7, 0.7, 12.0, 900.0]:
+        h.record(x)
+    ps = [i / 200 for i in range(201)]
+    qs = h.percentiles(ps)
+    assert qs == sorted(qs)                      # monotone in p
+    assert all(h.vmin <= q <= h.vmax for q in qs)
+    assert h.percentile(0.0) == h.vmin
+    assert h.percentile(1.0) == h.vmax
+    # out-of-range p clamps instead of extrapolating
+    assert h.percentile(-0.5) == h.vmin
+    assert h.percentile(1.5) == h.vmax
+
+
+def test_histogram_single_observation_and_empty():
+    h = Histogram()
+    assert h.percentile(0.5) == 0.0              # empty -> 0, no crash
+    h.record(0.042)
+    for p in (0.0, 0.3, 0.5, 0.99, 1.0):
+        assert h.percentile(p) == pytest.approx(0.042)
+
+
+def test_histogram_overflow_bucket_bounded():
+    """Observations past the top edge land in the overflow bucket; the
+    estimate must still be clamped to the real max, not the edge."""
+    h = Histogram(lo=1e-6, hi=1.0, n_buckets=8)
+    h.record(50.0)
+    h.record(70.0)
+    assert h.percentile(0.5) <= 70.0
+    assert h.percentile(1.0) == 70.0
+
+
+def test_histogram_percentiles_shared_walk_matches_single():
+    h = Histogram()
+    for i in range(1, 400):
+        h.record(i * 1.7e-4)
+    ps = (0.1, 0.5, 0.9, 0.99)
+    assert h.percentiles(ps) == [h.percentile(p) for p in ps]
+
+
+@needs_hypothesis
+@settings(max_examples=60, deadline=None)
+@given(xs=st.lists(st.floats(min_value=1e-7, max_value=5e3,
+                             allow_nan=False, allow_infinity=False),
+                   min_size=1, max_size=200),
+       ps=st.lists(st.floats(min_value=0.0, max_value=1.0),
+                   min_size=2, max_size=32))
+def test_histogram_percentile_property(xs, ps):
+    h = Histogram()
+    for x in xs:
+        h.record(x)
+    ps = sorted(ps)
+    qs = h.percentiles(ps)
+    assert qs == sorted(qs)
+    assert all(h.vmin <= q <= h.vmax for q in qs)
+
+
+# ------------------------------------------------------------ registry
+
+def test_registry_idempotent_and_conflicts():
+    reg = MetricsRegistry()
+    c = reg.counter("x_total", "help", labels=("event",))
+    assert reg.counter("x_total", labels=("event",)) is c
+    with pytest.raises(ValueError):              # kind conflict
+        reg.gauge("x_total", labels=("event",))
+    with pytest.raises(ValueError):              # label-schema conflict
+        reg.counter("x_total", labels=("other",))
+    with pytest.raises(ValueError):
+        reg.counter("bad name")
+    with pytest.raises(ValueError):
+        reg.counter("ok_total", labels=("bad-label",))
+    with pytest.raises(ValueError):
+        c.labels("a", "b")                       # wrong label arity
+    with pytest.raises(ValueError):
+        c.labels("a").inc(-1)                    # counters only go up
+
+
+def test_registry_thread_safety():
+    reg = MetricsRegistry()
+    n_threads, n_iter = 8, 500
+
+    def work(tid):
+        for i in range(n_iter):
+            reg.counter("hits_total", labels=("t",)).labels(tid).inc()
+            reg.histogram("lat_seconds").labels().record(1e-3 * (i + 1))
+
+    threads = [threading.Thread(target=work, args=(t,))
+               for t in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    fam = reg.get("hits_total")
+    assert sum(c.value for _, c in fam.samples()) == n_threads * n_iter
+    assert reg.histogram("lat_seconds").labels().n == n_threads * n_iter
+
+
+def test_gauge_callback_failure_drops_sample_not_scrape():
+    reg = MetricsRegistry()
+    reg.gauge("ok").labels().set(2.5)
+    reg.gauge("broken").labels().set_fn(lambda: 1 / 0)
+    snap = reg.snapshot()
+    assert snap["ok"]["samples"][0]["value"] == 2.5
+    assert snap["broken"]["samples"] == []       # dropped, no raise
+    text = prometheus_text(reg)
+    assert "ok 2.5" in text
+    assert "\nbroken " not in text
+
+
+# ----------------------------------------------- exporters round-trip
+
+def _demo_registry():
+    reg = MetricsRegistry()
+    ev = reg.counter("seismic_events_total", "lifecycle", ("event",))
+    ev.labels("served").inc(7)
+    ev.labels('quo"te\nnl').inc(1)               # escaping round-trips
+    reg.gauge("seismic_cache_hit_rate", "hits/(hits+misses)") \
+        .labels().set(0.25)
+    lat = reg.histogram("seismic_latency_seconds", "spans", ("span",))
+    for ms in (1, 2, 5, 10):
+        lat.labels("request_e2e").record(ms * 1e-3)
+    return reg
+
+
+def test_prometheus_text_round_trip():
+    reg = _demo_registry()
+    parsed = parse_prometheus_text(prometheus_text(reg))
+    assert parsed["seismic_events_total"]["type"] == "counter"
+    samples = parsed["seismic_events_total"]["samples"]
+    assert samples[("seismic_events_total",
+                    (("event", "served"),))] == 7.0
+    assert samples[("seismic_events_total",
+                    (("event", 'quo"te\nnl'),))] == 1.0
+    assert parsed["seismic_cache_hit_rate"]["samples"][
+        ("seismic_cache_hit_rate", ())] == 0.25
+    hist = parsed["seismic_latency_seconds"]
+    assert hist["type"] == "histogram"
+    assert hist["samples"][("seismic_latency_seconds_count",
+                            (("span", "request_e2e"),))] == 4.0
+    # cumulative buckets: the +Inf bucket equals the count
+    assert hist["samples"][("seismic_latency_seconds_bucket",
+                            (("le", "+Inf"),
+                             ("span", "request_e2e"),))] == 4.0
+
+
+def test_jsonl_snapshot(tmp_path):
+    reg = _demo_registry()
+    path = str(tmp_path / "obs.jsonl")
+    rec = write_jsonl_snapshot(reg, path, extra={"tag": "t1"})
+    write_jsonl_snapshot(reg, path)
+    lines = [json.loads(l) for l in open(path, encoding="utf-8")]
+    assert len(lines) == 2                       # appends, not truncates
+    assert lines[0]["tag"] == "t1"
+    assert lines[0]["metrics"] == rec["metrics"]
+    served = [s for s in lines[1]["metrics"]["seismic_events_total"]
+              ["samples"] if s["labels"] == {"event": "served"}]
+    assert served[0]["value"] == 7
+
+
+def test_http_endpoint_routes():
+    reg = _demo_registry()
+    tracer = Tracer()
+    tr = tracer.start_trace("request", 0.0)
+    tracer.add_span(tr, "launch", 0.0, 1.0)
+    tracer.end_trace(tr, 1.0, status="done")
+    with start_exporter(reg, tracer) as exp:
+        with urllib.request.urlopen(exp.url + "/metrics") as r:
+            assert "version=0.0.4" in r.headers["Content-Type"]
+            text = r.read().decode()
+        assert parse_prometheus_text(text)["seismic_events_total"]
+        with urllib.request.urlopen(exp.url + "/snapshot.json") as r:
+            snap = json.load(r)
+        assert snap["seismic_cache_hit_rate"]["samples"][0]["value"] \
+            == 0.25
+        with urllib.request.urlopen(exp.url + "/traces") as r:
+            chrome = json.load(r)
+        assert {e["name"] for e in chrome["traceEvents"]} \
+            == {"request", "launch"}
+        with pytest.raises(urllib.error.HTTPError):
+            urllib.request.urlopen(exp.url + "/nope")
+
+
+# ------------------------------------------------------------- tracing
+
+def test_trace_ring_bounded_and_dropped_counted():
+    tracer = Tracer(capacity=4)
+    for i in range(10):
+        tr = tracer.start_trace("request", float(i))
+        tracer.end_trace(tr, float(i) + 0.5)
+    assert len(tracer) == 4
+    assert tracer.dropped == 6
+    kept = tracer.finished()
+    assert [t.root.t0 for t in kept] == [6.0, 7.0, 8.0, 9.0]  # oldest out
+    assert tracer.drain() == kept
+    assert len(tracer) == 0
+
+
+def test_chrome_trace_export_and_args():
+    tracer = Tracer()
+    tr = tracer.start_trace("request", 1.0)
+    sp = tracer.add_span(tr, "launch", 1.1, 1.4, width=8)
+    tracer.add_span(tr, "stage_router", 1.15, 1.2, parent=sp)
+    tracer.end_trace(tr, 1.5, status="done")
+    chrome = chrome_trace([tr])
+    json.loads(chrome_trace_json([tr]))          # valid JSON
+    ev = {e["name"]: e for e in chrome["traceEvents"]}
+    assert ev["launch"]["ph"] == "X"
+    assert ev["launch"]["ts"] == pytest.approx(1.1e6)   # microseconds
+    assert ev["launch"]["dur"] == pytest.approx(0.3e6)
+    assert ev["launch"]["args"]["width"] == 8
+    # the tree survives the flat event format via args ids
+    assert ev["stage_router"]["args"]["parent_id"] \
+        == ev["launch"]["args"]["span_id"]
+    assert ev["launch"]["args"]["parent_id"] \
+        == ev["request"]["args"]["span_id"]
+
+
+def test_validate_trace_violations():
+    tracer = Tracer()
+    ok = tracer.start_trace("request", 0.0)
+    sp = tracer.add_span(ok, "launch", 0.1, 0.4)
+    tracer.add_span(ok, "stage_prep", 0.15, 0.2, parent=sp)
+    tracer.end_trace(ok, 0.5)
+    validate_trace(ok)
+
+    open_child = tracer.start_trace("request", 0.0)
+    tracer.add_span(open_child, "launch", 0.1)   # never closed
+    tracer.end_trace(open_child, 0.5)
+    with pytest.raises(ValueError, match="never closed"):
+        validate_trace(open_child)
+
+    orphan = tracer.start_trace("request", 0.0)
+    bad = tracer.add_span(orphan, "launch", 0.1, 0.2)
+    bad.parent_id = 10 ** 9                       # dangling parent id
+    tracer.end_trace(orphan, 0.5)
+    with pytest.raises(ValueError, match="not in trace"):
+        validate_trace(orphan)
+
+    outside = tracer.start_trace("request", 0.0)
+    tracer.add_span(outside, "launch", 0.1, 9.0)  # past root close
+    tracer.end_trace(outside, 0.5)
+    with pytest.raises(ValueError, match="outside parent"):
+        validate_trace(outside)
+
+    backwards = tracer.start_trace("request", 0.0)
+    tracer.add_span(backwards, "launch", 0.3, 0.1)
+    tracer.end_trace(backwards, 0.5)
+    with pytest.raises(ValueError, match="ends before"):
+        validate_trace(backwards)
