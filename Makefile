@@ -1,7 +1,7 @@
 PY ?= python
 
-.PHONY: test test-fast bench bench-serving bench-graph bench-tune \
-	bench-kernels bench-obs dev
+.PHONY: test test-fast bench bench-serving bench-replica bench-graph \
+	bench-tune bench-kernels bench-obs dev
 
 dev:
 	$(PY) -m pip install -r requirements-dev.txt
@@ -24,6 +24,10 @@ bench:
 # serving-load smoke: tiny collection, async vs sync QPS (~3s)
 bench-serving:
 	PYTHONPATH=src $(PY) -m benchmarks.serving_load --smoke
+
+# replica smoke: 1->4 replica QPS scaling + slow-replica p99 gates
+bench-replica:
+	PYTHONPATH=src $(PY) -m benchmarks.serving_load --smoke --replica
 
 # graph-refinement smoke: recall lift + degree-0 bit-exactness gates
 bench-graph:

@@ -18,11 +18,25 @@ is equal by construction — both run the identical jitted pipeline):
 Reported per policy: QPS, recall@10, and for the async server p50 /
 p95 / p99 request latency plus mean batch occupancy (from telemetry).
 
+A third section exercises ``ReplicaSeismicServer`` (mirror topology)
+with an injected per-replica device delay so batch cost is known and
+identical everywhere:
+
+  replica scaling     closed batch of requests, makespan QPS at 1 vs
+                      4 replicas; ``gate_replica_scaling`` requires
+                      >= 2.5x (near-linear minus dispatch overhead)
+  slow replica        4 replicas, one 5x slower; the stage-timing
+                      balancer steers load away, and
+                      ``gate_replica_degradation`` requires p99 with
+                      the slow replica <= 3x the all-healthy p99
+
     PYTHONPATH=src python -m benchmarks.serving_load [--smoke]
+                                                     [--replica]
 
 ``--smoke`` (also used by CI and ``make bench-serving``) shrinks the
 collection and runs one policy so the whole module finishes in a few
-seconds.
+seconds; ``--replica`` runs only the replica section (see
+``make bench-replica``).
 """
 from __future__ import annotations
 
@@ -36,7 +50,8 @@ from repro.core import SeismicConfig, build_index
 from repro.core.baselines import exact_search
 from repro.data import SyntheticSparseConfig, make_collection
 from repro.retrieval import SearchParams
-from repro.serve import AsyncSeismicServer, SeismicServer
+from repro.serve import (AsyncSeismicServer, ReplicaSeismicServer,
+                         SeismicServer)
 from repro.sparse.ops import PaddedSparse
 
 POLICIES = ("budget", "adaptive", "global_threshold")
@@ -105,6 +120,98 @@ def _async_open_loop(idx, queries, eids, p, max_batch, n_req, rate,
     return n_req / dt, recall, lat, tel["batch"]["mean_occupancy"]
 
 
+def _replica_server(idx, queries, p, max_batch, n_req, *, n_replicas,
+                    delays, deadline_s):
+    """Mirror-topology replica server with deterministic injected
+    per-replica device cost; caching/coalescing off so every request
+    is real work."""
+    return ReplicaSeismicServer(
+        idx, p, n_replicas=n_replicas, mode="mirror",
+        replica_delay_s=delays, max_batch=max_batch,
+        query_nnz=queries.nnz_max, deadline_s=deadline_s,
+        queue_bound=max(2 * n_req, 64), cache_size=0, coalesce=False,
+        admission="reject")
+
+
+def _replica_closed_batch(idx, queries, eids, p, max_batch, n_req,
+                          n_replicas, delay):
+    """Makespan of a closed batch of ``n_req`` requests, all queued
+    up-front: with the per-batch delay dominating, QPS scales with the
+    number of replicas draining the queue."""
+    server = _replica_server(idx, queries, p, max_batch, n_req,
+                             n_replicas=n_replicas,
+                             delays=delay, deadline_s=0.002)
+    qn = queries.n
+    coords, vals = np.asarray(queries.coords), np.asarray(queries.vals)
+    with server:
+        t0 = time.perf_counter()
+        futs = [server.submit(coords[i % qn], vals[i % qn])
+                for i in range(n_req)]
+        for f in futs:
+            f.wait()
+        dt = time.perf_counter() - t0
+    ids = np.stack([f.result().ids for f in futs])
+    recall = mean_recall(ids, eids[np.arange(n_req) % qn])
+    return n_req / dt, recall
+
+
+def _replica_paced_p99(idx, queries, p, max_batch, n_req, delays):
+    """p99 request latency under paced arrivals on 4 replicas. A prime
+    burst first: balancer cost records only land when launches finish,
+    so the EWMA must be warm before the measured window."""
+    n_rep = len(delays)
+    server = _replica_server(idx, queries, p, max_batch, n_req,
+                             n_replicas=n_rep, delays=delays,
+                             deadline_s=0.015)
+    qn = queries.n
+    coords, vals = np.asarray(queries.coords), np.asarray(queries.vals)
+    with server:
+        prime = [server.submit(coords[i % qn], vals[i % qn])
+                 for i in range(4 * max_batch)]
+        for f in prime:
+            f.wait()
+        futs = []
+        for i in range(n_req):
+            time.sleep(0.002)
+            futs.append(server.submit(coords[i % qn], vals[i % qn]))
+        for f in futs:
+            f.wait()
+    lat = np.sort([f.result().latency_s for f in futs])
+    return float(lat[int(round(0.99 * (len(lat) - 1)))])
+
+
+def run_replica(smoke: bool = False):
+    """Replica-scaling + slow-replica-degradation rows (both gated).
+    Always on the smoke fixture: these rows measure serving topology,
+    not corpus-dependent pipeline cost, and the injected delay keeps
+    per-batch work identical across replica counts."""
+    idx, queries, eids = _smoke_fixture()
+    p = SearchParams(policy="adaptive", k=10, cut=8, block_budget=8)
+    max_batch, n_req, delay = 8, 96 if smoke else 192, 0.008
+
+    qps1, _ = _replica_closed_batch(idx, queries, eids, p, max_batch,
+                                    n_req, 1, delay)
+    qps4, rec = _replica_closed_batch(idx, queries, eids, p, max_batch,
+                                      n_req, 4, delay)
+    speedup = qps4 / qps1
+    yield row("serve_replica_scaling", 1e6 / qps4,
+              qps_1=f"{qps1:.3g}", qps_4=f"{qps4:.3g}",
+              recall10=f"{rec:.3f}", speedup=f"{speedup:.2f}x",
+              gate_replica_scaling=bool(speedup >= 2.5))
+
+    base = 0.006
+    p99_ok = _replica_paced_p99(idx, queries, p, max_batch, n_req,
+                                [base] * 4)
+    p99_slow = _replica_paced_p99(idx, queries, p, max_batch, n_req,
+                                  [5 * base] + [base] * 3)
+    ratio = p99_slow / p99_ok
+    yield row("serve_replica_degradation", p99_slow * 1e6,
+              p99_healthy_ms=f"{p99_ok*1e3:.2f}",
+              p99_slow_ms=f"{p99_slow*1e3:.2f}",
+              ratio=f"{ratio:.2f}x",
+              gate_replica_degradation=bool(ratio <= 3.0))
+
+
 def run(smoke: bool = False):
     if smoke:
         idx, queries, eids = _smoke_fixture()
@@ -138,13 +245,19 @@ def run(smoke: bool = False):
                   p99_ms=f"{lat['p99']*1e3:.2f}",
                   speedup=f"{qps / sync_qps:.2f}x")
 
+    yield from run_replica(smoke=smoke)
+
 
 if __name__ == "__main__":
     import argparse
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="tiny collection, one policy (CI smoke)")
+    ap.add_argument("--replica", action="store_true",
+                    help="only the replica scaling/degradation rows")
     args = ap.parse_args()
     print("name,us_per_call,derived")
-    for line in run(smoke=args.smoke):
+    gen = (run_replica(smoke=args.smoke) if args.replica
+           else run(smoke=args.smoke))
+    for line in gen:
         print(line)

@@ -97,6 +97,54 @@ def async_demo(queries, index):
           f"({tel['cache']['hits']} hits)")
 
 
+def replica_demo(docs, queries, index):
+    """Replica-parallel serving behind the one request queue: a
+    mirrored fleet with one deliberately slow replica (the stage-timing
+    balancer steers load away from it), then the same corpus split over
+    doc shards with per-shard top-k merged under the pad-row mask."""
+    from repro.core.distributed import build_sharded_index
+    from repro.serve import ReplicaSeismicServer
+
+    print("== ReplicaSeismicServer: replica-parallel serving ==")
+    p = SearchParams(k=10, cut=10, block_budget=16, policy="adaptive")
+    coords = np.asarray(queries.coords)
+    vals = np.asarray(queries.vals)
+    server = ReplicaSeismicServer(
+        index, p, n_replicas=3, mode="mirror",
+        replica_delay_s=[0.012, 0.003, 0.003],   # replica 0 is 4x slower
+        max_batch=16, query_nnz=queries.nnz_max, deadline_s=0.004,
+        queue_bound=1024, cache_size=0, coalesce=False)
+    with server:
+        futs = []
+        for i in range(240):
+            futs.append(server.submit(coords[i % queries.n],
+                                      vals[i % queries.n]))
+            time.sleep(0.001)
+        for f in futs:
+            f.wait()
+    snap = server.balancer.snapshot()
+    print("   mirror x3, replica 0 slowed 4x:")
+    print("   dispatch share = "
+          + str([round(s, 2) for s in snap["dispatch_share"]])
+          + "  cost EWMA ms = "
+          + str([round(c * 1e3, 1) for c in snap["cost_ewma_s"]]))
+
+    stacked = build_sharded_index(docs, index.config, n_shards=4,
+                                  list_chunk=32)
+    sharded = ReplicaSeismicServer(
+        stacked, p, mode="shard", max_batch=16,
+        query_nnz=queries.nnz_max, deadline_s=0.004, cache_size=0)
+    sub = queries[:64]
+    with sharded:
+        futs = [sharded.submit(coords[i], vals[i]) for i in range(64)]
+        ids = np.stack([f.result(30.0).ids for f in futs])
+    _, exact_ids = exact_search(docs, sub, 10)
+    rec = np.mean([recall_at_k(ids[q], np.asarray(exact_ids[q]))
+                   for q in range(64)])
+    print(f"   shard x4: 64 queries served over 4 doc shards, "
+          f"merged recall@10={rec:.3f}")
+
+
 def observability_demo(queries, index):
     """Serve traced traffic with a live metrics endpoint: scrape the
     Prometheus exposition over HTTP, print a snapshot table and the
@@ -193,6 +241,7 @@ if __name__ == "__main__":
     docs, queries, index = build_demo_index()
     retrieval_demo(docs, queries, index)
     async_demo(queries, index)
+    replica_demo(docs, queries, index)
     observability_demo(queries, index)
     tuned_demo(docs, queries, index)
     decode_demo()

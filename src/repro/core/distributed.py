@@ -29,7 +29,12 @@ from repro.sparse.ops import PaddedSparse
 
 def shard_collection(docs: PaddedSparse, n_shards: int) -> PaddedSparse:
     """Pad N to a multiple of n_shards and add a leading shard axis:
-    [S, N/S, nnz]."""
+    [S, N/S, nnz].
+
+    Pad rows are all-zero docs appended at the tail of the LAST shard;
+    every merge seam over per-shard results must mask them out (see
+    ``mask_shard_topk``) — an all-zero doc that surfaces as a candidate
+    scores exactly 0.0 with an out-of-range global id."""
     n = docs.n
     per = -(-n // n_shards)
     pad = per * n_shards - n
@@ -37,6 +42,39 @@ def shard_collection(docs: PaddedSparse, n_shards: int) -> PaddedSparse:
     vals = jnp.pad(docs.vals, ((0, pad), (0, 0)))
     return PaddedSparse(coords.reshape(n_shards, per, -1),
                         vals.reshape(n_shards, per, -1), docs.dim)
+
+
+def mask_shard_topk(scores: jax.Array, ids: jax.Array, fwd: PaddedSparse,
+                    shard_offset, n_docs: int | None = None
+                    ) -> tuple[jax.Array, jax.Array]:
+    """Globalize one shard's local top-k and mask pad hits to
+    ``(-inf, -1)`` — the invariant every cross-shard merge relies on.
+
+    ``shard_collection`` zero-pads the corpus to a multiple of
+    ``n_shards``; a pad row that surfaces as a candidate (k exceeding
+    the shard's live hits, index surgery, future mutable-index paths)
+    scores exactly 0.0 and would enter the merged global top-k with an
+    out-of-range global id. Pad rows are exactly the all-zero forward
+    rows, so they are masked from ``fwd`` content (dtype-agnostic:
+    holds for the f32 and the u8-quantized plane alike); an explicit
+    live-doc bound ``n_docs`` additionally masks any globalized id at
+    or past it.
+
+    scores/ids: [Q, kk] local top-k; fwd: the shard's forward plane
+    [per_shard, nnz]; returns (scores, global ids) with dead slots at
+    (-inf, -1).
+    """
+    per_shard = fwd.coords.shape[0]
+    live_row = (fwd.vals != 0).any(axis=-1)             # [per_shard]
+    pad_hit = ~jnp.take(live_row, jnp.clip(ids, 0, per_shard - 1),
+                        axis=0)
+    gids = ids + shard_offset
+    dead = (ids < 0) | pad_hit
+    if n_docs is not None:
+        dead = dead | (gids >= n_docs)
+    scores = jnp.where(dead, -jnp.inf, scores)
+    gids = jnp.where(dead, -1, gids)
+    return scores, gids
 
 
 def build_sharded_index(docs: PaddedSparse, cfg: SeismicConfig,
@@ -52,13 +90,17 @@ def build_sharded_index(docs: PaddedSparse, cfg: SeismicConfig,
 
 
 def make_distributed_search(mesh, p: SearchParams,
-                            doc_axes=("model",), data_axis="data"):
+                            doc_axes=("model",), data_axis="data",
+                            *, n_docs: int | None = None):
     """Returns ``search(stacked_index, q_coords, q_vals) -> (scores, ids)``
     running under shard_map on ``mesh``.
 
     stacked_index leaves: [n_doc_shards, ...] sharded over ``doc_axes``.
     q_coords/q_vals: [Q, nnz] sharded over ``data_axis``.
     output: (scores [Q,k], global ids [Q,k]) sharded over ``data_axis``.
+    ``n_docs``: the LIVE corpus size (pre-padding ``docs.n``); when
+    given, any globalized id at or past it is masked before the merge
+    in addition to the content-based pad masking.
     """
     index_spec = P(doc_axes)
     q_spec = P(data_axis)
@@ -76,7 +118,11 @@ def make_distributed_search(mesh, p: SearchParams,
         shard_id = jax.lax.axis_index(doc_axes[0])
         for ax in doc_axes[1:]:
             shard_id = shard_id * jax.lax.axis_size(ax) + jax.lax.axis_index(ax)
-        gids = jnp.where(ids >= 0, ids + shard_id * per_shard, -1)
+        # mask pad-doc hits to (-inf, -1) BEFORE the all-gather: the
+        # global merge must never see a zero-padded row's 0.0 score
+        scores, gids = mask_shard_topk(scores, ids, local.fwd,
+                                       shard_id * per_shard,
+                                       n_docs=n_docs)
 
         # fan-in: gather every shard's top-k, merge
         all_s, all_g = scores, gids

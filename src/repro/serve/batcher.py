@@ -178,7 +178,10 @@ class AsyncSeismicServer:
             from repro.obs.device import DeviceAccounting
             self._device = DeviceAccounting(index, params,
                                             self.telemetry.registry)
-        self._launch_seq = 0                    # worker thread only
+        # launch counters are shared by every thread that may dispatch
+        # (one worker here; N replica workers in ReplicaSeismicServer)
+        self._stats_lock = threading.Lock()
+        self._launch_seq = 0
         self._width_stats: dict[int, list[int]] = {}   # w -> [launches,
         self._ev_sum = 0.0                             #       slots]
         self._ev_n = 0
@@ -407,14 +410,17 @@ class AsyncSeismicServer:
             return req.followers
 
     def _fail_all(self, req: Request, status: str) -> None:
-        """Fail a request's future and every coalesced follower."""
+        """Fail a request's future and every coalesced follower.
+
+        Completion is first-writer-wins (``ServeFuture._fail`` returns
+        whether this call transitioned), so a batch-wide failure after
+        a partial fulfil leaves already-``done`` futures — and their
+        already-ended traces — untouched."""
         now = time.monotonic()
         for f, _, ftr in self._finish_inflight(req):
-            f._fail(status)
-            if ftr is not None:
+            if f._fail(status) and ftr is not None:
                 self._tracer.end_trace(ftr, now, status=status)
-        req.future._fail(status)
-        if req.trace is not None:
+        if req.future._fail(status) and req.trace is not None:
             self._tracer.end_trace(req.trace, now, status=status)
 
     def _pick_width(self, n: int) -> int:
@@ -424,57 +430,116 @@ class AsyncSeismicServer:
                 return w
         return self.max_batch
 
-    def _launch(self, batch: list[Request]) -> None:
-        """One fixed-shape pipeline launch serving ``len(batch)`` rows."""
-        tel = self.telemetry
-        n = len(batch)
-        width = self._pick_width(n)
-        tel.inc(f"launch_width_{width}")
-        tel.inc("dispatched", n)
-        seq = self._launch_seq
-        self._launch_seq += 1
-        staged = self.stage_timing or (
-            self._fns is not None and self.obs is not None
-            and self.obs.sample_stages(seq))
+    def _next_seq(self) -> int:
+        with self._stats_lock:
+            seq = self._launch_seq
+            self._launch_seq += 1
+            return seq
+
+    def _pack(self, batch: list[Request],
+              width: int) -> tuple[np.ndarray, np.ndarray]:
+        """Batch rows -> fixed-shape [width, query_nnz] launch arrays."""
         coords = np.zeros((width, self.query_nnz), np.int32)
         vals = np.zeros((width, self.query_nnz), np.float32)
         for i, r in enumerate(batch):
             coords[i], vals[i] = r.coords, r.vals
-        dispatch_t = time.monotonic()
+        return coords, vals
+
+    def _execute(self, index, fns, coords: np.ndarray, vals: np.ndarray,
+                 staged: bool, delay_s: float = 0.0):
+        """One pipeline execution against ``index``; returns host arrays
+        plus wall-time bounds and (staged only) per-stage span triples.
+
+        ``delay_s`` injects artificial per-launch latency INSIDE the
+        timed window (replica benchmarks / balancer tests: the EWMA
+        must see it)."""
+        tel = self.telemetry
         triples: list[tuple[str, float, float]] = []
         probed: dict[str, object] = {}
         t0 = time.monotonic()
+        if delay_s > 0.0:
+            time.sleep(delay_s)
         if staged:
             scores, ids, ev = run_pipeline_staged(
-                self.index, jnp.asarray(coords), jnp.asarray(vals),
-                self.params, fns=self._fns,
+                index, jnp.asarray(coords), jnp.asarray(vals),
+                self.params, fns=fns,
                 record=lambda s, dt: tel.record_latency(f"stage_{s}", dt),
                 span_cb=lambda name, a, b: triples.append((name, a, b)),
                 split_refine=True, probe=probed.__setitem__)
         else:
             scores, ids, ev = jax.block_until_ready(search_pipeline(
-                self.index,
+                index,
                 PaddedSparse(jnp.asarray(coords), jnp.asarray(vals),
-                             self.index.dim),
+                             index.dim),
                 self.params))
         t1 = time.monotonic()
-        tel.record_latency("launch", t1 - t0)
+        return (np.asarray(ids), np.asarray(scores), np.asarray(ev),
+                t0, t1, triples, probed)
+
+    def _account(self, n: int, width: int, ev: np.ndarray, staged: bool,
+                 triples, probed) -> None:
+        """Post-execution telemetry shared by every dispatch path."""
+        tel = self.telemetry
         tel.inc("batches")
         tel.observe_occupancy(n)
-        ws = self._width_stats.setdefault(width, [0, 0])
-        ws[0] += 1
-        ws[1] += n
-        self._width_occ.labels(str(width)).set(ws[1] / (ws[0] * width))
+        with self._stats_lock:
+            ws = self._width_stats.setdefault(width, [0, 0])
+            ws[0] += 1
+            ws[1] += n
+            occ = ws[1] / (ws[0] * width)
+            self._ev_sum += float(ev[:n].sum())
+            self._ev_n += n
+            ev_mean = self._ev_sum / self._ev_n
+        self._width_occ.labels(str(width)).set(occ)
+        self._ev_mean.set(ev_mean)
         if staged and self._device is not None:
             stage_seconds = {name: b - a for name, a, b in triples}
             self._device.observe(stage_seconds, width,
                                  cand=probed.get("cand"))
-        ids = np.asarray(ids)
-        scores = np.asarray(scores)
-        ev = np.asarray(ev)
-        self._ev_sum += float(ev[:n].sum())
-        self._ev_n += n
-        self._ev_mean.set(self._ev_sum / self._ev_n)
+
+    def _launch(self, batch: list[Request], *, index=None, fns=None,
+                delay_s: float = 0.0, span_attrs: dict | None = None,
+                on_timing=None) -> None:
+        """One fixed-shape pipeline launch serving ``len(batch)`` rows.
+
+        The keyword hooks are the replica-server seam: ``index``/``fns``
+        select a replica's copy (default: the server's own), ``delay_s``
+        injects artificial latency, ``span_attrs`` lands extra attrs on
+        every launch span (e.g. ``replica=rid``), and ``on_timing(
+        launch_seconds, stage_seconds)`` feeds the balancer's EWMA."""
+        tel = self.telemetry
+        n = len(batch)
+        width = self._pick_width(n)
+        tel.inc(f"launch_width_{width}")
+        tel.inc("dispatched", n)
+        seq = self._next_seq()
+        staged = self.stage_timing or (
+            (fns is not None or self._fns is not None)
+            and self.obs is not None and self.obs.sample_stages(seq))
+        coords, vals = self._pack(batch, width)
+        dispatch_t = time.monotonic()
+        ids, scores, ev, t0, t1, triples, probed = self._execute(
+            self.index if index is None else index,
+            self._fns if fns is None else fns,
+            coords, vals, staged, delay_s)
+        tel.record_latency("launch", t1 - t0)
+        if on_timing is not None:
+            on_timing(t1 - t0,
+                      {name: b - a for name, a, b in triples})
+        self._account(n, width, ev, staged, triples, probed)
+        self._fulfil(batch, ids, scores, ev, dispatch_t=dispatch_t,
+                     t1=t1, width=width, seq=seq, staged=staged,
+                     triples=triples, span_attrs=span_attrs)
+
+    def _fulfil(self, batch: list[Request], ids: np.ndarray,
+                scores: np.ndarray, ev: np.ndarray, *, dispatch_t: float,
+                t1: float, width: int, seq: int, staged: bool,
+                triples=(), span_attrs: dict | None = None) -> None:
+        """Fulfil every request (and coalesced follower) of a batch from
+        the launch's result rows; closes caches, histograms, spans."""
+        tel = self.telemetry
+        n = len(batch)
+        attrs = span_attrs or {}
         done_t = time.monotonic()
         leader = batch[0]
         served = 0
@@ -494,7 +559,7 @@ class AsyncSeismicServer:
                                       r.submit_t, dispatch_t)
                 launch_span = self._tracer.add_span(
                     r.trace, "launch", dispatch_t, t1, width=width,
-                    occupancy=n, batch_seq=seq, staged=staged)
+                    occupancy=n, batch_seq=seq, staged=staged, **attrs)
                 # stages ran once for the batch: their spans attach to
                 # the batch leader's launch span only
                 if r is leader and staged:
@@ -508,23 +573,32 @@ class AsyncSeismicServer:
                 # a follower attached mid-execution waited 0 in queue
                 tel.record_latency("queue_wait",
                                    max(0.0, dispatch_t - t_sub))
-                tel.record_latency("request_e2e", done_t - t_sub)
-                f._set(ServeResult(
-                    ids=ids[i].copy(), scores=scores[i].copy(),
-                    docs_evaluated=int(ev[i]), coalesced=True,
-                    latency_s=done_t - t_sub, occupancy=n))
-                if ftr is not None:
+                tel.record_latency("request_e2e",
+                                   max(0.0, done_t - t_sub))
+                if f._set(ServeResult(
+                        ids=ids[i].copy(), scores=scores[i].copy(),
+                        docs_evaluated=int(ev[i]), coalesced=True,
+                        latency_s=max(0.0, done_t - t_sub),
+                        occupancy=n)) and ftr is not None:
+                    # a follower that attached mid-execution has
+                    # t_sub > dispatch_t: clamp its spans into
+                    # [t_sub, ...] so the tree stays valid (the
+                    # histogram above clamps; spans must too)
+                    f_disp = max(t_sub, dispatch_t)
+                    f_end = max(f_disp, t1)
                     self._tracer.add_span(ftr, "queue_wait",
-                                          max(t_sub, r.submit_t),
-                                          dispatch_t)
-                    self._tracer.add_span(ftr, "launch", dispatch_t, t1,
+                                          t_sub, f_disp)
+                    self._tracer.add_span(ftr, "launch", f_disp, f_end,
                                           width=width, occupancy=n,
-                                          batch_seq=seq, staged=staged)
-                    self._tracer.end_trace(ftr, done_t, status="done")
-            r.future._set(ServeResult(
-                ids=ids[i], scores=scores[i], docs_evaluated=int(ev[i]),
-                cached=False, latency_s=done_t - r.submit_t, occupancy=n))
-            if r.trace is not None:
+                                          batch_seq=seq, staged=staged,
+                                          **attrs)
+                    self._tracer.end_trace(ftr, max(done_t, f_end),
+                                           status="done")
+            if r.future._set(ServeResult(
+                    ids=ids[i], scores=scores[i],
+                    docs_evaluated=int(ev[i]), cached=False,
+                    latency_s=done_t - r.submit_t, occupancy=n)) \
+                    and r.trace is not None:
                 self._tracer.end_trace(r.trace, done_t, status="done",
                                        docs_evaluated=int(ev[i]))
             served += 1 + len(followers)

@@ -32,6 +32,7 @@ class ServeFuture:
 
     def __init__(self):
         self._event = threading.Event()
+        self._lock = threading.Lock()
         self._result = None
         self.status = "pending"
 
@@ -48,14 +49,30 @@ class ServeFuture:
             raise RuntimeError(f"request not served: {self.status}")
         return self._result
 
-    def _set(self, result) -> None:
-        self._result = result
-        self.status = "done"
-        self._event.set()
+    # Completion is first-writer-wins: once the event is set, the
+    # (status, result) pair is immutable. A launch that raises AFTER
+    # fulfilling part of its batch must not flip already-``done``
+    # futures to ``error`` (their result may already be consumed), and
+    # a racing shed/fail must not clobber a concurrent fulfil. Both
+    # return whether THIS call won the transition, so callers only
+    # emit completion side effects (trace end, counters) once.
 
-    def _fail(self, status: str) -> None:
-        self.status = status
-        self._event.set()
+    def _set(self, result) -> bool:
+        with self._lock:
+            if self._event.is_set():
+                return False
+            self._result = result
+            self.status = "done"
+            self._event.set()
+            return True
+
+    def _fail(self, status: str) -> bool:
+        with self._lock:
+            if self._event.is_set():
+                return False
+            self.status = status
+            self._event.set()
+            return True
 
 
 @dataclasses.dataclass

@@ -191,6 +191,51 @@ def test_coalesced_follower_trace_linkage(small_index, small_collection):
                                            "launch"}
 
 
+def test_midexecution_coalesce_spans_clamped(small_index,
+                                             small_collection,
+                                             monkeypatch):
+    """Regression: a duplicate attaching while its primary is already
+    executing has submit_t *after* the batch's dispatch_t; the follower
+    queue_wait/launch spans must be clamped to non-negative intervals
+    (pre-fix ``validate_trace`` rejected the inverted queue_wait)."""
+    import repro.serve.batcher as batcher_mod
+    idx, _ = small_index
+    obs = Observability.create(stage_sample_every=0)   # fused path
+    srv = _server(idx, obs, deadline_s=0.005)
+    c, v = _one_query(small_collection)
+    entered, release = threading.Event(), threading.Event()
+    real = batcher_mod.search_pipeline
+    first = []
+
+    def slow_pipeline(index, q, params):
+        out = real(index, q, params)
+        if not first:                 # hold the first launch open so a
+            first.append(1)           # duplicate can attach mid-flight
+            entered.set()
+            release.wait(10.0)
+        return out
+
+    with srv:                         # start (and warmup) unpatched
+        monkeypatch.setattr(batcher_mod, "search_pipeline", slow_pipeline)
+        f0 = srv.submit(c, v)
+        assert entered.wait(10.0)
+        f1 = srv.submit(c, v)         # coalesces onto the running batch
+        release.set()
+        r0, r1 = f0.result(10.0), f1.result(10.0)
+    assert not r0.coalesced and r1.coalesced
+    assert r1.latency_s >= 0.0
+    traces = obs.tracer.finished()
+    assert len(traces) == 2
+    follower = next(tr for tr in traces
+                    if tr.root.attrs.get("coalesced_into"))
+    for tr in traces:
+        validate_trace(tr)            # strict: every span has t1 >= t0
+    by = _spans_by_name(follower)
+    (qw,), (launch,) = by["queue_wait"], by["launch"]
+    assert qw.t1 >= qw.t0
+    assert launch.t1 >= launch.t0 and follower.root.t1 >= launch.t1
+
+
 def test_cache_hit_and_rejected_traces_closed(small_index,
                                               small_collection):
     """Non-launch request outcomes still close their traces with a

@@ -1,0 +1,339 @@
+"""Replica-parallel serving: StageTimingBalancer policy, mirror-mode
+bit-exactness vs the single AsyncSeismicServer, shard-mode merge parity
+with the reference per-shard merge, pad-doc invariants at k > live
+hits, balancer monotonicity under injected slowness, clean shutdown
+with in-flight work, and the per-replica telemetry/span surface."""
+import time
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.core import SeismicConfig
+from repro.core.distributed import build_sharded_index, mask_shard_topk
+from repro.obs import Observability, validate_trace
+from repro.retrieval import SearchParams, search_pipeline
+from repro.retrieval.merge import merge_topk
+from repro.serve import (AsyncSeismicServer, ReplicaSeismicServer,
+                         StageTimingBalancer)
+from repro.sparse.ops import PaddedSparse
+
+
+def _params(**kw):
+    kw.setdefault("k", 5)
+    kw.setdefault("cut", 8)
+    kw.setdefault("block_budget", 8)
+    return SearchParams(**kw)
+
+
+def _queries(small_collection, n):
+    _, queries, *_ = small_collection
+    qc, qv = np.asarray(queries.coords), np.asarray(queries.vals)
+    return [(qc[i % queries.n], qv[i % queries.n]) for i in range(n)]
+
+
+def _serve_all(server, qs):
+    with server:
+        futs = [server.submit(c, v) for c, v in qs]
+        return [f.result(30.0) for f in futs]
+
+
+# ----------------------------------------------------------- balancer
+
+def test_balancer_proportional_dispatch_never_starves():
+    """Dispatch share tracks 1/cost — the 3x-slower replica gets ~3x
+    fewer batches — and the slow replica keeps being picked."""
+    bal = StageTimingBalancer(3)
+    cost = [0.009, 0.003, 0.003]
+    counts = [0, 0, 0]
+    for _ in range(300):
+        rid = bal.pick()
+        counts[rid] += 1
+        bal.record(rid, cost[rid])
+    assert counts[0] >= 10                      # never starved
+    assert counts[0] < counts[1] and counts[0] < counts[2]
+    # share ratio ~ cost ratio (3x), loosely bounded
+    assert 2.0 <= counts[1] / counts[0] <= 4.5
+    snap = bal.snapshot()
+    assert sum(snap["dispatches"]) == 300
+    assert abs(sum(snap["dispatch_share"]) - 1.0) < 1e-9
+    assert snap["cost_ewma_s"][0] == pytest.approx(0.009, rel=0.2)
+
+
+def test_balancer_single_replica_and_stage_rollup():
+    bal = StageTimingBalancer(1)
+    assert [bal.pick() for _ in range(5)] == [0] * 5
+    assert bal.snapshot()["inflight"] == [5]
+    bal.record(0, 0.01, {"router": 0.004, "scorer": 0.006})
+    bal.record(0, 0.02, {"router": 0.008, "scorer": 0.012})
+    sc = bal.snapshot()["stage_cost_ewma_s"][0]
+    assert 0.004 < sc["router"] < 0.008
+    assert bal.snapshot()["inflight"] == [3]   # 5 picked, 2 acked
+
+
+def test_balancer_validation():
+    with pytest.raises(ValueError):
+        StageTimingBalancer(0)
+    with pytest.raises(ValueError):
+        StageTimingBalancer(2, alpha=0.0)
+    with pytest.raises(ValueError):
+        StageTimingBalancer(2, alpha=1.5)
+
+
+# -------------------------------------------------------- mirror mode
+
+@pytest.mark.parametrize("n_replicas", [1, 2, 3])
+def test_mirror_bit_exact_vs_async_server(small_index, small_collection,
+                                          n_replicas):
+    """The acceptance criterion: same index, same params => the replica
+    server returns bit-identical (scores, ids, docs_evaluated) to the
+    single AsyncSeismicServer at every replica count."""
+    idx, _ = small_index
+    qs = _queries(small_collection, 12)
+    kw = dict(max_batch=4, query_nnz=16, deadline_s=0.01,
+              cache_size=0, coalesce=False)
+    ref = _serve_all(AsyncSeismicServer(idx, _params(), **kw), qs)
+    got = _serve_all(
+        ReplicaSeismicServer(idx, _params(), n_replicas=n_replicas, **kw),
+        qs)
+    for a, b in zip(ref, got):
+        assert np.array_equal(a.ids, b.ids)
+        assert np.array_equal(a.scores, b.scores)
+        assert a.docs_evaluated == b.docs_evaluated
+
+
+def test_mirror_slow_replica_gets_fewer_dispatches(small_index,
+                                                   small_collection):
+    """Balancer monotonicity end-to-end: with replica 0 artificially
+    30ms slow, the healthy replica absorbs most micro-batches."""
+    idx, _ = small_index
+    srv = ReplicaSeismicServer(idx, _params(), n_replicas=2,
+                               replica_delay_s=(0.03, 0.0),
+                               max_batch=2, query_nnz=16,
+                               deadline_s=0.002, cache_size=0,
+                               coalesce=False)
+    # paced arrivals: the balancer only learns from completed launches,
+    # so give the 30ms replica time to report before the last dispatch
+    with srv:
+        futs = []
+        for c, v in _queries(small_collection, 24):
+            futs.append(srv.submit(c, v))
+            time.sleep(0.008)
+        res = [f.result(30.0) for f in futs]
+    assert all(r.ids.shape == (5,) for r in res)
+    snap = srv.balancer.snapshot()
+    assert sum(snap["dispatches"]) >= 2
+    assert snap["dispatches"][1] > snap["dispatches"][0]
+    # the slow replica's measured cost dominates the healthy one's
+    assert snap["cost_ewma_s"][0] > snap["cost_ewma_s"][1]
+
+
+def test_mirror_clean_stop_with_inflight_work(small_index,
+                                              small_collection):
+    """stop() with queued + in-flight work on every replica drains
+    everything: no future is left pending, all threads join."""
+    idx, _ = small_index
+    srv = ReplicaSeismicServer(idx, _params(), n_replicas=3,
+                               replica_delay_s=0.01, max_batch=2,
+                               query_nnz=16, deadline_s=30.0,
+                               cache_size=0, coalesce=False)
+    srv.start()
+    futs = [srv.submit(c, v) for c, v in _queries(small_collection, 24)]
+    srv.stop()                       # close + drain, no waiting first
+    for f in futs:
+        assert f.done()
+        assert f.status == "done"
+        assert f.result().ids.shape == (5,)
+    assert srv._thread is None
+    assert srv._replica_threads == []
+    # every replica did real work while shutting down
+    snap = srv.balancer.snapshot()
+    assert sum(snap["dispatches"]) == 12    # 24 requests / max_batch 2
+    assert all(d >= 1 for d in snap["dispatches"])
+
+
+def test_mirror_replica_gauges_and_span_labels(small_index,
+                                               small_collection):
+    """Per-replica rollups land in the shared registry and every launch
+    span carries the replica label; traces stay valid."""
+    idx, _ = small_index
+    obs = Observability.create(stage_sample_every=1)
+    srv = ReplicaSeismicServer(idx, _params(), n_replicas=2,
+                               obs=obs, max_batch=4, query_nnz=16,
+                               deadline_s=0.01, cache_size=0,
+                               coalesce=False)
+    _serve_all(srv, _queries(small_collection, 8))
+    reg = obs.registry
+    disp = reg.get("seismic_replica_dispatches_total")
+    total = sum(c.value for _, c in disp.samples())
+    assert total >= 1
+    snap = srv.balancer.snapshot()
+    assert total == sum(snap["dispatches"])
+    cost = reg.get("seismic_replica_cost_ewma_seconds")
+    assert {lv[0] for lv, _ in cost.samples()} == {"0", "1"}
+    picked = [rid for rid in (0, 1) if snap["dispatches"][rid]]
+    assert all(cost.labels(str(rid)).value > 0 for rid in picked)
+    # staged launches fed the per-stage rollup gauge
+    stage = reg.get("seismic_replica_stage_seconds")
+    assert any(lv[1] == "scorer" for lv, _ in stage.samples())
+    seen = set()
+    for tr in obs.tracer.finished():
+        validate_trace(tr)
+        for s in tr.spans:
+            if s.name == "launch":
+                assert "replica" in s.attrs
+                seen.add(s.attrs["replica"])
+    assert seen <= {0, 1} and seen
+    share = reg.get("seismic_replica_dispatch_share")
+    assert sum(g.value for _, g in share.samples()) == pytest.approx(1.0)
+
+
+# --------------------------------------------------------- shard mode
+
+N_SHARDS = 4
+
+
+@pytest.fixture(scope="module")
+def shard_setup():
+    """37 docs over 4 shards: per_shard=10, the last shard carries 7
+    live docs + 3 all-zero pad rows — k=10 exceeds its live hits."""
+    rng = np.random.default_rng(7)
+    n_docs, dim, nnz = 37, 128, 8
+    coords = np.argsort(rng.random((n_docs, dim)), axis=1)[:, :nnz] \
+        .astype(np.int32)
+    vals = rng.uniform(0.2, 1.0, (n_docs, nnz)).astype(np.float32)
+    docs = PaddedSparse(jnp.asarray(coords), jnp.asarray(vals), dim)
+    cfg = SeismicConfig(lam=16, beta=4, alpha=0.5, block_cap=8,
+                        summary_nnz=8)
+    stacked = build_sharded_index(docs, cfg, n_shards=N_SHARDS,
+                                  list_chunk=8)
+    queries = [(coords[i], vals[i]) for i in range(0, 36, 6)]  # 6 rows
+    return stacked, docs, queries
+
+
+def _shard_params():
+    return SearchParams(k=10, cut=4, block_budget=4, policy="budget")
+
+
+def test_shard_mode_matches_reference_merge(shard_setup):
+    """Server output == per-shard pipeline + mask_shard_topk +
+    merge_topk run by hand, bit for bit; docs_evaluated sums over
+    shards."""
+    stacked, docs, queries = shard_setup
+    p = _shard_params()
+    n_q = len(queries)
+    srv = ReplicaSeismicServer(stacked, p, mode="shard", n_docs=docs.n,
+                               max_batch=n_q, query_nnz=8,
+                               deadline_s=30.0, cache_size=0,
+                               coalesce=False)
+    srv.start()
+    futs = [srv.submit(c, v) for c, v in queries]   # one full batch
+    srv.stop()
+    res = [f.result() for f in futs]
+
+    qc = jnp.asarray(np.stack([c for c, _ in queries]))
+    qv = jnp.asarray(np.stack([v for _, v in queries]))
+    per = stacked.fwd.coords.shape[1]
+    parts_s, parts_g, parts_ev = [], [], []
+    for s in range(N_SHARDS):
+        shard = jax.tree.map(lambda x, s=s: x[s], stacked)
+        sc, ids, ev = search_pipeline(
+            shard, PaddedSparse(qc, qv, docs.dim), p)
+        sc, gids = mask_shard_topk(sc, ids, shard.fwd, s * per,
+                                   n_docs=docs.n)
+        parts_s.append(np.asarray(sc))
+        parts_g.append(np.asarray(gids))
+        parts_ev.append(np.asarray(ev))
+    top_s, top_ids, _ = merge_topk(
+        jnp.asarray(np.concatenate(parts_g, axis=1)),
+        jnp.asarray(np.concatenate(parts_s, axis=1)), p.k, docs.n)
+    ev_ref = np.sum(parts_ev, axis=0)
+    for i, r in enumerate(res):
+        assert np.array_equal(r.ids, np.asarray(top_ids)[i])
+        assert np.array_equal(r.scores, np.asarray(top_s)[i])
+        assert r.docs_evaluated == int(ev_ref[i])
+
+
+def test_shard_mode_k_exceeds_live_hits_no_pad_leak(shard_setup):
+    """The satellite-bug invariant at the serving seam: with k above
+    every shard's live-hit count, no out-of-range global id and no
+    0.0-scored pad row reaches a caller; dead slots are (-1, -inf)."""
+    stacked, docs, queries = shard_setup
+    srv = ReplicaSeismicServer(stacked, _shard_params(), mode="shard",
+                               n_docs=docs.n, max_batch=4, query_nnz=8,
+                               deadline_s=0.01, cache_size=0,
+                               coalesce=False)
+    res = _serve_all(srv, queries)
+    for r in res:
+        assert r.ids.shape == (10,)
+        live = r.ids >= 0
+        assert (r.ids[live] < docs.n).all()
+        assert np.isfinite(r.scores[live]).all()
+        assert (r.ids[~live] == -1).all()
+        assert np.isneginf(r.scores[~live]).all()
+        assert r.docs_evaluated > 0
+
+
+def test_shard_mode_coalesce_and_trace_label(shard_setup):
+    """Coalescing works across the fan-out/merge path and merged launch
+    spans carry the shard-merge replica label."""
+    stacked, docs, _ = shard_setup
+    c = np.asarray(stacked.fwd.coords[0, 0])
+    v = np.asarray(stacked.fwd.vals[0, 0], np.float32)
+    obs = Observability.create()
+    srv = ReplicaSeismicServer(stacked, _shard_params(), mode="shard",
+                               n_docs=docs.n, obs=obs, max_batch=8,
+                               query_nnz=8, deadline_s=0.02,
+                               cache_size=0, coalesce=True)
+    f0 = srv.submit(c, v)                # queued before worker start
+    f1 = srv.submit(c, v)                # coalesces onto f0's slot
+    with srv:
+        r0, r1 = f0.result(30.0), f1.result(30.0)
+    assert r1.coalesced
+    assert np.array_equal(r0.ids, r1.ids)
+    for tr in obs.tracer.finished():
+        validate_trace(tr)
+        for s in tr.spans:
+            if s.name == "launch":
+                assert s.attrs["replica"] == "shard-merge"
+                assert s.attrs["n_shards"] == N_SHARDS
+
+
+def test_shard_mode_clean_stop_with_inflight_work(shard_setup):
+    stacked, docs, queries = shard_setup
+    srv = ReplicaSeismicServer(stacked, _shard_params(), mode="shard",
+                               n_docs=docs.n, replica_delay_s=0.005,
+                               max_batch=2, query_nnz=8,
+                               deadline_s=30.0, cache_size=0,
+                               coalesce=False)
+    srv.start()
+    futs = [srv.submit(c, v) for c, v in queries * 2]   # 12 requests
+    srv.stop()
+    for f in futs:
+        assert f.status == "done"
+    assert srv._replica_threads == []
+
+
+# -------------------------------------------------------- validation
+
+def test_constructor_validation(small_index, shard_setup):
+    idx, _ = small_index
+    stacked, _, _ = shard_setup
+    p = _params()
+    with pytest.raises(ValueError, match="unknown mode"):
+        ReplicaSeismicServer(idx, p, n_replicas=2, mode="quorum")
+    with pytest.raises(ValueError, match="n_replicas"):
+        ReplicaSeismicServer(idx, p, mode="mirror")
+    with pytest.raises(ValueError, match="stacked index shards"):
+        ReplicaSeismicServer(stacked, _shard_params(), mode="shard",
+                             n_replicas=3)
+    with pytest.raises(ValueError, match="mirror-mode only"):
+        ReplicaSeismicServer(stacked, _shard_params(), mode="shard",
+                             stage_timing=True)
+    with pytest.raises(ValueError, match="balancer covers"):
+        ReplicaSeismicServer(idx, p, n_replicas=2,
+                             balancer=StageTimingBalancer(3))
+    with pytest.raises(ValueError, match="replica_delay_s"):
+        ReplicaSeismicServer(idx, p, n_replicas=2,
+                             replica_delay_s=(0.1, 0.1, 0.1))

@@ -1,0 +1,169 @@
+"""Regression tests for the serving/distributed correctness sweep:
+
+  1. ``ServeFuture`` completion is first-writer-wins — a launch that
+     raises after fulfilling part of its batch must not flip ``done``
+     futures to ``error``.
+  2. Pad-doc leak at the distributed merge seam — ``shard_collection``
+     zero-pads the corpus; an all-zero pad row surfacing as a candidate
+     scores exactly 0.0 and must be masked to ``(-inf, -1)`` before any
+     cross-shard merge, never reaching the global top-k with an
+     out-of-range global id.
+  3. (mid-execution coalesce span validity lives in
+     ``test_obs_serving.py`` next to the other trace-tree tests.)
+"""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from helpers import run_with_devices
+from repro.core.distributed import mask_shard_topk
+from repro.retrieval import SearchParams
+from repro.serve import AsyncSeismicServer, ServeFuture, ServeResult
+from repro.sparse.ops import PaddedSparse
+
+
+# ------------------------------------------- 1. future double completion
+
+def test_future_completion_first_writer_wins():
+    """Once completed, a future's (status, result) pair is immutable;
+    the losing writer is told so."""
+    f = ServeFuture()
+    assert f._set("payload") is True
+    assert f._fail("error: boom") is False          # loses the race
+    assert f.status == "done" and f.result() == "payload"
+    assert f._set("other") is False                 # done is done too
+
+    g = ServeFuture()
+    assert g._fail("shed") is True
+    assert g._set("late result") is False
+    assert g.status == "shed"
+    with pytest.raises(RuntimeError, match="shed"):
+        g.result()
+
+
+def test_midlaunch_exception_preserves_fulfilled_futures(
+        small_index, small_collection):
+    """THE satellite bug: a launch raising after fulfilling part of its
+    batch (here: the cache write of the second request explodes) fails
+    only the unfulfilled futures; the already-``done`` one keeps its
+    result, and the worker keeps serving."""
+    idx, _ = small_index
+    _, queries, *_ = small_collection
+    srv = AsyncSeismicServer(
+        idx, SearchParams(k=5, cut=8, block_budget=8),
+        max_batch=2, query_nnz=16, deadline_s=0.05,
+        cache_size=8, coalesce=False)
+    real_put = srv.cache.put
+    calls = []
+
+    def exploding_put(key, value):
+        calls.append(key)
+        if len(calls) == 2:          # first request already fulfilled?
+            raise RuntimeError("cache backend down")
+        return real_put(key, value)
+
+    srv.cache.put = exploding_put
+    c, v = np.asarray(queries.coords), np.asarray(queries.vals)
+    f0 = srv.submit(c[0], v[0])      # queued before the worker starts:
+    f1 = srv.submit(c[1], v[1])      # one batch of exactly two requests
+    with srv:
+        assert f0.wait(10.0) and f1.wait(10.0)
+        # cache.put for request 0 precedes request 1's, but request 0's
+        # future is only fulfilled at the END of its loop iteration —
+        # so the iteration-1 explosion hits with f0 done, f1 pending
+        assert calls and len(calls) == 2
+        assert f0.status == "done"
+        assert isinstance(f0.result(), ServeResult)
+        assert f1.status.startswith("error: RuntimeError")
+        # the worker survived the batch failure and still serves
+        f2 = srv.submit(c[2], v[2])
+        assert f2.wait(10.0)
+    assert f2.status == "done" and len(calls) == 3
+
+
+# --------------------------------------------- 2. distributed pad leak
+
+def test_mask_shard_topk_unit():
+    """Pad rows (all-zero forward rows) and out-of-range ids go to
+    (-inf, -1); live hits keep scores and gain the shard offset."""
+    fwd = PaddedSparse(
+        jnp.asarray([[1, 2], [3, 0], [0, 0], [0, 0]], jnp.int32),
+        jnp.asarray([[1., 2.], [3., 0.], [0., 0.], [0., 0.]]), dim=8)
+    ids = jnp.asarray([[0, 1, 2, -1],
+                       [3, 1, -1, -1]], jnp.int32)
+    scores = jnp.asarray([[5., 4., 0., -jnp.inf],
+                          [0., 2., -jnp.inf, -jnp.inf]])
+    out_s, out_g = mask_shard_topk(scores, ids, fwd, 40)
+    np.testing.assert_array_equal(
+        np.asarray(out_g), [[40, 41, -1, -1], [-1, 41, -1, -1]])
+    np.testing.assert_array_equal(
+        np.asarray(out_s),
+        [[5., 4., -np.inf, -np.inf], [-np.inf, 2., -np.inf, -np.inf]])
+    # explicit live bound masks ids past the corpus end even when the
+    # forward row looks live
+    out_s2, out_g2 = mask_shard_topk(scores, ids, fwd, 40, n_docs=41)
+    np.testing.assert_array_equal(
+        np.asarray(out_g2), [[40, -1, -1, -1], [-1, -1, -1, -1]])
+    assert np.isneginf(np.asarray(out_s2)[0, 1])
+
+
+DIST_CODE = r"""
+import dataclasses
+import numpy as np, jax, jax.numpy as jnp
+from repro.core import SeismicConfig, SearchParams
+from repro.core.distributed import build_sharded_index, make_distributed_search
+from repro.sparse.ops import PaddedSparse
+
+assert len(jax.devices()) == 4
+# 13 single-coord docs over 4 shards -> per_shard 4; shard 3 holds one
+# live doc (global id 12) + THREE all-zero pad rows
+n_docs, dim = 13, 32
+coords = np.zeros((n_docs, 4), np.int32)
+vals = np.zeros((n_docs, 4), np.float32)
+coords[:, 0] = np.arange(n_docs)
+vals[:, 0] = 1.0 + 0.01 * np.arange(n_docs)
+docs = PaddedSparse(jnp.asarray(coords), jnp.asarray(vals), dim)
+cfg = SeismicConfig(lam=8, beta=2, alpha=0.5, block_cap=4, summary_nnz=4)
+stacked = build_sharded_index(docs, cfg, n_shards=4, list_chunk=8)
+# cut=1: probe only the query's one live coord (padding coords are
+# coord 0 / val 0 and would drag score-0.0 live docs into the tail)
+p = SearchParams(k=4, cut=1, block_budget=4, policy="budget")
+mesh = jax.make_mesh((1, 4), ("data", "model"),
+                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+search = make_distributed_search(mesh, p, doc_axes=("model",),
+                                 data_axis="data", n_docs=n_docs)
+
+# query hits ONLY doc 12 (the last shard's lone live doc); k=4 exceeds
+# every shard's live hits, so the merged tail must be (-1, -inf) pads
+qc = np.zeros((2, 4), np.int32); qc[:, 0] = 12
+qv = np.zeros((2, 4), np.float32); qv[:, 0] = 1.0
+with jax.set_mesh(mesh):
+    s, ids = jax.jit(search)(stacked, jnp.asarray(qc), jnp.asarray(qv))
+s, ids = np.asarray(s), np.asarray(ids)
+assert (ids[:, 0] == 12).all(), ids
+assert (ids[:, 1:] == -1).all(), ids
+assert np.isneginf(s[:, 1:]).all(), s
+
+# the leak mechanism itself: put a PAD row (shard-3 local id 3 = global
+# 15 > 12) into the posting list the query probes — exactly the state a
+# mutable/mmap index path can produce. The all-zero row scores 0.0;
+# without the pre-gather mask it tops the merge with an out-of-range id.
+leaky = dataclasses.replace(
+    stacked, list_docs=stacked.list_docs.at[3, 12, 0].set(3))
+with jax.set_mesh(mesh):
+    s2, ids2 = jax.jit(search)(leaky, jnp.asarray(qc), jnp.asarray(qv))
+s2, ids2 = np.asarray(s2), np.asarray(ids2)
+assert (ids2 < n_docs).all(), ("pad doc leaked into global top-k", ids2)
+live2 = ids2 >= 0
+assert np.isfinite(s2[live2]).all()
+assert np.isneginf(s2[~live2]).all()
+print("OK pad mask")
+"""
+
+
+def test_distributed_merge_masks_pad_docs_4dev():
+    """k above a shard's live-hit count never surfaces zero-padded rows
+    (0.0 scores, out-of-range global ids) in the merged global top-k —
+    including when a pad row sits in a posting list."""
+    out = run_with_devices(DIST_CODE, n_devices=4)
+    assert "OK pad mask" in out
