@@ -1,7 +1,7 @@
 PY ?= python
 
 .PHONY: test test-fast bench bench-serving bench-replica bench-graph \
-	bench-tune bench-kernels bench-obs dev
+	bench-tune bench-kernels bench-obs bench-audit bench-compare dev
 
 dev:
 	$(PY) -m pip install -r requirements-dev.txt
@@ -43,5 +43,19 @@ bench-kernels:
 	PYTHONPATH=src $(PY) -m benchmarks.kernel_microbench --smoke
 
 # observability overhead smoke: component-gated <5% p50 / <3% QPS
+# (instrumented arm includes the shadow auditor at default cadence)
 bench-obs:
 	PYTHONPATH=src $(PY) -m benchmarks.obs_overhead --smoke
+
+# quality-plane smoke: live-recall Wilson gate, funnel completeness,
+# mistuned-policy SLO breach
+bench-audit:
+	PYTHONPATH=src $(PY) -m benchmarks.serving_load --smoke --audit
+
+# regression sentinel: fresh artifacts vs committed baselines
+bench-compare:
+	PYTHONPATH=src $(PY) -m benchmarks.run \
+		--only serving_load,obs_overhead --smoke \
+		--artifacts bench-artifacts
+	$(PY) -m benchmarks.compare --baseline benchmarks/baselines \
+		--fresh bench-artifacts

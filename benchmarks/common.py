@@ -16,8 +16,8 @@ import jax.numpy as jnp
 
 from repro.core import SeismicConfig, build_index
 from repro.core.baselines import exact_search
-from repro.core.oracle import recall_at_k
 from repro.data import SyntheticSparseConfig, make_collection
+from repro.obs.quality import recall_at_k
 from repro.sparse.ops import PaddedSparse
 
 SMALL = SyntheticSparseConfig(dim=2048, n_docs=16384, n_queries=64,

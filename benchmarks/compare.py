@@ -1,0 +1,161 @@
+"""Benchmark regression sentinel: diff a fresh ``BENCH_*.json``
+artifact directory (``benchmarks.run --artifacts``) against a committed
+baseline directory and fail CI on *quality* regressions.
+
+    python -m benchmarks.compare --baseline benchmarks/baselines \
+        --fresh bench-artifacts [--pct 10]
+
+Two classes of regression ERROR (nonzero exit):
+
+  * a ``gate_*`` verdict that was True in the baseline and is False in
+    the fresh run (a hard acceptance gate flipped);
+  * a recall-like metric (any derived key containing ``recall``)
+    that dropped by more than ``--pct`` percent relative.
+
+Everything else — latency, QPS, span costs — is environment-sensitive
+on shared CI boxes, so timing drifts only WARN (with a direction
+heuristic: ``qps``/``recall``/``speedup``/``hit``/``occupancy`` are
+higher-better; ``us``/``_ms``/``_pct`` suffixed keys lower-better).
+Rows or modules present on only one side are reported but never fail
+the run, so adding a benchmark doesn't require regenerating baselines
+atomically. Stdlib-only: runs before (and without) the repro package.
+
+Regenerate baselines with::
+
+    PYTHONPATH=src python -m benchmarks.run \
+        --only serving_load,obs_overhead --smoke \
+        --artifacts benchmarks/baselines
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+HIGHER_BETTER = ("qps", "recall", "speedup", "hit", "occupancy")
+LOWER_BETTER_SUFFIX = ("us", "_ms", "_pct")
+
+
+def load_artifacts(d: Path) -> dict[str, dict]:
+    """``BENCH_<module>.json`` files in ``d`` -> {module: artifact}."""
+    out = {}
+    for p in sorted(d.glob("BENCH_*.json")):
+        art = json.loads(p.read_text())
+        out[art.get("name", p.stem[len("BENCH_"):])] = art
+    return out
+
+
+def _rows_by_name(art: dict) -> dict[str, dict]:
+    """Derived dicts keyed by row name; duplicate names keep the last
+    occurrence (rows are append-ordered, last is freshest)."""
+    return {r["name"]: r.get("derived", {}) for r in art.get("rows", [])}
+
+
+def _as_float(v) -> float | None:
+    try:
+        return float(v)
+    except (TypeError, ValueError):
+        return None
+
+
+def direction(key: str) -> int:
+    """+1 if higher is better, -1 if lower is better, 0 if unknown."""
+    k = key.lower()
+    if any(tok in k for tok in HIGHER_BETTER):
+        return 1
+    if any(k.endswith(suf) for suf in LOWER_BETTER_SUFFIX):
+        return -1
+    return 0
+
+
+def compare(baseline: dict[str, dict], fresh: dict[str, dict],
+            pct: float) -> tuple[list[str], list[str]]:
+    """Diff two artifact maps -> (errors, warnings)."""
+    errors: list[str] = []
+    warnings: list[str] = []
+    for mod in sorted(set(baseline) | set(fresh)):
+        if mod not in fresh:
+            warnings.append(f"{mod}: missing from fresh run")
+            continue
+        if mod not in baseline:
+            warnings.append(f"{mod}: new module (no baseline)")
+            continue
+        base, new = baseline[mod], fresh[mod]
+        if new.get("verdict") == "error":
+            errors.append(f"{mod}: fresh run errored: {new.get('error')}")
+            continue
+        base_gates = base.get("gates", {})
+        for gate, held in sorted(new.get("gates", {}).items()):
+            if base_gates.get(gate) is True and held is False:
+                errors.append(f"{mod}: gate flipped True->False: {gate}")
+        base_rows = _rows_by_name(base)
+        for name, derived in sorted(_rows_by_name(new).items()):
+            if name not in base_rows:
+                warnings.append(f"{mod}/{name}: new row (no baseline)")
+                continue
+            for key, raw in sorted(derived.items()):
+                v_new = _as_float(raw)
+                v_old = _as_float(base_rows[name].get(key))
+                if v_new is None or v_old is None or key.startswith("gate_"):
+                    continue
+                # classify on row name + key, so e.g. the `live` column
+                # of serve_audit_live_recall counts as recall-like
+                ctx = f"{name}.{key}"
+                d = direction(ctx)
+                if d == 0 or v_old == 0:
+                    continue
+                # signed relative change in the *better* direction
+                change_pct = d * (v_new - v_old) / abs(v_old) * 100
+                if change_pct >= -pct:
+                    continue
+                msg = (f"{mod}/{name}: {key} regressed "
+                       f"{v_old:.6g} -> {v_new:.6g} "
+                       f"({change_pct:+.1f}% vs gate -{pct:g}%)")
+                if "recall" in ctx.lower():
+                    errors.append(msg)
+                else:
+                    warnings.append(f"(timing) {msg}")
+    return errors, warnings
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m benchmarks.compare",
+        description="Diff fresh BENCH_*.json artifacts vs a baseline "
+                    "directory; exit nonzero on quality regressions.")
+    ap.add_argument("--baseline", required=True, metavar="DIR",
+                    help="committed baseline artifact directory")
+    ap.add_argument("--fresh", required=True, metavar="DIR",
+                    help="artifact directory from this run")
+    ap.add_argument("--pct", type=float, default=10.0,
+                    help="max relative drop for recall-like metrics "
+                         "(default 10%%)")
+    args = ap.parse_args(argv)
+    base_dir, fresh_dir = Path(args.baseline), Path(args.fresh)
+    if not base_dir.is_dir():
+        print(f"baseline dir {base_dir} missing — nothing to compare "
+              f"(regenerate per module docstring)", file=sys.stderr)
+        return 0
+    if not fresh_dir.is_dir():
+        print(f"fresh dir {fresh_dir} missing", file=sys.stderr)
+        return 2
+    baseline = load_artifacts(base_dir)
+    fresh = load_artifacts(fresh_dir)
+    if not baseline:
+        print(f"no BENCH_*.json in {base_dir} — nothing to compare",
+              file=sys.stderr)
+        return 0
+    errors, warnings = compare(baseline, fresh, args.pct)
+    for w in warnings:
+        print(f"WARN  {w}")
+    for e in errors:
+        print(f"ERROR {e}")
+    n_mod = len(set(baseline) & set(fresh))
+    print(f"compared {n_mod} modules: {len(errors)} errors, "
+          f"{len(warnings)} warnings")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,5 +1,7 @@
-"""Observability overhead gate: full instrumentation must stay within
-<5% p50 request latency and <3% QPS of the uninstrumented server.
+"""Observability overhead gate: full instrumentation — tracing, device
+accounting, AND shadow-oracle quality auditing at its default cadence —
+must stay within <5% p50 request latency and <3% QPS of the
+uninstrumented server.
 
 Two measurements, one gate:
 
@@ -12,10 +14,17 @@ paths themselves, on the real index and launch shapes:
   * the staged-launch delta — ``run_pipeline_staged`` (with span
     collection and ``DeviceAccounting.observe``, the full sampled
     path) minus the fused ``search_pipeline``, amortized by the
-    default ``stage_sample_every`` since only every Nth launch pays it.
+    default ``stage_sample_every`` since only every Nth launch pays it;
+  * the audit hot-path cost — ``ShadowAuditor.plan`` runs on every
+    launch; ``feed`` (row copies + a bounded, non-blocking enqueue)
+    plus the forced staged launch only every ``audit_sample_every``-th
+    request. The oracle recompute itself runs on the background worker
+    thread, off the request path, so it is deliberately not gated.
 
-  p50 overhead  = span_work / baseline_p50
-  QPS overhead  = (span_work + staged_delta / sample_every)
+  p50 overhead  = (span_work + audit_plan) / baseline_p50
+  QPS overhead  = (span_work + audit_plan
+                   + staged_delta / sample_every
+                   + (audit_feed + staged_delta) / audit_every)
                   / baseline_mean
 
 **Interleaved A/B (informational rows).** Closed-loop traffic against
@@ -41,7 +50,7 @@ import jax.numpy as jnp
 from benchmarks.common import row
 from repro.core import SeismicConfig, build_index
 from repro.data import SyntheticSparseConfig, make_collection
-from repro.obs import Observability, Tracer
+from repro.obs import Observability, ShadowAuditor, Tracer
 from repro.obs.device import DeviceAccounting
 from repro.obs.registry import MetricsRegistry
 from repro.retrieval import SearchParams, search_pipeline
@@ -85,6 +94,28 @@ def _span_work_us(iters: int = 2000) -> float:
         tracer.end_trace(tr, 2.0, status="done", docs_evaluated=0)
         del sp
     return (time.perf_counter() - t0) / iters * 1e6
+
+
+def _audit_cost_us(idx, p, nnz: int, k: int,
+                   iters: int = 2000) -> tuple[float, float, int]:
+    """Hot-path cost of the shadow auditor: per-launch ``plan`` and
+    per-sampled-request ``feed`` (row copies + ``put_nowait``). Uses an
+    unstarted auditor with a queue sized past ``iters`` so the oracle
+    worker never runs — only the request-path code is on the clock."""
+    aud = ShadowAuditor(idx, p, MetricsRegistry(),
+                        queue_bound=iters + 8)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        aud.plan(8)
+    plan_us = (time.perf_counter() - t0) / iters * 1e6
+    coords = np.zeros(nnz, np.int32)
+    vals = np.zeros(nnz, np.float32)
+    ids = np.zeros(k, np.int32)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        aud.feed(coords, vals, ids, captures=None)
+    feed_us = (time.perf_counter() - t0) / iters * 1e6
+    return plan_us, feed_us, aud.audit_sample_every
 
 
 def _launch_us(fn, iters: int = 12) -> float:
@@ -190,7 +221,12 @@ def run(smoke: bool = False, artifacts_dir=None):
     n_req, segments = (16, 4) if smoke else (16, 12)
 
     obs = Observability.create()
-    ab = _ab_wallclock(idx, queries, p, n_req, segments, obs)
+    # The instrumented arm carries the full quality plane too: a
+    # started shadow auditor at its default cadence rides the A/B.
+    obs.auditor = ShadowAuditor(idx, p, obs.registry)
+    with obs.auditor:
+        ab = _ab_wallclock(idx, queries, p, n_req, segments, obs)
+        obs.auditor.drain()
     if artifacts_dir is not None:
         # the instrumented arm's obs trail, for `repro.obs.report`
         _write_trail(obs, artifacts_dir)
@@ -198,10 +234,14 @@ def run(smoke: bool = False, artifacts_dir=None):
     sample_every = obs.stage_sample_every
     staged_us = _staged_delta_us(idx, p, width=8,
                                  nnz=int(queries.coords.shape[1]))
+    plan_us, feed_us, audit_every = _audit_cost_us(
+        idx, p, nnz=int(queries.coords.shape[1]), k=p.k)
     base_p50_us = ab["off"]["p50"] * 1e6
     base_mean_us = ab["off"]["mean"] * 1e6
-    p50_pct = span_us / base_p50_us * 100
-    qps_pct = (span_us + staged_us / sample_every) / base_mean_us * 100
+    p50_pct = (span_us + plan_us) / base_p50_us * 100
+    qps_pct = (span_us + plan_us + staged_us / sample_every
+               + (feed_us + staged_us) / audit_every) \
+        / base_mean_us * 100
 
     for arm in ("off", "on"):
         yield row(f"obs_overhead_{arm}", 1e6 / ab[arm]["qps"],
@@ -211,6 +251,9 @@ def run(smoke: bool = False, artifacts_dir=None):
               span_work_us=f"{span_us:.1f}",
               staged_delta_us=f"{staged_us:.0f}",
               sample_every=sample_every,
+              audit_plan_us=f"{plan_us:.2f}",
+              audit_feed_us=f"{feed_us:.2f}",
+              audit_every=audit_every,
               p50_overhead_pct=f"{p50_pct:.2f}",
               qps_loss_pct=f"{qps_pct:.2f}",
               gate_p50=p50_pct < P50_GATE_PCT,

@@ -30,13 +30,26 @@ identical everywhere:
                       ``gate_replica_degradation`` requires p99 with
                       the slow replica <= 3x the all-healthy p99
 
+A fourth section (``run_audit``) gates the quality-observability
+plane: a ``ShadowAuditor`` at cadence 1 audits every served request,
+and three gates check that its windowed live recall agrees with
+offline-measured recall within the Wilson interval
+(``gate_audit_wilson``), that the loss funnel attributes 100% of
+oracle misses to exactly one stage (``gate_funnel_complete``), and
+that a deliberately mistuned policy (block budget forced below the
+tuned point) drives the SLO state machine to breach
+(``gate_slo_breach``). The auditor snapshots land in
+``obs_quality.json`` when an artifacts dir is given.
+
     PYTHONPATH=src python -m benchmarks.serving_load [--smoke]
                                                      [--replica]
+                                                     [--audit]
 
 ``--smoke`` (also used by CI and ``make bench-serving``) shrinks the
 collection and runs one policy so the whole module finishes in a few
 seconds; ``--replica`` runs only the replica section (see
-``make bench-replica``).
+``make bench-replica``); ``--audit`` only the quality-plane section
+(``make bench-audit``).
 """
 from __future__ import annotations
 
@@ -212,7 +225,123 @@ def run_replica(smoke: bool = False):
               gate_replica_degradation=bool(ratio <= 3.0))
 
 
-def run(smoke: bool = False):
+def _serve_audited(idx, queries, params, n_req, *, target, reference):
+    """Serve ``n_req`` requests through an AsyncSeismicServer with a
+    started ShadowAuditor at cadence 1 (every request audited, every
+    launch captured), drain, and return (ids, snapshot, seconds)."""
+    from repro.obs import Observability, ShadowAuditor
+    obs = Observability.create(stage_sample_every=0)
+    auditor = ShadowAuditor(idx, params, obs.registry,
+                            audit_sample_every=1,
+                            queue_bound=4 * n_req,
+                            window=max(2 * n_req, 256),
+                            target=target, reference=reference)
+    obs.auditor = auditor
+    server = AsyncSeismicServer(
+        idx, params, max_batch=8, query_nnz=queries.nnz_max,
+        deadline_s=1e-3, queue_bound=max(2 * n_req, 64),
+        cache_size=0, coalesce=False, obs=obs)
+    qn = queries.n
+    coords, vals = np.asarray(queries.coords), np.asarray(queries.vals)
+    with auditor, server:
+        t0 = time.perf_counter()
+        futs = [server.submit(coords[i % qn], vals[i % qn])
+                for i in range(n_req)]
+        ids = np.stack([f.result(60.0).ids for f in futs])
+        auditor.drain()
+        dt = time.perf_counter() - t0
+    return ids, auditor.snapshot(), dt
+
+
+def run_audit(smoke: bool = False, artifacts_dir=None):
+    """Quality-plane acceptance gates on the seeded smoke corpus:
+
+    gate_audit_wilson    the auditor's windowed live recall@10 agrees
+                         with offline-measured recall within its
+                         Wilson interval
+    gate_funnel_complete the loss funnel attributes 100% of oracle
+                         misses to exactly one stage
+    gate_slo_breach      a deliberately mistuned policy (block budget
+                         forced below the tuned point) drives the SLO
+                         state machine to ``breach``
+    """
+    import dataclasses
+    import json
+    import os
+
+    from repro.obs import sample_stats
+    from repro.tune import tune_and_attach
+
+    idx, queries, eids = _smoke_fixture()
+    qn = queries.n
+    n_req = 2 * qn if smoke else 4 * qn
+    grid = [SearchParams(k=10, cut=8, block_budget=b, policy="budget")
+            for b in (2, 4, 8, 16)]
+    # feasible target: just under what the strongest grid point measures
+    strong = SeismicServer(idx, grid[-1], max_batch=qn)
+    rec_strong = mean_recall(strong.search(queries).ids, eids)
+    target = max(0.5, round(rec_strong - 0.02, 3))
+    idx = tune_and_attach(idx, queries, eids, targets=[target], grid=grid)
+    pol = idx.tuned[0]
+    params = SearchParams.from_tuned(idx, target=target)
+    reference = sample_stats(np.asarray(queries.coords),
+                             np.asarray(queries.vals), queries.dim)
+
+    # tuned point, audited at cadence 1: live recall + funnel gates.
+    # target=None resolves from the attached TunedPolicy (the serving
+    # default); the explicit target below tests the mistuned override.
+    ids, snap, dt = _serve_audited(idx, queries, params, n_req,
+                                   target=None, reference=reference)
+    offline = mean_recall(ids, eids[np.arange(n_req) % qn])
+    w = snap["window"]
+    gate_wilson = bool(w["trials"] > 0
+                       and w["wilson_lo"] <= offline <= w["wilson_hi"])
+    yield row("serve_audit_live_recall", dt / n_req * 1e6,
+              live=f"{w['live_recall']:.4f}",
+              offline=f"{offline:.4f}",
+              wilson_lo=f"{w['wilson_lo']:.4f}",
+              wilson_hi=f"{w['wilson_hi']:.4f}",
+              audits=snap["audits"], dropped=snap["dropped"],
+              slo_state=snap["slo_state"],
+              gate_audit_wilson=gate_wilson)
+
+    loss = snap["loss"]
+    attributed = sum(loss.values())
+    misses = w["trials"] - w["hits"]
+    gate_funnel = bool(attributed == snap["misses"] == misses)
+    yield row("serve_audit_funnel", dt / n_req * 1e6,
+              router=loss["router"], selector=loss["selector"],
+              scorer=loss["scorer"], refine=loss["refine"],
+              attributed=attributed, misses=misses,
+              gate_funnel_complete=gate_funnel)
+
+    # mistuned point: budget forced below the tuned operating point
+    # must drive the SLO machine to breach (explicit target: degraded
+    # knobs no longer match the attached TunedPolicy)
+    bad_budget = max(1, pol.block_budget // 4)
+    bad_params = dataclasses.replace(params, block_budget=bad_budget)
+    _, bad_snap, _ = _serve_audited(idx, queries, bad_params, n_req,
+                                    target=target, reference=reference)
+    bw = bad_snap["window"]
+    gate_breach = bool(bad_snap["slo_state"] == "breach")
+    yield row("serve_audit_breach", dt / n_req * 1e6,
+              tuned_budget=pol.block_budget, forced_budget=bad_budget,
+              target=f"{target:.3f}",
+              live=f"{bw['live_recall']:.4f}",
+              wilson_hi=f"{bw['wilson_hi']:.4f}",
+              slo_state=bad_snap["slo_state"],
+              gate_slo_breach=gate_breach)
+
+    if artifacts_dir:
+        os.makedirs(artifacts_dir, exist_ok=True)
+        path = os.path.join(artifacts_dir, "obs_quality.json")
+        with open(path, "w", encoding="utf-8") as f:
+            json.dump({"tuned": snap, "mistuned": bad_snap,
+                       "offline_recall": offline,
+                       "target": target}, f, indent=2)
+
+
+def run(smoke: bool = False, artifacts_dir=None):
     if smoke:
         idx, queries, eids = _smoke_fixture()
         policies, max_batch, n_req = ("adaptive",), 8, 48
@@ -246,6 +375,7 @@ def run(smoke: bool = False):
                   speedup=f"{qps / sync_qps:.2f}x")
 
     yield from run_replica(smoke=smoke)
+    yield from run_audit(smoke=smoke, artifacts_dir=artifacts_dir)
 
 
 if __name__ == "__main__":
@@ -255,9 +385,20 @@ if __name__ == "__main__":
                     help="tiny collection, one policy (CI smoke)")
     ap.add_argument("--replica", action="store_true",
                     help="only the replica scaling/degradation rows")
+    ap.add_argument("--audit", action="store_true",
+                    help="only the quality-plane audit rows (gated)")
     args = ap.parse_args()
     print("name,us_per_call,derived")
-    gen = (run_replica(smoke=args.smoke) if args.replica
-           else run(smoke=args.smoke))
+    if args.replica:
+        gen = run_replica(smoke=args.smoke)
+    elif args.audit:
+        gen = run_audit(smoke=args.smoke)
+    else:
+        gen = run(smoke=args.smoke)
+    failed = []
     for line in gen:
         print(line)
+        if "gate_" in line and "=False" in line:
+            failed.append(line.split(",", 1)[0])
+    if failed:
+        raise SystemExit(f"gate failure in rows: {failed}")

@@ -1,8 +1,9 @@
 """Serving demo: the synchronous SeismicServer facade, the async
 deadline micro-batching server, end-to-end observability (request
 tracing + a live Prometheus/trace HTTP endpoint), serving a TUNED
-operating point resolved from the index, and a small LMDecoder
-generation loop.
+operating point resolved from the index, shadow-oracle quality
+auditing of live traffic (the /quality.json recall/funnel plane), and
+a small LMDecoder generation loop.
 
 Every retrieval launch runs the six-stage pipeline
 (prep -> router -> selector -> scorer -> merge -> refine; see
@@ -224,6 +225,57 @@ def tuned_demo(docs, queries, index):
           f"mean docs evaluated={result.docs_evaluated.mean():.0f}")
 
 
+def quality_demo(docs, queries, index):
+    """The quality plane: serve a tuned operating point with a shadow
+    auditor sampling live traffic, print the live-recall / loss-funnel
+    report, and poke the /quality.json + /healthz endpoints."""
+    import json
+    import urllib.request
+
+    from repro.obs import (Observability, ShadowAuditor, sample_stats,
+                           start_exporter)
+    from repro.obs.report import funnel_table
+
+    print("== Quality plane: shadow-oracle recall auditing ==")
+    held_out = queries[:64]
+    _, eids = exact_search(docs, held_out, 10)
+    grid = [SearchParams(k=10, cut=10, block_budget=b, policy="budget")
+            for b in (4, 8, 16)]
+    index = tune_and_attach(index, held_out, np.asarray(eids),
+                            targets=[0.9], grid=grid)
+    params = SearchParams.from_tuned(index, target=0.9)
+    coords = np.asarray(queries.coords)
+    vals = np.asarray(queries.vals)
+    obs = Observability.create(stage_sample_every=0)
+    # target auto-resolves from the TunedPolicy matching `params`;
+    # the reference enables the query-drift gauges
+    obs.auditor = ShadowAuditor(
+        index, params, obs.registry, audit_sample_every=4,
+        queue_bound=256,
+        reference=sample_stats(np.asarray(held_out.coords),
+                               np.asarray(held_out.vals), index.dim))
+    server = AsyncSeismicServer(
+        index, params, max_batch=32, query_nnz=queries.nnz_max,
+        deadline_s=0.005, cache_size=0, obs=obs)
+    with server, obs.auditor:
+        futs = [server.submit(coords[i % queries.n],
+                              vals[i % queries.n]) for i in range(256)]
+        for f in futs:
+            f.wait()
+        obs.auditor.drain()          # let the worker catch up
+        with start_exporter(obs.registry, obs.tracer,
+                            quality=obs.auditor.snapshot) as exp:
+            with urllib.request.urlopen(exp.url + "/healthz") as r:
+                health = json.load(r)
+            with urllib.request.urlopen(exp.url + "/quality.json") as r:
+                snap = json.load(r)
+    print(f"   GET /healthz -> {health}")
+    print(f"   GET /quality.json (every 4th of {snap['served']} "
+          f"served requests audited):")
+    for line in funnel_table(snap).splitlines():
+        print("     " + line)
+
+
 def decode_demo():
     print("== LMDecoder: KV-cache batched generation ==")
     bundle = get_bundle("gemma3-27b")          # reduced: dual-cache path
@@ -244,4 +296,5 @@ if __name__ == "__main__":
     replica_demo(docs, queries, index)
     observability_demo(queries, index)
     tuned_demo(docs, queries, index)
+    quality_demo(docs, queries, index)
     decode_demo()

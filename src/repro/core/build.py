@@ -26,6 +26,7 @@ from __future__ import annotations
 
 import math
 from functools import partial
+from typing import NamedTuple
 
 import numpy as np
 import jax
@@ -218,6 +219,47 @@ def live_blocks(index: SeismicIndex) -> np.ndarray:
     """Per-list live-block counts of a built index (the
     :func:`suggest_fanout` statistic)."""
     return np.asarray((index.block_len > 0).sum(axis=-1))
+
+
+class DocBlockMap(NamedTuple):
+    """CSR doc -> (list, block) membership over a built index.
+
+    ``lists[indptr[d]:indptr[d+1]]`` / ``blocks[...]`` enumerate every
+    (inverted list, physical block) pair holding doc ``d`` after static
+    pruning — the structural ground truth the quality plane's loss
+    funnel needs to decide whether a missed doc was ever reachable
+    through the routed blocks (``repro.obs.quality``).
+    """
+    indptr: np.ndarray    # i64 [n_docs + 1]
+    lists: np.ndarray     # i32 [n_memberships]
+    blocks: np.ndarray    # i32 [n_memberships]
+
+
+def doc_block_map(index: SeismicIndex) -> DocBlockMap:
+    """Invert ``list_docs`` into per-doc block memberships (host-side).
+
+    Physical blocks are contiguous position runs per list
+    (``block_off`` is the cumsum of ``block_len``), so position ``p``'s
+    block is the first block whose end offset exceeds ``p``.
+    """
+    docs = np.asarray(index.list_docs)                  # [L, lam]
+    lens = np.asarray(index.list_len)                   # [L]
+    ends = np.asarray(index.block_off) + np.asarray(index.block_len)
+    n_docs = index.n_docs
+    pos = np.arange(docs.shape[1])
+    live = pos[None, :] < lens[:, None]
+    live &= docs < n_docs                               # drop pad sentinels
+    list_ids, positions = np.nonzero(live)
+    block_ids = np.empty(list_ids.size, np.int32)
+    for i, (ell, p) in enumerate(zip(list_ids, positions)):
+        block_ids[i] = np.searchsorted(ends[ell], p, side="right")
+    member_docs = docs[list_ids, positions]
+    order = np.argsort(member_docs, kind="stable")
+    counts = np.bincount(member_docs, minlength=n_docs)
+    indptr = np.zeros(n_docs + 1, np.int64)
+    np.cumsum(counts, out=indptr[1:])
+    return DocBlockMap(indptr, list_ids[order].astype(np.int32),
+                       block_ids[order])
 
 
 @partial(jax.jit, static_argnames=("cfg", "list_chunk"))

@@ -110,7 +110,11 @@ def algorithm2(view: NumpyIndexView, q_coords: np.ndarray, q_vals: np.ndarray,
 
 
 def recall_at_k(approx_ids: np.ndarray, exact_ids: np.ndarray) -> float:
-    """The paper's 'accuracy': |approx ∩ exact| / k."""
-    a = set(int(x) for x in np.asarray(approx_ids).reshape(-1) if x >= 0)
-    e = set(int(x) for x in np.asarray(exact_ids).reshape(-1))
-    return len(a & e) / max(len(e), 1)
+    """The paper's 'accuracy': |approx ∩ exact| / k.
+
+    Delegates to the shared :func:`repro.obs.quality.recall_at_k`
+    (kept here as the historical import path; lazy import so the core
+    oracle stays importable without the obs package loaded first).
+    """
+    from repro.obs.quality import recall_at_k as impl
+    return impl(approx_ids, exact_ids)

@@ -33,6 +33,8 @@ from repro.obs.device import DeviceAccounting
 from repro.obs.exporters import (ObsHTTPServer, parse_prometheus_text,
                                  prometheus_text, start_exporter,
                                  write_jsonl_snapshot)
+from repro.obs.quality import (FUNNEL_STAGES, ShadowAuditor, per_query_recall,
+                               recall_at_k, sample_stats, wilson_interval)
 from repro.obs.registry import (Counter, Family, Gauge, Histogram,
                                 MetricsRegistry)
 from repro.obs.trace import (Span, Trace, Tracer, chrome_trace,
@@ -42,11 +44,14 @@ from repro.obs.trace import (Span, Trace, Tracer, chrome_trace,
 @dataclasses.dataclass
 class Observability:
     """One server's observability bundle: metric sink + tracer +
-    sampling policy. Build with :meth:`create`."""
+    sampling policy (+ optionally the quality plane's auditor, which
+    servers pick up and feed sampled requests). Build with
+    :meth:`create`."""
 
     registry: MetricsRegistry
     tracer: Tracer | None = None
     stage_sample_every: int = 128
+    auditor: ShadowAuditor | None = None
 
     @classmethod
     def create(cls, *, trace_capacity: int = 256,
@@ -71,4 +76,6 @@ __all__ = [
     "prometheus_text", "parse_prometheus_text", "write_jsonl_snapshot",
     "ObsHTTPServer", "start_exporter",
     "DeviceAccounting",
+    "ShadowAuditor", "recall_at_k", "per_query_recall", "wilson_interval",
+    "sample_stats", "FUNNEL_STAGES",
 ]

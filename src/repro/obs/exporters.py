@@ -7,6 +7,11 @@ replica load balancer scrapes::
     /metrics        Prometheus text exposition of the registry
     /snapshot.json  the registry's plain-dict snapshot
     /traces         Chrome trace-event JSON of the tracer's ring buffer
+    /healthz        liveness probe: always 200 {"status": "ok"} (what a
+                    replica load balancer polls)
+    /quality.json   the quality plane's snapshot (live recall + Wilson
+                    interval, SLO state, loss funnel, drift) when a
+                    ``quality`` provider is attached
 
 ``parse_prometheus_text`` exists so tests (and the report CLI) can
 assert on the *exported* surface, not on registry internals — the
@@ -148,9 +153,10 @@ class ObsHTTPServer:
 
     def __init__(self, registry: MetricsRegistry,
                  tracer: Tracer | None = None, *, host: str = "127.0.0.1",
-                 port: int = 0):
+                 port: int = 0, quality=None):
         self.registry = registry
         self.tracer = tracer
+        self.quality = quality   # zero-arg callable -> JSON-able dict
         outer = self
 
         class Handler(BaseHTTPRequestHandler):
@@ -163,6 +169,13 @@ class ObsHTTPServer:
                     ctype = "application/json"
                 elif self.path == "/traces" and outer.tracer is not None:
                     body = json.dumps(outer.tracer.export_chrome())
+                    ctype = "application/json"
+                elif self.path == "/healthz":
+                    body = json.dumps({"status": "ok"})
+                    ctype = "application/json"
+                elif self.path == "/quality.json" \
+                        and outer.quality is not None:
+                    body = json.dumps(outer.quality())
                     ctype = "application/json"
                 else:
                     self.send_error(404)
@@ -203,9 +216,13 @@ class ObsHTTPServer:
 
 def start_exporter(registry: MetricsRegistry,
                    tracer: Tracer | None = None, *,
-                   host: str = "127.0.0.1", port: int = 0) -> ObsHTTPServer:
-    """Start the background metrics/trace HTTP endpoint."""
-    return ObsHTTPServer(registry, tracer, host=host, port=port)
+                   host: str = "127.0.0.1", port: int = 0,
+                   quality=None) -> ObsHTTPServer:
+    """Start the background metrics/trace HTTP endpoint. ``quality``
+    is a zero-arg callable returning a JSON-serializable dict (e.g.
+    ``ShadowAuditor.snapshot``), served at ``/quality.json``."""
+    return ObsHTTPServer(registry, tracer, host=host, port=port,
+                         quality=quality)
 
 
 __all__ = ["prometheus_text", "parse_prometheus_text",

@@ -1,15 +1,19 @@
 """Human-readable rendering of the obs surfaces — `python -m
-repro.obs.report` prints a metrics-snapshot table and the top-N
-slowest traces with their per-stage breakdown.
+repro.obs.report` prints a metrics-snapshot table, the top-N slowest
+traces with their per-stage breakdown, and the quality plane's
+recall/funnel report.
 
     PYTHONPATH=src python -m repro.obs.report \
-        [--snapshot obs_snapshots.jsonl] [--traces traces.json] [--top 5]
+        [--snapshot obs_snapshots.jsonl] [--traces traces.json] \
+        [--quality quality.json] [--top 5]
 
 ``--snapshot`` takes a JSONL file written by
 :func:`repro.obs.exporters.write_jsonl_snapshot` (the LAST line is
 rendered); ``--traces`` a Chrome trace-event JSON file (as exported by
-``Tracer.export_chrome`` / the ``/traces`` endpoint). Both renderers
-are importable so the serving example and tests reuse them.
+``Tracer.export_chrome`` / the ``/traces`` endpoint); ``--quality`` a
+``ShadowAuditor.snapshot()`` JSON file (as served at
+``/quality.json``). All renderers are importable so the serving
+example and tests reuse them.
 """
 from __future__ import annotations
 
@@ -94,6 +98,45 @@ def slowest_traces_table(chrome: dict, n: int = 5) -> str:
     return "\n".join(lines) if lines else "(no traces)"
 
 
+def funnel_table(quality: dict) -> str:
+    """Render a ``ShadowAuditor.snapshot()`` dict as a text report:
+    live recall with its Wilson interval, the SLO verdict, and the
+    per-stage loss funnel (share of attributed misses per stage)."""
+    win = quality.get("window", {})
+    target = quality.get("target")
+    lines = [
+        f"live recall@{quality.get('k')}: "
+        f"{win.get('live_recall', 0.0):.4f}  "
+        f"wilson=[{win.get('wilson_lo', 0.0):.4f}, "
+        f"{win.get('wilson_hi', 1.0):.4f}]  "
+        f"({win.get('trials', 0)} trials / "
+        f"{win.get('audited', 0)} audited)",
+        f"SLO: {quality.get('slo_state', 'ok')}"
+        + (f"  (target {target:.3f})" if target is not None
+           else "  (no target attached)"),
+        f"audits={quality.get('audits', 0)}  "
+        f"dropped={quality.get('dropped', 0)}  "
+        f"errors={quality.get('errors', 0)}",
+    ]
+    loss = quality.get("loss", {})
+    misses = quality.get("misses", 0)
+    total = sum(loss.values())
+    lines.append(f"loss funnel ({misses} attributed misses):")
+    for stage in ("router", "selector", "scorer", "refine"):
+        cnt = loss.get(stage, 0)
+        share = cnt / total if total else 0.0
+        bar = "#" * round(share * 40)
+        lines.append(f"  {stage:<9} {cnt:>6}  {share:>6.1%}  {bar}")
+    drift = quality.get("drift")
+    if drift is not None:
+        lines.append(
+            f"drift: nnz x{drift['nnz_ratio']:.3f}  "
+            f"l1 x{drift['l1_ratio']:.3f}  "
+            f"topcoord_tv={drift['topcoord_tv']:.3f}  "
+            f"in_sample={drift['in_sample']:.2f}")
+    return "\n".join(lines)
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         prog="python -m repro.obs.report",
@@ -102,11 +145,15 @@ def main(argv=None) -> int:
                     help="JSONL snapshot file (last line is rendered)")
     ap.add_argument("--traces", default=None,
                     help="Chrome trace-event JSON file")
+    ap.add_argument("--quality", default=None,
+                    help="ShadowAuditor snapshot JSON file "
+                         "(the /quality.json payload)")
     ap.add_argument("--top", type=int, default=5,
                     help="slowest traces to show (default 5)")
     args = ap.parse_args(argv)
-    if not args.snapshot and not args.traces:
-        ap.error("nothing to do: pass --snapshot and/or --traces")
+    if not args.snapshot and not args.traces and not args.quality:
+        ap.error("nothing to do: pass --snapshot, --traces and/or "
+                 "--quality")
     if args.snapshot:
         with open(args.snapshot, encoding="utf-8") as f:
             lines = [ln for ln in f.read().splitlines() if ln.strip()]
@@ -122,6 +169,18 @@ def main(argv=None) -> int:
             chrome = json.load(f)
         print(f"== top {args.top} slowest traces ({args.traces}) ==")
         print(slowest_traces_table(chrome, args.top))
+    if args.quality:
+        with open(args.quality, encoding="utf-8") as f:
+            quality = json.load(f)
+        # either a bare ShadowAuditor.snapshot() or an artifact that
+        # wraps several (e.g. serving_load's {"tuned": ..., "mistuned":
+        # ...} obs_quality.json) — render every snapshot found
+        sections = [("", quality)] if "window" in quality else \
+            [(f" [{k}]", v) for k, v in quality.items()
+             if isinstance(v, dict) and "window" in v]
+        for tag, snap in sections:
+            print(f"== quality plane ({args.quality}{tag}) ==")
+            print(funnel_table(snap))
     return 0
 
 

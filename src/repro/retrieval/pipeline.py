@@ -105,7 +105,8 @@ def run_pipeline_staged(index: SeismicIndex, q_coords: jax.Array,
                         span_cb: Callable[[str, float, float], None]
                         | None = None,
                         split_refine: bool = False,
-                        probe: Callable[[str, object], None] | None = None
+                        probe: Callable[[str, object], None] | None = None,
+                        audit: bool = False
                         ) -> tuple[jax.Array, jax.Array, jax.Array]:
     """Stage-by-stage pipeline with per-stage wall-time reporting.
 
@@ -116,11 +117,15 @@ def run_pipeline_staged(index: SeismicIndex, q_coords: jax.Array,
     ``refine_round_<j>`` intervals are reported to ``span_cb`` (nested
     inside the ``refine`` interval) — identical results, one extra jit
     boundary per round. ``probe(name, value)`` exposes chosen
-    intermediates (currently ``("cand", scorer candidate ids)``) to
-    device accounting without changing any dataflow. Pass a prebuilt
-    ``fns`` (from ``stage_fns``) to reuse compiled stages across
-    calls; fixed input shapes never recompile. Output matches
-    ``search_pipeline``.
+    intermediates (``("cand", scorer candidate ids)``) to device
+    accounting without changing any dataflow; with ``audit`` the probe
+    additionally receives the per-stage membership captures the
+    quality-plane loss funnel attributes misses from — ``lists``
+    (probed coordinates), ``router_r`` (flat block summary scores,
+    -inf = unrouted), and ``merge_ids`` (pre-refine merged top-k).
+    Pass a prebuilt ``fns`` (from ``stage_fns``) to reuse compiled
+    stages across calls; fixed input shapes never recompile. Output
+    matches ``search_pipeline``.
     """
     if fns is None:
         fns = stage_fns(index, p)
@@ -141,7 +146,12 @@ def run_pipeline_staged(index: SeismicIndex, q_coords: jax.Array,
     cand, scores = timed("scorer", fns["scorer"], batch, sel)
     if probe is not None:
         probe("cand", cand)
+        if audit:
+            probe("lists", lists)
+            probe("router_r", batch.r)
     top_s, top_ids, ev = timed("merge", fns["merge"], cand, scores)
+    if audit and probe is not None:
+        probe("merge_ids", top_ids)
     if not (split_refine and p.refine_rounds > 0 and p.graph_degree > 0):
         return timed("refine", fns["refine"], q_dense, top_s, top_ids, ev)
     # round-by-round refine: same ops as refine_batch, one jit boundary

@@ -119,6 +119,13 @@ class AsyncSeismicServer:
                   and ``telemetry`` is not, the telemetry facade
                   writes into the bundle's registry so one scrape
                   sees everything.
+    auditor       a ``repro.obs.ShadowAuditor`` (defaults to
+                  ``obs.auditor``): every ``audit_sample_every``-th
+                  served request is copied off the hot path for
+                  shadow-oracle recall auditing; audited launches run
+                  the staged pipeline with funnel captures and carry
+                  an ``audit`` span. The auditor's worker lifecycle is
+                  the owner's (start it or its queue sheds).
     deadline_grace_s  slack before a dispatch past its deadline counts
                   as a deadline MISS (deadline-triggered dispatches
                   legitimately run a hair past it; a miss means the
@@ -134,7 +141,8 @@ class AsyncSeismicServer:
                  admission: str = "reject", cache_size: int = 0,
                  coalesce: bool = True, stage_timing: bool = False,
                  telemetry: ServerTelemetry | None = None,
-                 obs=None, deadline_grace_s: float = 1e-3):
+                 obs=None, auditor=None,
+                 deadline_grace_s: float = 1e-3):
         validate_refine_params(index, params)   # fail before threads spin
         from repro.tune.policy import validate_tuned_index
         validate_tuned_index(index)             # stale TunedPolicy -> now
@@ -170,7 +178,11 @@ class AsyncSeismicServer:
             self.telemetry = ServerTelemetry(
                 registry=obs.registry if obs is not None else None)
         self._tracer = obs.tracer if obs is not None else None
-        staged_wanted = stage_timing or (
+        self.auditor = auditor if auditor is not None \
+            else getattr(obs, "auditor", None)
+        # an auditor needs the staged programs compiled: audited
+        # launches run staged to capture the funnel's memberships
+        staged_wanted = stage_timing or self.auditor is not None or (
             obs is not None and obs.stage_sample_every > 0)
         self._fns = stage_fns(index, params) if staged_wanted else None
         self._device = None
@@ -446,13 +458,15 @@ class AsyncSeismicServer:
         return coords, vals
 
     def _execute(self, index, fns, coords: np.ndarray, vals: np.ndarray,
-                 staged: bool, delay_s: float = 0.0):
+                 staged: bool, delay_s: float = 0.0, *,
+                 audit: bool = False):
         """One pipeline execution against ``index``; returns host arrays
         plus wall-time bounds and (staged only) per-stage span triples.
 
         ``delay_s`` injects artificial per-launch latency INSIDE the
         timed window (replica benchmarks / balancer tests: the EWMA
-        must see it)."""
+        must see it). ``audit`` (staged only) additionally probes the
+        funnel's membership captures for the shadow auditor."""
         tel = self.telemetry
         triples: list[tuple[str, float, float]] = []
         probed: dict[str, object] = {}
@@ -465,7 +479,8 @@ class AsyncSeismicServer:
                 self.params, fns=fns,
                 record=lambda s, dt: tel.record_latency(f"stage_{s}", dt),
                 span_cb=lambda name, a, b: triples.append((name, a, b)),
-                split_refine=True, probe=probed.__setitem__)
+                split_refine=True, probe=probed.__setitem__,
+                audit=audit)
         else:
             scores, ids, ev = jax.block_until_ready(search_pipeline(
                 index,
@@ -513,28 +528,42 @@ class AsyncSeismicServer:
         tel.inc(f"launch_width_{width}")
         tel.inc("dispatched", n)
         seq = self._next_seq()
-        staged = self.stage_timing or (
-            (fns is not None or self._fns is not None)
+        audit_rows = self.auditor.plan(n) if self.auditor is not None \
+            else ()
+        have_fns = fns is not None or self._fns is not None
+        capture = bool(audit_rows) and have_fns
+        staged = self.stage_timing or capture or (
+            have_fns
             and self.obs is not None and self.obs.sample_stages(seq))
         coords, vals = self._pack(batch, width)
         dispatch_t = time.monotonic()
         ids, scores, ev, t0, t1, triples, probed = self._execute(
             self.index if index is None else index,
             self._fns if fns is None else fns,
-            coords, vals, staged, delay_s)
+            coords, vals, staged, delay_s, audit=capture)
         tel.record_latency("launch", t1 - t0)
         if on_timing is not None:
             on_timing(t1 - t0,
                       {name: b - a for name, a, b in triples})
         self._account(n, width, ev, staged, triples, probed)
+        audit_span = None
+        if audit_rows:
+            a0 = time.monotonic()
+            for i in audit_rows:
+                self.auditor.feed(coords[i], vals[i], ids[i],
+                                  captures=probed if capture else None,
+                                  row=i)
+            audit_span = (a0, time.monotonic())
         self._fulfil(batch, ids, scores, ev, dispatch_t=dispatch_t,
                      t1=t1, width=width, seq=seq, staged=staged,
-                     triples=triples, span_attrs=span_attrs)
+                     triples=triples, span_attrs=span_attrs,
+                     audit_span=audit_span)
 
     def _fulfil(self, batch: list[Request], ids: np.ndarray,
                 scores: np.ndarray, ev: np.ndarray, *, dispatch_t: float,
                 t1: float, width: int, seq: int, staged: bool,
-                triples=(), span_attrs: dict | None = None) -> None:
+                triples=(), span_attrs: dict | None = None,
+                audit_span: tuple[float, float] | None = None) -> None:
         """Fulfil every request (and coalesced follower) of a batch from
         the launch's result rows; closes caches, histograms, spans."""
         tel = self.telemetry
@@ -565,6 +594,11 @@ class AsyncSeismicServer:
                 if r is leader and staged:
                     attach_stage_spans(self._tracer, r.trace,
                                        launch_span, triples)
+                # likewise the audit feed (one per launch): root-level
+                # on the leader, it runs after the launch window
+                if r is leader and audit_span is not None:
+                    self._tracer.add_span(r.trace, "audit",
+                                          audit_span[0], audit_span[1])
             # retire from the in-flight map BEFORE fulfilling: once the
             # followers snapshot is taken no new duplicate can attach
             # to this slot (they re-enter as cache hits / new primaries)

@@ -79,7 +79,8 @@ class SeismicServer:
 
     def __init__(self, index: SeismicIndex, params: SearchParams,
                  max_batch: int = 256, *,
-                 telemetry: ServerTelemetry | None = None, obs=None):
+                 telemetry: ServerTelemetry | None = None, obs=None,
+                 auditor=None):
         from repro.graph.refine import validate_refine_params
         from repro.tune.policy import validate_tuned_index
         validate_refine_params(index, params)   # fail before first launch
@@ -91,24 +92,30 @@ class SeismicServer:
             telemetry = ServerTelemetry(registry=obs.registry)
         self.telemetry = telemetry
         self.obs = obs
+        self.auditor = auditor if auditor is not None \
+            else getattr(obs, "auditor", None)
         self._fns = None
         self._device = None
-        if obs is not None and obs.stage_sample_every > 0:
-            from repro.obs.device import DeviceAccounting
+        need_staged = self.auditor is not None or (
+            obs is not None and obs.stage_sample_every > 0)
+        if need_staged:
             from repro.retrieval.pipeline import stage_fns
             self._fns = stage_fns(index, params)
+        if obs is not None and obs.stage_sample_every > 0:
+            from repro.obs.device import DeviceAccounting
             self._device = DeviceAccounting(index, params,
                                             self.telemetry.registry)
         self._launch_seq = 0
 
-    def _search_staged(self, chunk: PaddedSparse, n_real: int):
-        """One sampled chunk through the staged pipeline: emits a
-        ``launch`` trace with per-stage (and per-refine-round) child
-        spans and feeds device accounting. Bit-exact with the fused
-        path."""
+    def _search_staged(self, chunk: PaddedSparse, n_real: int,
+                       audit_rows: tuple[int, ...] = ()):
+        """One sampled (or audited) chunk through the staged pipeline:
+        emits a ``launch`` trace with per-stage (and per-refine-round)
+        child spans, feeds device accounting, and feeds the shadow
+        auditor the planned rows. Bit-exact with the fused path."""
         from repro.retrieval.pipeline import run_pipeline_staged
         from repro.serve.batcher import attach_stage_spans
-        tracer = self.obs.tracer
+        tracer = self.obs.tracer if self.obs is not None else None
         triples: list[tuple[str, float, float]] = []
         probed: dict[str, object] = {}
         tel = self.telemetry
@@ -119,14 +126,28 @@ class SeismicServer:
             record=(lambda s, dt: tel.record_latency(f"stage_{s}", dt))
             if tel is not None else None,
             span_cb=lambda name, a, b: triples.append((name, a, b)),
-            split_refine=True, probe=probed.__setitem__)
+            split_refine=True, probe=probed.__setitem__,
+            audit=bool(audit_rows))
         t1 = time.monotonic()
+        a_span = None
+        if audit_rows:
+            coords = np.asarray(chunk.coords)
+            vals = np.asarray(chunk.vals)
+            ids = np.asarray(out[1])
+            a0 = time.monotonic()
+            for i in audit_rows:
+                self.auditor.feed(coords[i], vals[i], ids[i],
+                                  captures=probed, row=i)
+            a_span = (a0, time.monotonic())
         if tracer is not None:
             tr = tracer.start_trace("launch", t0,
                                     width=chunk.coords.shape[0],
                                     occupancy=n_real, sync=True)
             attach_stage_spans(tracer, tr, tr.root, triples)
-            tracer.end_trace(tr, t1, status="done")
+            if a_span is not None:
+                tracer.add_span(tr, "audit", a_span[0], a_span[1])
+            tracer.end_trace(tr, a_span[1] if a_span is not None else t1,
+                             status="done")
         if self._device is not None:
             stage_seconds = {name: b - a for name, a, b in triples}
             self._device.observe(stage_seconds, chunk.coords.shape[0],
@@ -152,9 +173,14 @@ class SeismicServer:
                                  q.vals[s:s + self.max_batch], q.dim)
             seq = self._launch_seq
             self._launch_seq += 1
-            if self._fns is not None and self.obs.sample_stages(seq):
-                out, dt = self._search_staged(chunk,
-                                              min(self.max_batch, n - s))
+            n_chunk = min(self.max_batch, n - s)
+            audit_rows = self.auditor.plan(n_chunk) \
+                if self.auditor is not None else ()
+            sampled = (self.obs is not None
+                       and self.obs.sample_stages(seq))
+            if self._fns is not None and (sampled or audit_rows):
+                out, dt = self._search_staged(chunk, n_chunk,
+                                              audit_rows)
                 if self.telemetry is not None:
                     self.telemetry.record_latency("launch", dt)
                     self.telemetry.inc("batches")

@@ -385,8 +385,22 @@ class ReplicaSeismicServer(AsyncSeismicServer):
         t1 = time.monotonic()
         tel.record_latency("launch", t1 - job.t0_min)
         self._account(n, job.width, ev, False, (), {})
+        # shard-mode audits are recall-only (no funnel captures: shard
+        # launches run fused, and memberships are per-shard anyway);
+        # the auditor must be built over the FULL corpus index so its
+        # oracle sees the same doc-id space as the merged top-k
+        audit_span = None
+        if self.auditor is not None:
+            rows = self.auditor.plan(n)
+            if rows:
+                a0 = time.monotonic()
+                for i in rows:
+                    self.auditor.feed(job.coords[i], job.vals[i],
+                                      top_ids[i], captures=None, row=i)
+                audit_span = (a0, time.monotonic())
         self._fulfil(job.batch, top_ids, top_s, ev,
                      dispatch_t=job.dispatch_t, t1=t1, width=job.width,
                      seq=job.seq, staged=False,
                      span_attrs={"replica": "shard-merge",
-                                 "n_shards": self.n_replicas})
+                                 "n_shards": self.n_replicas},
+                     audit_span=audit_span)

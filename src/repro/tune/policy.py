@@ -106,6 +106,34 @@ def sample_fingerprint(coords, vals) -> str:
     return hashlib.sha256(b"".join(rows)).hexdigest()[:16]
 
 
+def row_digest(coords_row, vals_row) -> bytes:
+    """Canonical digest of ONE padded-sparse query row.
+
+    Unlike :func:`sample_fingerprint`'s raw-bytes row hash (kept
+    byte-stable for persisted policies), this canonicalizes first —
+    dtypes pinned to i32/f32, padding coordinates zeroed, entries
+    sorted by (coord, val) — so a query digests identically however
+    its nnz entries are ordered or padded. The quality plane's drift
+    sketch uses these to test served queries for literal membership in
+    the tuning sample.
+    """
+    c = np.asarray(coords_row, np.int32).reshape(-1)
+    v = np.asarray(vals_row, np.float32).reshape(-1)
+    c = np.where(v > 0, c, 0)
+    v = np.where(v > 0, v, 0.0).astype(np.float32)
+    order = np.lexsort((v, c))
+    c = np.ascontiguousarray(c[order])
+    v = np.ascontiguousarray(v[order])
+    return hashlib.sha256(c.tobytes() + v.tobytes()).digest()
+
+
+def row_digests(coords, vals) -> list[bytes]:
+    """Per-row :func:`row_digest` over a [Q, nnz] padded sample."""
+    c = np.asarray(coords)
+    v = np.asarray(vals)
+    return [row_digest(c[i], v[i]) for i in range(c.shape[0])]
+
+
 def attach_tuned(index, policies) -> "SeismicIndex":  # noqa: F821
     """Return the index carrying ``policies`` (sorted by target then
     cost, so the persisted tuple is deterministic regardless of tuning

@@ -117,9 +117,8 @@ def default_grid(index: SeismicIndex, *, k: int = 10, cut: int = 8
 
 
 def _per_query_recall(ids: np.ndarray, exact_ids: np.ndarray) -> np.ndarray:
-    from repro.core.oracle import recall_at_k
-    return np.array([recall_at_k(ids[q], exact_ids[q])
-                     for q in range(ids.shape[0])])
+    from repro.obs.quality import per_query_recall
+    return per_query_recall(ids, exact_ids)
 
 
 def measure_point(index: SeismicIndex, queries: PaddedSparse,

@@ -1,0 +1,375 @@
+"""Quality-observability plane: the consolidated recall implementation,
+oracle parity, Wilson/SLO semantics, doc->block membership, the
+per-stage loss-attribution funnel (total over misses), the shadow
+auditor end to end through the async server, and the /quality.json +
+/healthz endpoint contract.
+"""
+import json
+import urllib.request
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core.baselines import exact_search
+from repro.core.build import doc_block_map
+from repro.core.oracle import exact_topk
+from repro.data import SyntheticSparseConfig, make_collection
+from repro.obs import (Observability, ShadowAuditor, per_query_recall,
+                       recall_at_k, sample_stats, start_exporter,
+                       validate_trace, wilson_interval)
+from repro.obs.quality import FUNNEL_STAGES, _OracleView
+from repro.obs.registry import MetricsRegistry
+from repro.retrieval import SearchParams
+from repro.retrieval.pipeline import run_pipeline_staged, stage_fns
+from repro.serve import AsyncSeismicServer
+from repro.sparse.ops import PaddedSparse
+
+
+def _params(**kw):
+    kw.setdefault("k", 5)
+    kw.setdefault("cut", 8)
+    kw.setdefault("block_budget", 8)
+    return SearchParams(**kw)
+
+
+def _exact_ids(idx, coords, vals, k):
+    """Per-query oracle ids through the SAME forward plane the auditor
+    scores (dequantized when fwd_quant is on)."""
+    view = _OracleView(idx)
+    out = []
+    for i in range(coords.shape[0]):
+        _, eids = exact_topk(view.fwd_coords, view.fwd_vals, view.dim,
+                             np.asarray(coords[i]), np.asarray(vals[i]),
+                             k)
+        out.append(eids)
+    return np.stack(out)
+
+
+# ------------------------------------------------- consolidated recall
+
+def test_recall_sentinels_ties_duplicates():
+    # -1 padding dropped from BOTH sides; duplicates collapse (sets)
+    assert recall_at_k([1, 2, -1, 2], [1, 3, -1]) == pytest.approx(0.5)
+    # ties are not forgiven: right score, wrong id is a miss
+    assert recall_at_k([4], [5]) == 0.0
+    # empty oracle row -> 0.0, never a ZeroDivisionError
+    assert recall_at_k([1, 2], [-1, -1]) == 0.0
+    assert recall_at_k([1, 2, 3], [3, 2, 1]) == 1.0
+
+
+def test_recall_single_implementation():
+    """Satellite: core.oracle and tune.sweep delegate to the one shared
+    implementation in repro.obs.quality."""
+    from repro.core import oracle
+    from repro.tune.sweep import _per_query_recall
+    cases = [([1, 2, -1], [2, 3]), ([0], [0]), ([5, 5], [5, 6, -1])]
+    for a, e in cases:
+        assert oracle.recall_at_k(np.array(a), np.array(e)) \
+            == recall_at_k(a, e)
+    ids = np.array([[1, 2], [3, -1]])
+    eids = np.array([[2, 4], [3, 5]])
+    np.testing.assert_array_equal(_per_query_recall(ids, eids),
+                                  per_query_recall(ids, eids))
+    np.testing.assert_array_equal(per_query_recall(ids, eids),
+                                  [0.5, 0.5])
+
+
+def test_wilson_interval_properties():
+    assert wilson_interval(0, 0) == (0.0, 1.0)
+    for s, n in [(0, 10), (10, 10), (7, 10), (93, 100), (1, 2)]:
+        lo, hi = wilson_interval(s, n)
+        assert 0.0 <= lo <= s / n <= hi <= 1.0
+    # the interval tightens as evidence accumulates at fixed p
+    lo1, hi1 = wilson_interval(9, 10)
+    lo2, hi2 = wilson_interval(900, 1000)
+    assert hi2 - lo2 < hi1 - lo1
+    # higher z -> wider interval
+    lo_s, hi_s = wilson_interval(7, 10, z=1.0)
+    lo_w, hi_w = wilson_interval(7, 10, z=2.58)
+    assert lo_w < lo_s and hi_w > hi_s
+
+
+# ------------------------------------------------------- oracle parity
+
+def test_exact_topk_matches_exact_search_baseline():
+    """Satellite: the auditor's numpy oracle pins the jitted brute-force
+    baseline across several synthetic collections."""
+    k = 10
+    for seed in (0, 3, 11):
+        cfg = SyntheticSparseConfig(dim=512, n_docs=256, n_queries=4,
+                                    doc_nnz=32, query_nnz=12,
+                                    n_topics=8, topic_coords=64,
+                                    seed=seed)
+        docs_np, queries_np, _ = make_collection(cfg)
+        docs = PaddedSparse(jnp.asarray(docs_np.coords),
+                            jnp.asarray(docs_np.vals), docs_np.dim)
+        queries = PaddedSparse(jnp.asarray(queries_np.coords),
+                               jnp.asarray(queries_np.vals),
+                               queries_np.dim)
+        b_scores, b_ids = exact_search(docs, queries, k)
+        b_scores, b_ids = np.asarray(b_scores), np.asarray(b_ids)
+        for i in range(queries_np.coords.shape[0]):
+            scores, ids = exact_topk(docs_np.coords,
+                                     docs_np.vals.astype(np.float64),
+                                     docs_np.dim, queries_np.coords[i],
+                                     queries_np.vals[i], k)
+            np.testing.assert_allclose(scores, b_scores[i],
+                                       rtol=1e-5, atol=1e-5)
+            # id SETS must agree whenever the k-th score is isolated
+            # (f32 vs f64 may break exact ties differently)
+            full = np.zeros(docs_np.dim, np.float64)
+            np.add.at(full, queries_np.coords[i],
+                      queries_np.vals[i].astype(np.float64))
+            all_scores = (full[docs_np.coords] * docs_np.vals).sum(-1)
+            kth = np.sort(all_scores)[::-1][k - 1:k + 1]
+            if kth[0] - kth[1] > 1e-5:
+                assert set(ids.tolist()) == set(b_ids[i].tolist())
+
+
+# ------------------------------------------------- doc->block membership
+
+def test_doc_block_map_matches_direct_scan(small_index):
+    idx, _ = small_index
+    indptr, mem_lists, mem_blocks = doc_block_map(idx)
+    assert indptr.shape == (idx.n_docs + 1,)
+    got = set()
+    for d in range(idx.n_docs):
+        for j in range(int(indptr[d]), int(indptr[d + 1])):
+            got.add((d, int(mem_lists[j]), int(mem_blocks[j])))
+    docs = np.asarray(idx.list_docs)
+    lens = np.asarray(idx.list_len)
+    off = np.asarray(idx.block_off)
+    blen = np.asarray(idx.block_len)
+    want = set()
+    for ell in range(docs.shape[0]):
+        for b in range(off.shape[1]):
+            for p in range(int(off[ell, b]),
+                           int(off[ell, b]) + int(blen[ell, b])):
+                if p < int(lens[ell]) and int(docs[ell, p]) < idx.n_docs:
+                    want.add((int(docs[ell, p]), ell, b))
+    assert got == want
+
+
+# ---------------------------------------------------------- the funnel
+
+def test_funnel_attribution_total_over_misses(small_index,
+                                              small_collection):
+    """Every missed oracle doc lands in exactly one stage bucket, so
+    the funnel sums to the miss count — with and without refinement."""
+    from repro.graph import build_doc_graph
+    idx, _ = small_index
+    _, queries, *_ = small_collection
+    graph_idx = build_doc_graph(idx, degree=4, batch=256)
+    # starve the budget so the funnel has real losses to attribute
+    for index, p in [(idx, _params(cut=4, block_budget=2)),
+                     (graph_idx, _params(cut=4, block_budget=2,
+                                         graph_degree=4,
+                                         refine_rounds=1))]:
+        aud = ShadowAuditor(index, p, MetricsRegistry(),
+                            audit_sample_every=1)
+        probed = {}
+        out = run_pipeline_staged(index, queries.coords, queries.vals,
+                                  p, fns=stage_fns(index, p),
+                                  probe=probed.__setitem__, audit=True)
+        ids = np.asarray(out[1])
+        for i in range(queries.coords.shape[0]):
+            aud.audit_once(np.asarray(queries.coords[i]),
+                           np.asarray(queries.vals[i]), ids[i],
+                           captures=probed, row=i)
+        snap = aud.snapshot()
+        assert snap["misses"] > 0          # the starved budget must bite
+        assert set(snap["loss"]) == set(FUNNEL_STAGES)
+        assert sum(snap["loss"].values()) == snap["misses"]
+        # windowed live recall agrees with the offline computation
+        exact = _exact_ids(index, np.asarray(queries.coords),
+                           np.asarray(queries.vals), p.k)
+        offline = float(np.mean(per_query_recall(ids, exact)))
+        assert snap["window"]["live_recall"] == pytest.approx(offline)
+
+
+# ----------------------------------------------------- auditor machine
+
+def test_plan_cadence_is_global():
+    aud = ShadowAuditor.__new__(ShadowAuditor)   # cadence logic only
+    import threading
+    aud.audit_sample_every = 4
+    aud._lock = threading.Lock()
+    aud._served = 0
+    assert aud.plan(3) == (0,)     # global index 0
+    assert aud.plan(3) == (1,)     # global index 4
+    assert aud.plan(3) == (2,)     # global index 8
+    assert aud.plan(3) == ()       # 9..11: nothing due
+    assert aud.plan(5) == (0, 4)   # global indices 12 and 16
+    assert aud.plan(0) == ()
+
+
+def test_slo_state_machine(small_index, small_collection):
+    idx, _ = small_index
+    _, queries, *_ = small_collection
+    c = np.asarray(queries.coords[0])
+    v = np.asarray(queries.vals[0])
+    k = 10
+    (eids,) = _exact_ids(idx, c[None], v[None], k)
+
+    # hits == trials -> ok
+    ok = ShadowAuditor(idx, _params(k=k), MetricsRegistry(), target=0.95)
+    ok.audit_once(c, v, eids)
+    assert ok.slo_state == "ok"
+
+    # live below target but Wilson interval still straddles it -> warn
+    warn = ShadowAuditor(idx, _params(k=k), MetricsRegistry(),
+                         target=0.95)
+    near = eids.copy()
+    near[0] = -1                               # 9/10 hits
+    warn.audit_once(c, v, near)
+    st = warn.window_stats()
+    assert st["live_recall"] < 0.95 < st["wilson_hi"]
+    assert warn.slo_state == "warn"
+
+    # total miss -> the upper bound drops below target -> breach
+    breach = ShadowAuditor(idx, _params(k=k), MetricsRegistry(),
+                           target=0.95)
+    breach.audit_once(c, v, np.full(k, -1))
+    assert breach.window_stats()["wilson_hi"] < 0.95
+    assert breach.slo_state == "breach"
+
+    # no target attached -> ok forever, even at zero recall
+    free = ShadowAuditor(idx, _params(k=k), MetricsRegistry())
+    assert free.target is None
+    free.audit_once(c, v, np.full(k, -1))
+    assert free.slo_state == "ok"
+
+
+def test_target_resolves_from_attached_tuned_policy(small_index):
+    from repro.tune.policy import TunedPolicy, attach_tuned
+    idx, _ = small_index
+    pol = TunedPolicy(target=0.9, k=5, cut=8, block_budget=8,
+                      policy="adaptive", measured_recall=0.95,
+                      measured_cost=50.0)
+    tuned = attach_tuned(idx, [pol])
+    aud = ShadowAuditor(tuned, _params(policy="adaptive"),
+                        MetricsRegistry())
+    assert aud.target == 0.9
+    other = ShadowAuditor(tuned, _params(policy="adaptive",
+                                         block_budget=16),
+                          MetricsRegistry())
+    assert other.target is None            # knobs differ -> no match
+
+
+def test_full_queue_sheds_never_blocks(small_index, small_collection):
+    idx, _ = small_index
+    _, queries, *_ = small_collection
+    c = np.asarray(queries.coords[0])
+    v = np.asarray(queries.vals[0])
+    aud = ShadowAuditor(idx, _params(), MetricsRegistry(),
+                        queue_bound=1)     # worker never started
+    ids = np.zeros(5, np.int64)
+    aud.feed(c, v, ids)
+    aud.feed(c, v, ids)                    # queue full -> shed, no block
+    aud.feed(c, v, ids)
+    snap = aud.snapshot()
+    assert snap["dropped"] == 2
+    assert snap["audits"] == 0
+
+
+def test_drift_reference_self_consistency(small_index, small_collection):
+    """Audited traffic drawn FROM the tuning sample shows no drift:
+    ratios 1, TV 0, in_sample 1."""
+    idx, _ = small_index
+    _, queries, *_ = small_collection
+    coords = np.asarray(queries.coords)
+    vals = np.asarray(queries.vals)
+    ref = sample_stats(coords, vals, idx.dim)
+    assert ref["n"] == coords.shape[0]
+    aud = ShadowAuditor(idx, _params(), MetricsRegistry(),
+                        reference=ref)
+    for i in range(coords.shape[0]):
+        aud.audit_once(coords[i], vals[i], np.zeros(5, np.int64))
+    d = aud.drift()
+    assert d["nnz_ratio"] == pytest.approx(1.0)
+    assert d["l1_ratio"] == pytest.approx(1.0)
+    assert d["topcoord_tv"] == pytest.approx(0.0)
+    assert d["in_sample"] == 1.0
+    # drift gauges exported only when a reference is attached
+    snap = aud.registry.snapshot()
+    assert "seismic_query_drift_in_sample" in snap
+    (s,) = snap["seismic_query_drift_in_sample"]["samples"]
+    assert s["value"] == 1.0
+
+
+# ------------------------------------------- served traffic, end to end
+
+def test_async_server_shadow_audit_end_to_end(small_index,
+                                              small_collection):
+    """Audit every request through the async server: live recall equals
+    the offline recall of the returned ids, misses attribute fully, the
+    audit span rides the request trace, and /quality.json + /healthz
+    serve the plane."""
+    idx, _ = small_index
+    _, queries, *_ = small_collection
+    coords = np.asarray(queries.coords)
+    vals = np.asarray(queries.vals)
+    n = coords.shape[0]
+    p = _params(cut=4, block_budget=2)     # starved -> nonzero funnel
+    obs = Observability.create(stage_sample_every=0)
+    obs.auditor = ShadowAuditor(idx, p, obs.registry,
+                                audit_sample_every=1,
+                                queue_bound=4 * n, window=4 * n)
+    srv = AsyncSeismicServer(idx, p, max_batch=8, query_nnz=16,
+                             deadline_s=1e-3, cache_size=0,
+                             coalesce=False, obs=obs)
+    results = []
+    with srv, obs.auditor:
+        for i in range(n):
+            results.append(srv.submit(coords[i], vals[i]).result(20.0))
+        obs.auditor.drain()
+        with start_exporter(obs.registry, obs.tracer,
+                            quality=obs.auditor.snapshot) as exp:
+            with urllib.request.urlopen(exp.url + "/healthz") as r:
+                assert r.status == 200
+                assert json.load(r) == {"status": "ok"}
+            with urllib.request.urlopen(exp.url + "/quality.json") as r:
+                assert r.status == 200
+                served = json.load(r)
+    snap = obs.auditor.snapshot()
+    assert snap["audits"] == n and snap["dropped"] == 0
+    assert snap["errors"] == 0
+    ids = np.stack([r.ids for r in results])
+    exact = _exact_ids(idx, coords, vals, p.k)
+    offline = float(np.mean(per_query_recall(ids, exact)))
+    assert snap["window"]["live_recall"] == pytest.approx(offline)
+    assert snap["misses"] > 0
+    assert sum(snap["loss"].values()) == snap["misses"]
+    # the endpoint serves the same plane (counters monotone between
+    # snapshot calls, structure identical)
+    assert served["k"] == p.k and served["audits"] <= snap["audits"]
+    assert set(served["loss"]) == set(FUNNEL_STAGES)
+    # loss counters reached the exported registry too
+    reg = obs.registry.snapshot()
+    loss_fam = reg["seismic_recall_loss_total"]["samples"]
+    by_stage = {s["labels"]["stage"]: s["value"] for s in loss_fam}
+    assert by_stage == {k: float(v) for k, v in snap["loss"].items()}
+    # every trace validates and carries an audit span on batch leaders
+    traces = obs.tracer.finished()
+    assert len(traces) == n
+    audit_spans = 0
+    for tr in traces:
+        validate_trace(tr)
+        audit_spans += sum(s.name == "audit" for s in tr.spans)
+    assert audit_spans >= 1
+
+
+def test_funnel_table_renders(small_index, small_collection):
+    from repro.obs.report import funnel_table
+    idx, _ = small_index
+    _, queries, *_ = small_collection
+    aud = ShadowAuditor(idx, _params(), MetricsRegistry(), target=0.9)
+    aud.audit_once(np.asarray(queries.coords[0]),
+                   np.asarray(queries.vals[0]), np.zeros(5, np.int64))
+    text = funnel_table(aud.snapshot())
+    assert "live recall@5" in text
+    assert "SLO:" in text and "target 0.900" in text
+    for stage in FUNNEL_STAGES:
+        assert stage in text
