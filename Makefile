@@ -1,7 +1,8 @@
 PY ?= python
 
 .PHONY: test test-fast bench bench-serving bench-replica bench-graph \
-	bench-tune bench-kernels bench-obs bench-audit bench-compare dev
+	bench-tune bench-kernels bench-obs bench-audit bench-mutation \
+	bench-compare dev
 
 dev:
 	$(PY) -m pip install -r requirements-dev.txt
@@ -52,10 +53,15 @@ bench-obs:
 bench-audit:
 	PYTHONPATH=src $(PY) -m benchmarks.serving_load --smoke --audit
 
+# streaming-mutation smoke: insert/compaction latency + recall-vs-fresh
+# ratio gates + delete-absence gate
+bench-mutation:
+	PYTHONPATH=src $(PY) -m benchmarks.mutation --smoke
+
 # regression sentinel: fresh artifacts vs committed baselines
 bench-compare:
 	PYTHONPATH=src $(PY) -m benchmarks.run \
-		--only serving_load,obs_overhead --smoke \
+		--only serving_load,obs_overhead,mutation --smoke \
 		--artifacts bench-artifacts
 	$(PY) -m benchmarks.compare --baseline benchmarks/baselines \
 		--fresh bench-artifacts

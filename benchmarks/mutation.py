@@ -1,0 +1,172 @@
+"""Streaming-mutation benchmark: grow an index from empty through the
+LSM tail (``repro.core.mutate``), timing insert throughput and
+compaction latency, and gating search quality against a fresh
+``build_index`` of the identical corpus.
+
+Protocol — one corpus, two arms:
+
+  * **fresh arm** — ``build_index`` over the full collection, the
+    quality ceiling the mutation path must track;
+  * **mutable arm** — ``MutableSeismicIndex.empty`` sized to the
+    corpus, grown chunk-by-chunk (chunk = ``tail_max``) with an
+    explicit timed ``compact()`` between chunks. Recall is measured
+    twice: *during* mutation (last chunk still live in the unblocked
+    tail — the state a server actually serves between compactions) and
+    *after* the final compaction (everything re-blocked).
+
+Gates (CI runs ``--smoke``):
+
+  * ``gate_recall_during`` / ``gate_recall_after`` — recall@10 of each
+    mutable-arm state must be >= ``RECALL_RATIO_GATE`` of the fresh
+    arm under the same adaptive budget. Tail docs are scored exactly,
+    so *during* usually matches or beats fresh; *after* exercises the
+    minor/major compaction summaries.
+  * ``gate_deleted_absent`` — after tombstoning a random 5% of docs,
+    no deleted id appears in any result, both before (mask-only) and
+    after (physical purge) the following compaction.
+
+Latency rows (insert docs/sec, compaction ms, full-rebuild ms for
+scale) are informational — single-thread CPU wall time, environment-
+sensitive, so the regression sentinel only warns on them.
+
+    PYTHONPATH=src python -m benchmarks.mutation [--smoke]
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import mean_recall, row
+from repro.core import SeismicConfig, build_index
+from repro.core.baselines import exact_search
+from repro.core.mutate import MutableSeismicIndex
+from repro.data import SyntheticSparseConfig, make_collection
+from repro.retrieval import SearchParams, search_pipeline
+from repro.sparse.ops import PaddedSparse
+
+RECALL_RATIO_GATE = 0.98
+
+FULL = SyntheticSparseConfig(dim=512, n_docs=3072, n_queries=64,
+                             doc_nnz=48, query_nnz=24, n_topics=32,
+                             topic_coords=128, seed=17)
+SMOKE = SyntheticSparseConfig(dim=256, n_docs=768, n_queries=32,
+                              doc_nnz=32, query_nnz=16, n_topics=16,
+                              topic_coords=64, seed=17)
+INDEX_FULL = SeismicConfig(lam=96, beta=8, alpha=0.4, block_cap=16,
+                           summary_nnz=32)
+INDEX_SMOKE = SeismicConfig(lam=64, beta=8, alpha=0.4, block_cap=16,
+                            summary_nnz=32)
+
+
+def _search_us(idx, queries, p):
+    """(ids, us-per-query) for one jitted batch search (post-warmup)."""
+    fn = jax.jit(lambda c, v: search_pipeline(
+        idx, PaddedSparse(c, v, idx.dim), p))
+    out = jax.block_until_ready(fn(queries.coords, queries.vals))
+    t0 = time.perf_counter()
+    out = jax.block_until_ready(fn(queries.coords, queries.vals))
+    us = (time.perf_counter() - t0) / queries.coords.shape[0] * 1e6
+    return np.asarray(out[1]), us
+
+
+def run(smoke: bool = False):
+    dcfg = SMOKE if smoke else FULL
+    icfg = INDEX_SMOKE if smoke else INDEX_FULL
+    chunk = dcfg.n_docs // 4 if smoke else dcfg.n_docs // 8
+    docs_np, queries_np, _ = make_collection(dcfg)
+    docs = PaddedSparse(jnp.asarray(docs_np.coords),
+                        jnp.asarray(docs_np.vals), docs_np.dim)
+    queries = PaddedSparse(jnp.asarray(queries_np.coords),
+                           jnp.asarray(queries_np.vals), queries_np.dim)
+    _, exact_ids = exact_search(docs, queries, 10)
+    exact_ids = np.asarray(exact_ids)
+    # budget chosen to keep fresh recall off the 1.0 ceiling so the
+    # ratio gates compare real pruning quality, not saturation
+    p = SearchParams(k=10, cut=6, block_budget=8, policy="adaptive")
+
+    # ---- fresh arm: the one-shot build the mutable arm must track
+    t0 = time.perf_counter()
+    fresh = build_index(docs, icfg, list_chunk=16)
+    jax.block_until_ready(fresh.sum_q)
+    rebuild_ms = (time.perf_counter() - t0) * 1e3
+    ids, _ = _search_us(fresh, queries, p)
+    r_fresh = mean_recall(ids, exact_ids)
+
+    # ---- mutable arm: empty -> full corpus, chunk inserts + timed
+    # compactions; the last chunk stays in the tail for the "during"
+    # measurement before the final compaction closes the loop
+    mut = MutableSeismicIndex.empty(
+        dcfg.dim, docs_np.coords.shape[1], icfg,
+        capacity=dcfg.n_docs, tail_cap=chunk, tail_max=chunk)
+    coords = np.asarray(docs_np.coords)
+    vals = np.asarray(docs_np.vals)
+    insert_s = 0.0
+    compact_s: list[float] = []
+    for s in range(0, dcfg.n_docs, chunk):
+        if mut.tail_occupancy:                 # all but the first chunk
+            t0 = time.perf_counter()
+            mut.compact()
+            compact_s.append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        mut.insert_docs(coords[s:s + chunk], vals[s:s + chunk])
+        insert_s += time.perf_counter() - t0
+
+    ids, us_during = _search_us(mut.index, queries, p)
+    r_during = mean_recall(ids, exact_ids)
+    t0 = time.perf_counter()
+    mut.compact()
+    compact_s.append(time.perf_counter() - t0)
+    ids, us_after = _search_us(mut.index, queries, p)
+    r_after = mean_recall(ids, exact_ids)
+
+    ins_us_doc = insert_s / dcfg.n_docs * 1e6
+    yield row("mutation_insert", ins_us_doc,
+              docs_per_s=f"{dcfg.n_docs / insert_s:.3g}",
+              n_docs=dcfg.n_docs, chunk=chunk,
+              rebuild_ms=f"{rebuild_ms:.0f}")
+    yield row("mutation_compact", float(np.median(compact_s)) * 1e6,
+              compactions=len(compact_s),
+              median_ms=f"{np.median(compact_s) * 1e3:.0f}",
+              max_ms=f"{max(compact_s) * 1e3:.0f}")
+    yield row("mutation_recall", us_after,
+              recall_fresh=f"{r_fresh:.3f}",
+              recall_during=f"{r_during:.3f}",
+              recall_after=f"{r_after:.3f}",
+              us_during=f"{us_during:.0f}",
+              gate_recall_during=r_during >= RECALL_RATIO_GATE * r_fresh,
+              gate_recall_after=r_after >= RECALL_RATIO_GATE * r_fresh)
+
+    # ---- delete sweep: tombstone 5%, gate absence before (mask) and
+    # after (purge) compaction
+    rng = np.random.default_rng(3)
+    doomed = rng.choice(dcfg.n_docs, size=max(1, dcfg.n_docs // 20),
+                        replace=False)
+    mut.delete_docs(doomed)
+    doomed_set = set(int(i) for i in doomed)
+    ids_mask, _ = _search_us(mut.index, queries, p)
+    absent_mask = not (doomed_set & set(ids_mask.ravel().tolist()))
+    mut.compact()
+    ids_purge, us_del = _search_us(mut.index, queries, p)
+    absent_purge = not (doomed_set & set(ids_purge.ravel().tolist()))
+    yield row("mutation_delete", us_del,
+              deleted=len(doomed), n_live=mut.n_live,
+              gate_deleted_absent=absent_mask and absent_purge)
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="quarter-size corpus (CI smoke)")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    failed = False
+    for line in run(smoke=args.smoke):
+        print(line)
+        if "gate_" in line and "=False" in line:
+            failed = True
+    if failed:
+        raise SystemExit("mutation gate FAILED")

@@ -25,7 +25,7 @@ from pathlib import Path
 MODULES = ["fig1_concentration", "table1_tradeoff", "table2_space_build",
            "fig5_blocking", "fig6_summaries", "pipeline_throughput",
            "serving_load", "graph_refine", "autotune",
-           "kernel_microbench", "obs_overhead"]
+           "kernel_microbench", "obs_overhead", "mutation"]
 
 
 def parse_row(line: str) -> dict:

@@ -38,7 +38,11 @@ def save_checkpoint(path: str, step: int, tree, *, shards: int = 1) -> str:
     """Write one checkpoint atomically; returns the committed dir."""
     final = os.path.join(path, f"step_{step:08d}")
     tmp = final + ".tmp"
-    os.makedirs(tmp, exist_ok=True)
+    # start from a clean tmp: an orphaned .tmp from a crashed save at
+    # the same step must not contribute stale shard files to the commit
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
     leaves, treedef = _flatten_with_names(tree)
     arrays = [np.asarray(l) for l in leaves]
     manifest = dict(
@@ -63,11 +67,24 @@ def save_checkpoint(path: str, step: int, tree, *, shards: int = 1) -> str:
     return final
 
 
+def _parse_step(name: str, prefix: str = "step_") -> int | None:
+    """Step number of one committed checkpoint entry, or ``None`` for
+    anything else: ``.tmp``/``.old`` leftovers, foreign files a user
+    dropped into the directory (``step_final``, ``step_7.bak``), or
+    the prefix alone. The scan helpers below must never raise on such
+    entries — a single stray name used to turn ``latest_step`` into a
+    ``ValueError`` and brick restore for the whole directory."""
+    if not name.startswith(prefix):
+        return None
+    suffix = name[len(prefix):]
+    return int(suffix) if suffix.isdigit() else None
+
+
 def latest_step(path: str) -> int | None:
     if not os.path.isdir(path):
         return None
-    steps = [int(d.split("_")[1]) for d in os.listdir(path)
-             if d.startswith("step_") and not d.endswith(".tmp")]
+    steps = [s for d in os.listdir(path)
+             if (s := _parse_step(d)) is not None]
     return max(steps) if steps else None
 
 
@@ -197,6 +214,19 @@ class CheckpointManager:
         self.keep = keep
         self._thread: threading.Thread | None = None
         os.makedirs(path, exist_ok=True)
+        self._clean_orphans()
+
+    def _clean_orphans(self) -> None:
+        """Drop half-written ``step_*.tmp`` dirs left by a crash
+        mid-save. The atomic-rename commit guarantees a ``.tmp`` is
+        never a valid checkpoint, but before this cleanup they
+        accumulated forever (and a later save to the same step would
+        silently merge stale shard files via ``makedirs(exist_ok)``).
+        Runs once at manager start, before any new save can race it."""
+        for d in os.listdir(self.path):
+            if d.startswith("step_") and d.endswith(".tmp"):
+                shutil.rmtree(os.path.join(self.path, d),
+                              ignore_errors=True)
 
     def save_async(self, step: int, tree):
         # snapshot to host before handing to the writer thread
@@ -216,9 +246,8 @@ class CheckpointManager:
             self._thread = None
 
     def _gc(self):
-        steps = sorted(
-            int(d.split("_")[1]) for d in os.listdir(self.path)
-            if d.startswith("step_") and not d.endswith(".tmp"))
+        steps = sorted(s for d in os.listdir(self.path)
+                       if (s := _parse_step(d)) is not None)
         for s in steps[:-self.keep]:
             shutil.rmtree(os.path.join(self.path, f"step_{s:08d}"),
                           ignore_errors=True)

@@ -1,6 +1,8 @@
 from repro.core.types import SeismicConfig, SeismicIndex
 from repro.core.build import build_index, live_blocks, suggest_fanout
+from repro.core.mutate import MutableSeismicIndex, make_mutable
 from repro.core.query import SearchParams, search_batch
 
 __all__ = ["SeismicConfig", "SeismicIndex", "build_index", "live_blocks",
-           "suggest_fanout", "SearchParams", "search_batch"]
+           "suggest_fanout", "SearchParams", "search_batch",
+           "MutableSeismicIndex", "make_mutable"]

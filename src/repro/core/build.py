@@ -170,18 +170,26 @@ def _superblock_summaries(sc, q, scale, zero, dim: int, cfg: SeismicConfig):
     return coords.astype(jnp.int32), q2, scale2, zero2
 
 
-def _build_one_list(i, key, sorted_c, sorted_v, sorted_d, starts, counts,
-                    fwd, cfg: SeismicConfig):
-    docs, vals, cnt = _prune_list(i, sorted_c, sorted_v, sorted_d,
-                                  starts, counts, cfg.lam, fwd.n)
+def list_block_arrays(key_i, docs, vals, cnt, fwd, cfg: SeismicConfig):
+    """Cluster + block + summarize ONE pruned list: the per-list half of
+    Algorithm 1 after static pruning.
+
+    ``docs``/``vals`` are the pruned postings ([lam], value-descending,
+    value ties broken by ascending doc id, sentinel ``fwd.n`` padding)
+    and ``key_i`` the per-list PRNG key
+    (``fold_in(PRNGKey(cfg.seed), coord)``). This is the seam
+    :mod:`repro.core.mutate` reuses for major (per-list) compaction:
+    feeding it the merged base+tail members of a list reproduces the
+    fresh-build arrays bit-exactly, because ``build_index`` routes
+    through the identical call.
+    """
     if cfg.blocking == "fixed":
         # Fig. 5 baseline: impact-ordered fixed-size chunks (single
         # cluster; the physical block splitter cuts it at block_cap)
         assign = jnp.where(jnp.arange(cfg.lam) < cnt, 0, cfg.beta)
         assign = assign.astype(jnp.int32)
     else:
-        assign = _assign_clusters(jax.random.fold_in(key, i), docs, vals,
-                                  cnt, fwd, cfg)
+        assign = _assign_clusters(key_i, docs, vals, cnt, fwd, cfg)
     perm, block_id, blk_off, blk_len = _physical_blocks(assign, cnt, cfg)
     docs_perm = docs[perm]
     vals_perm = vals[perm]
@@ -190,6 +198,49 @@ def _build_one_list(i, key, sorted_c, sorted_v, sorted_d, starts, counts,
     if cfg.superblock_fanout > 0:
         out = out + _superblock_summaries(sc, q, scale, zero, fwd.dim, cfg)
     return out
+
+
+def _build_one_list(i, key, sorted_c, sorted_v, sorted_d, starts, counts,
+                    fwd, cfg: SeismicConfig):
+    docs, vals, cnt = _prune_list(i, sorted_c, sorted_v, sorted_d,
+                                  starts, counts, cfg.lam, fwd.n)
+    return list_block_arrays(jax.random.fold_in(key, i), docs, vals, cnt,
+                             fwd, cfg)
+
+
+def block_summaries(docs_perm, block_id, fwd, cfg: SeismicConfig):
+    """Public seam over the per-block summary construction (Eq. 2 max ->
+    alpha-mass -> u8): compaction computes summaries for freshly
+    appended tail blocks through the SAME code path as the builder, so
+    an appended block's summary is bit-identical to what a fresh build
+    would give the same member set."""
+    return _summaries(docs_perm, block_id, fwd, cfg)
+
+
+def merge_superblock_summary(sup_coords, sup_q, sup_scale, sup_zero,
+                             child_sc, child_q, child_scale, child_zero,
+                             dim: int, cfg: SeismicConfig):
+    """Monotone update of ONE superblock summary with new child blocks.
+
+    Takes the coordinate-wise max of the DEQUANTIZED old superblock
+    summary ([S2] + scalars) and the new child block summaries
+    ([m, S] + [m]), then round-up requantizes (quantize_u8_ceil). The
+    result upper-bounds every child of the group: old children through
+    the old superblock (itself an upper bound), new children directly —
+    so summaries only ever loosen monotonically under mutation and the
+    hierarchical router's pruning stays safe without rebuilding the
+    tier.
+    """
+    s2 = sup_q.shape[-1]
+    dense = jnp.zeros((dim,), jnp.float32)
+    dense = dense.at[sup_coords].max(
+        dequantize_u8(sup_q[None], sup_scale[None], sup_zero[None])[0])
+    cv = dequantize_u8(child_q, child_scale, child_zero)       # [m, S]
+    dense = dense.at[child_sc.reshape(-1)].max(cv.reshape(-1))
+    vals, coords = jax.lax.top_k(dense, s2)
+    coords = jnp.where(vals > 0, coords, 0)
+    q2, scale2, zero2 = quantize_u8_ceil(vals)
+    return coords.astype(jnp.int32), q2, scale2, zero2
 
 
 def suggest_fanout(n_blocks_stats, *, max_fanout: int = 8) -> int:

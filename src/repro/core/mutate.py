@@ -1,0 +1,620 @@
+"""Streaming index mutation: LSM-style tail segments + tombstones.
+
+``build_index`` freezes the corpus; this module makes the frozen index
+a *base segment* in a two-level LSM tree so a live corpus can absorb
+inserts and deletes without a full rebuild (ROADMAP direction 3, first
+half):
+
+  * **Tail segment** — ``insert_docs`` appends new doc ids to an
+    unblocked per-index tail (``SeismicIndex.tail_ids``) and writes
+    their rows into the forward index. Tail docs are scored EXACTLY by
+    the scorer stage (no summary pruning — tails are small by
+    construction, bounded by ``tail_max``), so a freshly inserted doc
+    is searchable on the very next query.
+  * **Tombstones** — ``delete_docs`` flips per-doc bits
+    (``SeismicIndex.tombstone``); every retrieval stage masks
+    tombstoned candidates to the sentinel id before merge, so deleted
+    docs are never returned (and never counted as evaluated).
+  * **Compaction** — when the tail exceeds ``tail_max``, ``compact``
+    re-blocks it LSM-style: deleted ids are purged from the inverted
+    lists, and each affected list either *appends* delta blocks (minor
+    compaction — block summaries built through the builder's own
+    :func:`repro.core.build.block_summaries`, superblock summaries
+    updated monotonically via
+    :func:`repro.core.build.merge_superblock_summary`, whose round-up
+    requantization keeps them true upper bounds) or is *rebuilt* from
+    its merged member set through
+    :func:`repro.core.build.list_block_arrays` when the delta no
+    longer fits (major compaction — bit-identical to a fresh build of
+    that list). ``knn_ids`` is patched lazily: deleted ids become
+    sentinels immediately, former-tail docs get out-edges by querying
+    the compacted index (reverse edges toward new docs stay missing
+    until the next full graph build — refine quality degrades
+    gracefully, never correctness).
+
+The invariant threaded through every layer is:
+
+    frozen blocks  +  exact tail  +  tombstones  ==  one logical corpus
+
+Every mutation bumps ``epoch`` — the token the serving layer mixes
+into cache keys (``repro.serve``) so no stale result survives a swap.
+
+Bit-exactness contract (the property the mutation tests pin): at FULL
+block budget, with ``fwd_quant=False`` and a ``lam`` that never
+truncates a list, searching a grown+compacted index bit-matches
+``build_index`` over the equivalent final corpus (same capacity,
+deleted/unassigned rows all-zero). Major compaction routes through the
+identical per-list builder with the identical per-list PRNG key, and
+at full budget routing/summaries cannot change the candidate set;
+minor (append) compaction changes only block *permutation*, which the
+doc-ascending dedupe order makes invisible to the merge.
+
+Host-side orchestration is single-writer: one ``MutableSeismicIndex``
+must only be mutated from one thread (servers swap in published
+snapshots; see ``serve/README.md``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.build import (block_summaries, build_index,
+                              list_block_arrays, merge_superblock_summary)
+from repro.core.types import SeismicConfig, SeismicIndex
+from repro.sparse.ops import PaddedSparse
+from repro.sparse.quant import dequantize_u8, quantize_u8
+
+
+def make_mutable(index: SeismicIndex, **kwargs) -> "MutableSeismicIndex":
+    """Wrap a built (or loaded) index for streaming mutation.
+
+    Keyword arguments are forwarded to :class:`MutableSeismicIndex`;
+    pass ``capacity`` to reserve insert headroom beyond the built
+    corpus. Tuned policies survive (``validate_policy`` checks knob
+    sanity, not index content)."""
+    return MutableSeismicIndex(index, **kwargs)
+
+
+class MutableSeismicIndex:
+    """Single-writer mutation wrapper around immutable index snapshots.
+
+    ``.index`` is always a complete, internally consistent
+    :class:`SeismicIndex` safe to hand to the pipeline or a server
+    (mutations never modify a published snapshot in place — they
+    functionally update and republish). ``epoch`` increments on every
+    visible mutation and is what cache keys and the
+    ``seismic_index_epoch`` gauge observe.
+
+    Parameters
+    ----------
+    capacity:
+        Total doc-id space (existing + insert headroom). Defaults to
+        the built corpus size, i.e. no insert room. Ids are assigned
+        monotonically and NEVER reused — a deleted id stays dead.
+    tail_cap:
+        Physical tail-segment slots (the ``tail_ids`` array length).
+    tail_max:
+        Occupancy that triggers auto-compaction on the next insert
+        needing room (<= tail_cap; default tail_cap).
+    n_docs:
+        Ids already assigned (default: every row of the built index).
+        ``empty()`` passes 0 so a capacity-sized all-zero build starts
+        with no live docs.
+    registry:
+        Optional :class:`repro.obs.MetricsRegistry` receiving
+        ``seismic_index_epoch``, ``seismic_tail_occupancy``,
+        ``seismic_tail_fill_ratio`` gauges, insert/delete counters and
+        the ``seismic_compaction_seconds`` histogram.
+    """
+
+    def __init__(self, index: SeismicIndex, *, capacity: int | None = None,
+                 tail_cap: int = 64, tail_max: int | None = None,
+                 n_docs: int | None = None, registry=None):
+        cfg = index.config
+        n_old = index.n_docs
+        cap = n_old if capacity is None else int(capacity)
+        if cap < n_old:
+            raise ValueError(f"capacity {cap} < built corpus {n_old}")
+        tail_cap = int(tail_cap)
+        if tail_cap <= 0:
+            raise ValueError("tail_cap must be positive")
+        self.tail_max = tail_cap if tail_max is None else int(tail_max)
+        if not (1 <= self.tail_max <= tail_cap):
+            raise ValueError(
+                f"tail_max {self.tail_max} not in [1, {tail_cap}]")
+        self.capacity = cap
+        self.tail_cap = tail_cap
+        self.config: SeismicConfig = cfg
+        self._next_id = n_old if n_docs is None else int(n_docs)
+        if not (0 <= self._next_id <= cap):
+            raise ValueError(f"n_docs {self._next_id} not in [0, {cap}]")
+        self._epoch = 0
+
+        # ---- lift the immutable snapshot to capacity: pad the forward
+        # plane with all-zero rows and remap the old pad sentinel
+        # (n_old) to the new one (cap) wherever doc ids appear.
+        coords = np.asarray(index.fwd.coords)
+        vals = np.asarray(index.fwd.vals)
+        list_docs = np.asarray(index.list_docs)
+        knn = None if index.knn_ids is None else np.asarray(index.knn_ids)
+        fwd_scale = (None if index.fwd_scale is None
+                     else np.asarray(index.fwd_scale))
+        fwd_zero = (None if index.fwd_zero is None
+                    else np.asarray(index.fwd_zero))
+        if cap > n_old:
+            grow = cap - n_old
+            coords = np.concatenate(
+                [coords, np.zeros((grow, coords.shape[1]), coords.dtype)])
+            vals = np.concatenate(
+                [vals, np.zeros((grow, vals.shape[1]), vals.dtype)])
+            list_docs = np.where(list_docs == n_old, cap, list_docs)
+            if knn is not None:
+                knn = np.where(knn == n_old, cap, knn)
+                knn = np.concatenate(
+                    [knn, np.full((grow, knn.shape[1]), cap, knn.dtype)])
+            if fwd_scale is not None:
+                fwd_scale = np.concatenate(
+                    [fwd_scale, np.zeros(grow, fwd_scale.dtype)])
+                fwd_zero = np.concatenate(
+                    [fwd_zero, np.zeros(grow, fwd_zero.dtype)])
+
+        # tail: resume a persisted one (checkpoint round-trip), else
+        # start empty. Entries are doc ids; `cap` marks empty slots.
+        tail = np.full(tail_cap, cap, np.int32)
+        if index.tail_ids is not None:
+            old_tail = np.asarray(index.tail_ids)
+            live = old_tail[old_tail < n_old]
+            if live.size > tail_cap:
+                raise ValueError(
+                    f"persisted tail ({live.size}) exceeds tail_cap "
+                    f"{tail_cap}")
+            tail[:live.size] = live
+        self._tail_occ = int((tail < cap).sum())
+
+        tomb = np.zeros(cap, bool)
+        if index.tombstone is not None:
+            old_tomb = np.asarray(index.tombstone)
+            tomb[:old_tomb.size] = old_tomb
+        # conservative resume: anything tombstoned might still sit in
+        # the lists of a loaded snapshot — schedule it for purge (the
+        # purge is idempotent on already-sentinel entries).
+        self._pending_deletes: set[int] = {
+            int(i) for i in np.nonzero(tomb)[0]}
+
+        self._index = dataclasses.replace(
+            index,
+            fwd=PaddedSparse(jnp.asarray(coords), jnp.asarray(vals),
+                             index.dim),
+            list_docs=jnp.asarray(list_docs.astype(np.int32)),
+            fwd_scale=None if fwd_scale is None else jnp.asarray(fwd_scale),
+            fwd_zero=None if fwd_zero is None else jnp.asarray(fwd_zero),
+            knn_ids=None if knn is None else jnp.asarray(
+                knn.astype(np.int32)),
+            tail_ids=jnp.asarray(tail),
+            tombstone=jnp.asarray(tomb),
+        )
+        self._register_metrics(registry)
+
+    # ------------------------------------------------------ lifecycle
+
+    @classmethod
+    def empty(cls, dim: int, doc_nnz: int,
+              cfg: SeismicConfig = SeismicConfig(), *, capacity: int,
+              tail_cap: int = 64, tail_max: int | None = None,
+              registry=None) -> "MutableSeismicIndex":
+        """An index with NO live docs and room for ``capacity`` of them
+        (the grow-from-empty entry point). Builds over an all-zero
+        collection so every array has its final shape up front."""
+        docs = PaddedSparse(jnp.zeros((capacity, doc_nnz), jnp.int32),
+                            jnp.zeros((capacity, doc_nnz), jnp.float32),
+                            dim)
+        return cls(build_index(docs, cfg), capacity=capacity,
+                   tail_cap=tail_cap, tail_max=tail_max, n_docs=0,
+                   registry=registry)
+
+    @property
+    def index(self) -> SeismicIndex:
+        """The current published snapshot (hand this to servers)."""
+        return self._index
+
+    @property
+    def epoch(self) -> int:
+        return self._epoch
+
+    @property
+    def n_docs(self) -> int:
+        """Ids assigned so far (monotone; includes deleted)."""
+        return self._next_id
+
+    @property
+    def n_live(self) -> int:
+        return self._next_id - int(np.asarray(self._index.tombstone).sum())
+
+    @property
+    def tail_occupancy(self) -> int:
+        return self._tail_occ
+
+    # ------------------------------------------------------ mutations
+
+    def insert_docs(self, coords, vals) -> np.ndarray:
+        """Insert a batch of docs; returns their assigned ids.
+
+        ``coords``/``vals`` are ``[B, nnz]`` (or 1-D for a single doc)
+        with ``vals <= 0`` marking padding, ``nnz <= fwd.nnz_max``.
+        Auto-compacts whenever the tail lacks room for the next chunk.
+        """
+        coords = np.atleast_2d(np.asarray(coords))
+        vals = np.atleast_2d(np.asarray(vals, np.float32))
+        if coords.shape != vals.shape:
+            raise ValueError(f"coords {coords.shape} != vals {vals.shape}")
+        b, nnz = coords.shape
+        nnz_max = self._index.fwd.nnz_max
+        if nnz > nnz_max:
+            raise ValueError(f"doc nnz {nnz} > index nnz_max {nnz_max}")
+        if self._next_id + b > self.capacity:
+            raise ValueError(
+                f"capacity exhausted: {self._next_id} assigned + {b} new "
+                f"> {self.capacity}; rebuild with more headroom")
+        first = self._next_id
+        s = 0
+        while s < b:
+            room = self.tail_max - self._tail_occ
+            if room <= 0:
+                self.compact()
+                continue
+            take = min(room, b - s)
+            self._append_tail(coords[s:s + take], vals[s:s + take])
+            s += take
+        if self._m_inserted is not None:
+            self._m_inserted.inc(b)
+        return np.arange(first, self._next_id, dtype=np.int64)
+
+    def _append_tail(self, coords: np.ndarray, vals: np.ndarray) -> None:
+        idx = self._index
+        take, nnz = coords.shape
+        nnz_max = idx.fwd.nnz_max
+        # canonical padded rows: nonpositive values are padding (coord 0,
+        # value 0 — exactly the all-zero-row convention the equivalence
+        # corpus uses, so bit-match tests need no row normalization)
+        c = np.zeros((take, nnz_max), np.int64)
+        v = np.zeros((take, nnz_max), np.float32)
+        c[:, :nnz] = coords
+        v[:, :nnz] = vals
+        c = np.where(v > 0, c, 0)
+        v = np.where(v > 0, v, 0.0)
+        if np.any(c < 0) or np.any(c >= idx.dim):
+            raise ValueError("doc coords out of range")
+        ids = jnp.arange(self._next_id, self._next_id + take,
+                         dtype=jnp.int32)
+        cj = jnp.asarray(c).astype(idx.fwd.coords.dtype)
+        vj = jnp.asarray(v)
+        if idx.fwd_scale is not None:
+            # compact forward plane: per-doc affine u8, same per-row
+            # quantizer as build_index's whole-matrix pass
+            q, scale, zero = quantize_u8(vj)
+            fwd = PaddedSparse(idx.fwd.coords.at[ids].set(cj),
+                               idx.fwd.vals.at[ids].set(q), idx.dim)
+            fwd_scale = idx.fwd_scale.at[ids].set(scale)
+            fwd_zero = idx.fwd_zero.at[ids].set(zero)
+        else:
+            fwd = PaddedSparse(
+                idx.fwd.coords.at[ids].set(cj),
+                idx.fwd.vals.at[ids].set(vj.astype(idx.fwd.vals.dtype)),
+                idx.dim)
+            fwd_scale, fwd_zero = None, None
+        tail = idx.tail_ids.at[self._tail_occ + jnp.arange(take)].set(ids)
+        self._index = dataclasses.replace(
+            idx, fwd=fwd, fwd_scale=fwd_scale, fwd_zero=fwd_zero,
+            tail_ids=tail)
+        self._next_id += take
+        self._tail_occ += take
+        self._epoch += 1
+
+    def delete_docs(self, ids) -> None:
+        """Tombstone docs (idempotent). Masked from results immediately;
+        physically purged from lists at the next compaction."""
+        ids = np.unique(np.asarray(ids, np.int64).reshape(-1))
+        if ids.size == 0:
+            return
+        if ids[0] < 0 or ids[-1] >= self._next_id:
+            raise ValueError(
+                f"delete ids must be in [0, {self._next_id}), got "
+                f"[{ids[0]}, {ids[-1]}]")
+        idx = self._index
+        self._index = dataclasses.replace(
+            idx, tombstone=idx.tombstone.at[jnp.asarray(ids)].set(True))
+        self._pending_deletes.update(int(i) for i in ids)
+        self._epoch += 1
+        if self._m_deleted is not None:
+            self._m_deleted.inc(int(ids.size))
+
+    # ----------------------------------------------------- compaction
+
+    def compact(self) -> None:
+        """Fold the tail into the blocked index and purge tombstones.
+
+        Per affected list: *minor* (append) compaction when the delta
+        fits the list's spare row/block slots — new blocks chunked at
+        ``block_cap`` in value-descending order, summaries via the
+        builder's own path, superblock summaries merged monotonically
+        (round-up requantize keeps the upper bound); otherwise a
+        *major* per-list rebuild through :func:`list_block_arrays`,
+        bit-identical to a fresh build of the merged member set.
+        No-op when tail and pending deletes are both empty.
+        """
+        t0 = time.monotonic()
+        idx = self._index
+        cfg = idx.config
+        cap = self.capacity
+        tail = np.asarray(idx.tail_ids)
+        tomb = np.asarray(idx.tombstone)
+        pending = np.array(sorted(self._pending_deletes), np.int64)
+        live_tail = tail[tail < cap]
+        live_tail = live_tail[~tomb[live_tail]].astype(np.int64)
+        if live_tail.size == 0 and pending.size == 0:
+            self._pending_deletes.clear()
+            return
+
+        list_docs = np.asarray(idx.list_docs).copy()
+        list_vals = np.asarray(idx.list_vals).copy()
+        list_len = np.asarray(idx.list_len).copy()
+        block_off = np.asarray(idx.block_off).copy()
+        block_len = np.asarray(idx.block_len).copy()
+        sum_coords = np.asarray(idx.sum_coords).copy()
+        sum_q = np.asarray(idx.sum_q).copy()
+        sum_scale = np.asarray(idx.sum_scale).copy()
+        sum_zero = np.asarray(idx.sum_zero).copy()
+        has_sup = idx.sup_coords is not None
+        if has_sup:
+            sup_coords = np.asarray(idx.sup_coords).copy()
+            sup_q = np.asarray(idx.sup_q).copy()
+            sup_scale = np.asarray(idx.sup_scale).copy()
+            sup_zero = np.asarray(idx.sup_zero).copy()
+        fwd_coords = np.asarray(idx.fwd.coords).copy()
+        fwd_vals = np.asarray(idx.fwd.vals).copy()
+        fwd_scale = (None if idx.fwd_scale is None
+                     else np.asarray(idx.fwd_scale).copy())
+        fwd_zero = (None if idx.fwd_zero is None
+                    else np.asarray(idx.fwd_zero).copy())
+
+        # ---- 1. purge tombstones. List positions keep their block
+        # (summaries become loose-but-valid upper bounds); forward rows
+        # go all-zero so the logical corpus equals "final live docs".
+        if pending.size:
+            dead = np.isin(list_docs, pending)
+            list_docs[dead] = cap
+            list_vals[dead] = 0.0
+            fwd_coords[pending] = 0
+            fwd_vals[pending] = 0
+            if fwd_scale is not None:
+                fwd_scale[pending] = 0.0
+                fwd_zero[pending] = 0.0
+
+        # float32 forward view for the builder seams (identical to the
+        # fresh build's `docs.astype(float32)` for an unquantized plane)
+        if fwd_scale is not None:
+            v32 = np.asarray(dequantize_u8(
+                jnp.asarray(fwd_vals), jnp.asarray(fwd_scale),
+                jnp.asarray(fwd_zero)))
+            c32 = fwd_coords.astype(np.int32)
+        else:
+            v32 = fwd_vals.astype(np.float32)
+            c32 = fwd_coords
+        fwd32 = PaddedSparse(jnp.asarray(c32), jnp.asarray(v32), idx.dim)
+
+        # ---- 2. per-coordinate delta membership from live tail docs
+        delta: dict[int, list[tuple[int, float]]] = {}
+        for d in live_tail:
+            for cc, vv in zip(fwd_coords[d], v32[d]):
+                if vv > 0:
+                    delta.setdefault(int(cc), []).append((int(d), float(vv)))
+
+        lam, nb, bcap = cfg.lam, cfg.n_blocks, cfg.block_cap
+        fanout = cfg.superblock_fanout
+        key = jax.random.PRNGKey(cfg.seed)
+        n_minor = n_major = 0
+        for ell, members in delta.items():
+            # value-descending, ties doc-ascending — the builder's own
+            # posting order (lexsort primary -val, secondary doc)
+            members.sort(key=lambda t: (-t[1], t[0]))
+            d = len(members)
+            base_len = int(list_len[ell])
+            nb_used = int((block_len[ell] > 0).sum())   # blocks are a
+            n_new = -(-d // bcap)                        # slot prefix
+            if base_len + d <= lam and nb_used + n_new <= nb:
+                # ---------------- minor: append delta blocks
+                n_minor += 1
+                docs_new = np.fromiter((m[0] for m in members), np.int32,
+                                       d)
+                vals_new = np.fromiter((m[1] for m in members), np.float32,
+                                       d)
+                list_docs[ell, base_len:base_len + d] = docs_new
+                list_vals[ell, base_len:base_len + d] = vals_new
+                list_len[ell] = base_len + d
+                # summaries for the new blocks only, through the
+                # builder's _summaries (artificial [lam] layout: delta
+                # docs in a prefix, block j = position // block_cap)
+                docs_perm = np.full(lam, cap, np.int32)
+                docs_perm[:d] = docs_new
+                block_id = np.full(lam, nb, np.int32)
+                block_id[:d] = np.arange(d) // bcap
+                sc, q, scale, zero = block_summaries(
+                    jnp.asarray(docs_perm), jnp.asarray(block_id), fwd32,
+                    cfg)
+                sc = np.asarray(sc)[:n_new]
+                q = np.asarray(q)[:n_new]
+                scale = np.asarray(scale)[:n_new]
+                zero = np.asarray(zero)[:n_new]
+                for j in range(n_new):
+                    slot = nb_used + j
+                    block_off[ell, slot] = base_len + j * bcap
+                    block_len[ell, slot] = min(bcap, d - j * bcap)
+                    sum_coords[ell, slot] = sc[j]
+                    sum_q[ell, slot] = q[j]
+                    sum_scale[ell, slot] = scale[j]
+                    sum_zero[ell, slot] = zero[j]
+                if has_sup:
+                    for g in sorted({(nb_used + j) // fanout
+                                     for j in range(n_new)}):
+                        kids = [j for j in range(n_new)
+                                if (nb_used + j) // fanout == g]
+                        merged = merge_superblock_summary(
+                            jnp.asarray(sup_coords[ell, g]),
+                            jnp.asarray(sup_q[ell, g]),
+                            jnp.asarray(sup_scale[ell, g]),
+                            jnp.asarray(sup_zero[ell, g]),
+                            jnp.asarray(sc[kids]), jnp.asarray(q[kids]),
+                            jnp.asarray(scale[kids]),
+                            jnp.asarray(zero[kids]), idx.dim, cfg)
+                        (sup_coords[ell, g], sup_q[ell, g],
+                         sup_scale[ell, g], sup_zero[ell, g]) = (
+                            np.asarray(a) for a in merged)
+            else:
+                # ---------------- major: rebuild the list from its
+                # merged member set — the fresh-build code path with
+                # the fresh-build PRNG key, so bit-identical arrays
+                n_major += 1
+                base = list_docs[ell, :base_len]
+                keep = base < cap
+                mdocs = np.concatenate(
+                    [base[keep].astype(np.int64),
+                     np.fromiter((m[0] for m in members), np.int64, d)])
+                mvals = np.concatenate(
+                    [list_vals[ell, :base_len][keep].astype(np.float32),
+                     np.fromiter((m[1] for m in members), np.float32, d)])
+                order = np.lexsort((mdocs, -mvals))
+                cnt = min(order.size, lam)
+                docs_p = np.full(lam, cap, np.int32)
+                vals_p = np.zeros(lam, np.float32)
+                docs_p[:cnt] = mdocs[order[:cnt]]
+                vals_p[:cnt] = mvals[order[:cnt]]
+                out = list_block_arrays(
+                    jax.random.fold_in(key, ell), jnp.asarray(docs_p),
+                    jnp.asarray(vals_p), jnp.int32(cnt), fwd32, cfg)
+                (list_docs[ell], list_vals[ell], _, block_off[ell],
+                 block_len[ell], sum_coords[ell], sum_q[ell],
+                 sum_scale[ell], sum_zero[ell]) = (
+                    np.asarray(a) for a in out[:9])
+                list_len[ell] = cnt
+                if has_sup:
+                    (sup_coords[ell], sup_q[ell], sup_scale[ell],
+                     sup_zero[ell]) = (np.asarray(a) for a in out[9:])
+
+        # ---- 3. publish the compacted snapshot (tail now empty)
+        new_fwd_dtype = idx.fwd.vals.dtype
+        compacted = dataclasses.replace(
+            idx,
+            fwd=PaddedSparse(jnp.asarray(fwd_coords),
+                             jnp.asarray(fwd_vals.astype(new_fwd_dtype)),
+                             idx.dim),
+            list_docs=jnp.asarray(list_docs),
+            list_vals=jnp.asarray(list_vals),
+            list_len=jnp.asarray(list_len),
+            block_off=jnp.asarray(block_off),
+            block_len=jnp.asarray(block_len),
+            sum_coords=jnp.asarray(sum_coords),
+            sum_q=jnp.asarray(sum_q),
+            sum_scale=jnp.asarray(sum_scale),
+            sum_zero=jnp.asarray(sum_zero),
+            fwd_scale=None if fwd_scale is None else jnp.asarray(fwd_scale),
+            fwd_zero=None if fwd_zero is None else jnp.asarray(fwd_zero),
+            sup_coords=jnp.asarray(sup_coords) if has_sup else None,
+            sup_q=jnp.asarray(sup_q) if has_sup else None,
+            sup_scale=jnp.asarray(sup_scale) if has_sup else None,
+            sup_zero=jnp.asarray(sup_zero) if has_sup else None,
+            tail_ids=jnp.full((self.tail_cap,), cap, jnp.int32),
+        )
+
+        # ---- 4. lazy graph patch: dead edges -> sentinel, former-tail
+        # docs get fresh out-edges by querying the compacted index
+        if idx.knn_ids is not None:
+            knn = np.asarray(idx.knn_ids).copy()
+            if pending.size:
+                knn[np.isin(knn, pending)] = cap
+                knn[pending] = cap
+            if live_tail.size:
+                knn[live_tail] = cap
+                res = self._fresh_edges(compacted, live_tail, c32, v32,
+                                        tomb, knn.shape[1])
+                for i, doc in enumerate(live_tail):
+                    row = res[i]
+                    knn[doc, :row.size] = row
+            compacted = dataclasses.replace(compacted,
+                                            knn_ids=jnp.asarray(knn))
+
+        self._index = compacted
+        self._tail_occ = 0
+        self._pending_deletes.clear()
+        self._epoch += 1
+        dt = time.monotonic() - t0
+        if self._m_compactions is not None:
+            self._m_compactions.inc()
+            self._m_compact_s.record(dt)
+            self._m_compact_minor.inc(n_minor)
+            self._m_compact_major.inc(n_major)
+
+    def _fresh_edges(self, compacted: SeismicIndex, new_ids: np.ndarray,
+                     c32: np.ndarray, v32: np.ndarray, tomb: np.ndarray,
+                     degree: int) -> list[np.ndarray]:
+        """Out-edges for compacted-in docs: drive their forward rows as
+        queries through the pipeline (the graph builder's own recipe,
+        ``repro.graph.build``), drop self/tombstoned/pad hits."""
+        from repro.retrieval.params import SearchParams
+        from repro.retrieval.pipeline import search_pipeline
+
+        cfg = compacted.config
+        p = SearchParams(k=degree + 1, cut=8,
+                         block_budget=min(64, 8 * cfg.n_blocks),
+                         policy="budget")
+        q = PaddedSparse(jnp.asarray(c32[new_ids].astype(np.int32)),
+                         jnp.asarray(v32[new_ids]), compacted.dim)
+        _, ids_out, _ = search_pipeline(compacted, q, p)
+        ids_out = np.asarray(ids_out)
+        rows = []
+        for i, doc in enumerate(new_ids):
+            row = ids_out[i]
+            row = row[(row >= 0) & (row != doc)]
+            row = row[~tomb[row]][:degree].astype(np.int32)
+            rows.append(row)
+        return rows
+
+    # -------------------------------------------------------- metrics
+
+    def _register_metrics(self, registry) -> None:
+        self._m_inserted = self._m_deleted = None
+        self._m_compactions = self._m_compact_s = None
+        self._m_compact_minor = self._m_compact_major = None
+        if registry is None:
+            return
+        registry.gauge(
+            "seismic_index_epoch",
+            "Mutation epoch of the index (bumped on every visible "
+            "mutation)").labels().set_fn(lambda: self._epoch)
+        registry.gauge(
+            "seismic_tail_occupancy",
+            "Live docs in the unblocked tail segment").labels().set_fn(
+            lambda: self._tail_occ)
+        registry.gauge(
+            "seismic_tail_fill_ratio",
+            "Tail occupancy / tail_max (1.0 = next insert "
+            "compacts)").labels().set_fn(
+            lambda: self._tail_occ / self.tail_max)
+        self._m_inserted = registry.counter(
+            "seismic_docs_inserted_total", "Docs inserted").labels()
+        self._m_deleted = registry.counter(
+            "seismic_docs_deleted_total", "Docs tombstoned").labels()
+        self._m_compactions = registry.counter(
+            "seismic_compactions_total", "Compaction runs").labels()
+        self._m_compact_minor = registry.counter(
+            "seismic_compaction_lists_minor_total",
+            "Lists compacted by block append").labels()
+        self._m_compact_major = registry.counter(
+            "seismic_compaction_lists_major_total",
+            "Lists compacted by full per-list rebuild").labels()
+        self._m_compact_s = registry.histogram(
+            "seismic_compaction_seconds", "Wall time per compaction",
+            lo=1e-5, hi=1e3).labels()

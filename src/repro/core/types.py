@@ -114,6 +114,16 @@ class SeismicIndex:
     # forward plane as the scorer stage (fwd + fwd_scale/fwd_zero), so
     # merged scores stay consistent across stages.
     knn_ids: jax.Array | None = None        # int32 [N, degree]
+    # streaming mutation plane (repro.core.mutate): an unblocked tail
+    # segment absorbing inserts (scored exactly, no summary pruning;
+    # sentinel n_docs marks empty slots) and per-doc delete tombstones
+    # masked at candidate level. "frozen blocks + exact tail +
+    # tombstones == one logical corpus" is the invariant every stage
+    # preserves; both fields are None on an immutable (build-once)
+    # index so its pytree structure — and compiled programs — are
+    # unchanged.
+    tail_ids: jax.Array | None = None       # int32 [tail_cap]
+    tombstone: jax.Array | None = None      # bool  [N]
     # tuned operating points (repro.tune): recall-target -> coupled knob
     # set, measured on a held-out sample and persisted with the index.
     # Static metadata like `config` (frozen TunedPolicy dataclasses are
@@ -140,6 +150,11 @@ class SeismicIndex:
         """Built kNN-graph degree (0 when no graph is attached)."""
         return 0 if self.knn_ids is None else self.knn_ids.shape[1]
 
+    @property
+    def tail_cap(self) -> int:
+        """Tail-segment capacity (0 when the index is immutable)."""
+        return 0 if self.tail_ids is None else self.tail_ids.shape[0]
+
     def nbytes(self) -> dict:
         """Index size accounting (Table 2 analog)."""
         fwd = self.fwd.coords.nbytes + self.fwd.vals.nbytes
@@ -153,6 +168,13 @@ class SeismicIndex:
             superblocks = (self.sup_coords.nbytes + self.sup_q.nbytes
                            + self.sup_scale.nbytes + self.sup_zero.nbytes)
         graph = 0 if self.knn_ids is None else self.knn_ids.nbytes
+        mutation = 0
+        if self.tail_ids is not None:
+            mutation += self.tail_ids.nbytes
+        if self.tombstone is not None:
+            mutation += self.tombstone.nbytes
         return dict(forward=fwd, inverted=inv, summaries=summaries,
                     superblocks=superblocks, graph=graph,
-                    total=fwd + inv + summaries + superblocks + graph)
+                    mutation=mutation,
+                    total=(fwd + inv + summaries + superblocks + graph
+                           + mutation))

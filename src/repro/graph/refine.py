@@ -126,6 +126,15 @@ def refine_one_round(index: SeismicIndex, q_dense: jax.Array,
             cand = compact_candidates(cand)
         new_s = score_candidates(index, q_dense, cand, p.use_kernel,
                                  fuse_level=p.fuse_level)
+    if index.tombstone is not None:
+        # stale graph edges may still point at deleted docs between
+        # compactions (and, post-compaction, reverse edges toward a
+        # purged id are rewritten lazily) — mask AFTER scoring so both
+        # the fused-kernel and unfused paths are covered
+        from repro.retrieval.router import NEG
+        from repro.retrieval.scorer import mask_tombstoned
+        cand = mask_tombstoned(index, cand)
+        new_s = jnp.where(cand < index.n_docs, new_s, NEG)
     all_ids = jnp.concatenate(
         [jnp.where(ids >= 0, ids, index.n_docs), cand], axis=1)
     all_s = jnp.concatenate([scores, new_s], axis=1)

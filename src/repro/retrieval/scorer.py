@@ -54,6 +54,51 @@ def gather_block_docs(index: SeismicIndex, lists: jax.Array,
     return jnp.where(ar < ln[..., None], docs, index.n_docs)
 
 
+def mask_tombstoned(index: SeismicIndex, cand: jax.Array) -> jax.Array:
+    """Deleted candidates -> sentinel (identity when the index carries
+    no tombstones — the trace-time gate keeps immutable-index programs
+    byte-identical).
+
+    Masking at the ID level (not the score level) keeps
+    ``docs_evaluated`` consistent with a fresh build of the equivalent
+    corpus: a deleted doc is not a candidate at all, rather than a
+    candidate with a -inf score.
+    """
+    if index.tombstone is None:
+        return cand
+    dead = jnp.take(index.tombstone, cand, mode="clip")
+    return jnp.where(dead, index.n_docs, cand)
+
+
+def score_tail(index: SeismicIndex, q_dense: jax.Array
+               ) -> tuple[jax.Array, jax.Array]:
+    """Exact scores for the unblocked tail segment -> ([Q, T], [Q, T]).
+
+    Tail docs (``index.tail_ids``) bypass routing/selection entirely:
+    they are appended to every query's candidate set and scored through
+    the same forward plane as blocked candidates. Zero-score tail docs
+    (no coordinate overlap with the query) are masked back to the
+    sentinel — a fresh build would never have surfaced them as
+    candidates, so both the merge and ``docs_evaluated`` stay
+    bit-consistent with the equivalent immutable index.
+
+    Tail ids are always larger than every blocked doc id (ids are
+    assigned monotonically and the tail drains at compaction), so
+    appending the tail after the deduped block candidates preserves
+    the ascending live-candidate order ``merge_topk`` tie-breaking
+    relies on. Tail/block candidate sets are disjoint by construction
+    (a doc is either compacted into blocks or still in the tail), so
+    no cross-segment dedupe is needed.
+    """
+    tail = mask_tombstoned(index, index.tail_ids)            # [T]
+    cand = jnp.broadcast_to(tail[None, :],
+                            (q_dense.shape[0], tail.shape[0]))
+    scores = score_candidates(index, q_dense, cand, use_kernel=False)
+    live = (cand < index.n_docs) & (scores > 0)
+    return jnp.where(live, cand, index.n_docs), \
+        jnp.where(live, scores, NEG)
+
+
 def dedupe_batch(cand: jax.Array, n_docs: int) -> jax.Array:
     """Sort each query's candidate ids and mask duplicates to the
     sentinel. [Q, C] -> [Q, C]."""
@@ -128,14 +173,24 @@ def score_selection(index: SeismicIndex, batch: RoutedBatch,
     evaluated) contribute only sentinel candidates. ``fuse_level >= 1``
     compacts the deduped candidates before the (candidate-driven)
     kernel scores them — bit-exact, see module docstring.
+
+    On a mutable index (``repro.core.mutate``) two extra columns of
+    work appear: tombstoned candidates are masked to the sentinel
+    before dedupe, and the exactly-scored tail segment is appended
+    after the blocked candidates (:func:`score_tail`).
     """
     docs = gather_block_docs(index, batch.lists, sel.blocks)
     docs = jnp.where(jnp.isfinite(sel.block_scores)[..., None], docs,
                      index.n_docs)
     qn = docs.shape[0]
-    cand = dedupe_batch(docs.reshape(qn, -1), index.n_docs)
+    cand = dedupe_batch(mask_tombstoned(index, docs.reshape(qn, -1)),
+                        index.n_docs)
     if fuse_level >= 1:
         cand = compact_candidates(cand)
     scores = score_candidates(index, batch.q_dense, cand, use_kernel,
                               fuse_level=fuse_level)
+    if index.tail_ids is not None:
+        tail_cand, tail_scores = score_tail(index, batch.q_dense)
+        cand = jnp.concatenate([cand, tail_cand], axis=1)
+        scores = jnp.concatenate([scores, tail_scores], axis=1)
     return cand, scores

@@ -94,7 +94,8 @@ def select_adaptive(index: SeismicIndex, batch: RoutedBatch,
     summary >= theta / heap_factor (capped at block_budget). Recovers
     the paper's dynamic pruning without a serial heap."""
     from repro.retrieval.scorer import (compact_candidates, dedupe_batch,
-                                        gather_block_docs, score_candidates)
+                                        gather_block_docs, mask_tombstoned,
+                                        score_candidates)
     # ---- stage 1: bootstrap theta from the top probe_budget blocks
     # (clamped: a block_budget below probe_budget degrades to pure
     # budget routing instead of a negative stage-2 top_k)
@@ -102,7 +103,11 @@ def select_adaptive(index: SeismicIndex, batch: RoutedBatch,
     r1, b1 = jax.lax.top_k(batch.r, probe)
     qn = batch.r.shape[0]
     cand1 = gather_block_docs(index, batch.lists, b1).reshape(qn, -1)
-    cand1 = dedupe_batch(cand1, index.n_docs)
+    # deleted docs must not inflate theta: a tombstoned high scorer
+    # would tighten the stage-2 threshold against docs that can never
+    # be returned (tail docs are not folded in — theta only ever ends
+    # up lower, which keeps MORE blocks, never fewer)
+    cand1 = dedupe_batch(mask_tombstoned(index, cand1), index.n_docs)
     if p.fuse_level >= 1:
         cand1 = compact_candidates(cand1)
     s1 = score_candidates(index, batch.q_dense, cand1, p.use_kernel,

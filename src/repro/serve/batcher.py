@@ -36,6 +36,7 @@ future scaling layer (sharded serving, replication) plugs into.
 from __future__ import annotations
 
 import dataclasses
+import struct
 import threading
 import time
 
@@ -47,7 +48,7 @@ from repro.core.types import SeismicIndex
 from repro.graph.refine import validate_refine_params
 from repro.retrieval import SearchParams, search_pipeline
 from repro.retrieval.pipeline import run_pipeline_staged, stage_fns
-from repro.serve.cache import LRUCache, query_fingerprint
+from repro.serve.cache import LRUCache, fingerprint_candidates
 from repro.serve.queue import Request, RequestQueue, ServeFuture
 from repro.serve.telemetry import ServerTelemetry
 from repro.sparse.ops import PaddedSparse
@@ -172,6 +173,12 @@ class AsyncSeismicServer:
         self.coalesce = coalesce
         self._inflight: dict[bytes, Request] = {}
         self._coalesce_lock = threading.Lock()
+        # serving epoch: bumped on every swap_index. Baked into every
+        # cache/coalesce key, so results computed against an earlier
+        # index can never be served after a swap (their keys become
+        # unreachable — no stale top-k survives a mutation).
+        self.epoch = 0
+        self._swap_lock = threading.RLock()
         if telemetry is not None:
             self.telemetry = telemetry
         else:
@@ -212,6 +219,10 @@ class AsyncSeismicServer:
         One bundle per server: sharing an Observability registry across
         servers would make the last one win these callbacks."""
         reg = self.telemetry.registry
+        reg.gauge("seismic_index_epoch",
+                  "Generation of the index being served (bumped on "
+                  "every swap_index / mutation publish)").labels() \
+            .set_fn(lambda: self.epoch)
         reg.gauge("seismic_cache_hit_rate",
                   "LRU result-cache hit rate since start").labels() \
             .set_fn(lambda: self.cache.stats()["hit_rate"]
@@ -287,17 +298,87 @@ class AsyncSeismicServer:
         """Compile every ladder width before serving traffic — the
         fused program always, plus the staged (and per-refine-round)
         programs when stage timing or sampled stage tracing is on."""
+        self._warmup_for(self.index, self.params, self._fns)
+
+    def _warmup_for(self, index, params, fns) -> None:
+        """Warmup body against an explicit (index, params, fns) triple
+        so ``swap_index`` can compile the incoming index BEFORE it is
+        published (first post-swap dispatch must not stall every
+        in-flight deadline behind compilation)."""
         for width in self.launch_widths:
             coords = jnp.zeros((width, self.query_nnz), jnp.int32)
             vals = jnp.zeros((width, self.query_nnz), jnp.float32)
             if not self.stage_timing:
                 jax.block_until_ready(search_pipeline(
-                    self.index, PaddedSparse(coords, vals, self.index.dim),
-                    self.params))
-            if self._fns is not None:
+                    index, PaddedSparse(coords, vals, index.dim),
+                    params))
+            if fns is not None:
                 jax.block_until_ready(run_pipeline_staged(
-                    self.index, coords, vals, self.params,
-                    fns=self._fns, split_refine=True))
+                    index, coords, vals, params,
+                    fns=fns, split_refine=True))
+
+    # ----------------------------------------------------- index swap
+
+    def swap_index(self, index: SeismicIndex,
+                   params: SearchParams | None = None, *,
+                   warmup: bool = True) -> int:
+        """Atomically publish a new index (and optionally new params);
+        returns the new serving epoch.
+
+        Safe against in-flight launches: the (index, fns, params)
+        triple is snapshotted under ``_swap_lock`` by every dispatch,
+        so a launch runs entirely against one generation — never a torn
+        mix. The epoch bump makes every pre-swap cache/coalesce key
+        unreachable, so results computed against the old index are
+        never served again (see the stale-cache regression test).
+        Requests already dispatched against the old index still
+        complete and are fulfilled — their results are cached under
+        old-epoch keys, i.e. dropped.
+
+        With ``warmup`` (default) the new index is compiled at every
+        ladder width before publication, off the serving path.
+        """
+        params = self.params if params is None else params
+        validate_refine_params(index, params)
+        from repro.tune.policy import validate_tuned_index
+        validate_tuned_index(index)
+        fns = stage_fns(index, params) if self._fns is not None else None
+        device = self._device
+        if fns is not None:
+            from repro.obs.device import DeviceAccounting
+            device = DeviceAccounting(index, params,
+                                      self.telemetry.registry)
+        if warmup:
+            self._warmup_for(index, params, fns)
+        with self._swap_lock:
+            self._publish_swap(index, params, fns, device)
+            epoch = self.epoch
+        # re-derive gauges bound to the served pair (tuned-policy drift
+        # targets, cache hit-rate closures): families are idempotent and
+        # set_fn callbacks overwrite, so re-registration rebinds them
+        self._register_gauges()
+        self.telemetry.inc("swaps")
+        return epoch
+
+    def _publish_swap(self, index, params, fns, device) -> None:
+        """Swap commit point; runs under ``_swap_lock``. Subclasses
+        extend it to keep their mirrors in step (replica server)."""
+        self.index = index
+        self.params = params
+        self._fns = fns
+        self._device = device
+        self.epoch += 1
+
+    def apply_mutation(self, mutable, mutate_fn=None, *,
+                       warmup: bool = True) -> int:
+        """Serve a :class:`repro.core.mutate.MutableSeismicIndex`'s
+        current snapshot: optionally run ``mutate_fn(mutable)`` first
+        (inserts / deletes / compaction), then publish the mutated
+        snapshot via :meth:`swap_index`. Returns the new serving epoch.
+        """
+        if mutate_fn is not None:
+            mutate_fn(mutable)
+        return self.swap_index(mutable.index, warmup=warmup)
 
     # ------------------------------------------------------ submission
 
@@ -320,10 +401,19 @@ class AsyncSeismicServer:
         tr = self._tracer.start_trace("request", now) \
             if self._tracer is not None else None
         key = None
+        cand_keys: list[bytes] = []
         if self.cache is not None or self.coalesce:
-            key = query_fingerprint(c, v)
+            # the serving epoch prefixes every cache/coalesce key: a
+            # swap_index bumps it, instantly orphaning all results
+            # computed against the previous index (stale-cache fix).
+            # Multiple fingerprint candidates cover scale-bucket
+            # boundary jitter (see serve.cache): probe all, file under
+            # the primary.
+            ep = struct.pack("<Q", self.epoch)
+            cand_keys = [ep + fp for fp in fingerprint_candidates(c, v)]
+            key = cand_keys[0]
         if self.cache is not None:
-            hit = self.cache.get(key)       # hit/miss counted by the LRU
+            hit = self.cache.get_any(cand_keys)   # counted by the LRU
             if hit is not None:
                 fut = ServeFuture()
                 ids, scores, ev = hit
@@ -342,7 +432,9 @@ class AsyncSeismicServer:
         # attaches to a request whose slot already fulfilled
         with self._coalesce_lock:
             if self.coalesce:
-                primary = self._inflight.get(key)
+                primary = next(
+                    (p for ck in cand_keys
+                     if (p := self._inflight.get(ck)) is not None), None)
                 if primary is not None:
                     primary.followers.append((req.future, now, tr))
                     if tr is not None:
@@ -459,7 +551,7 @@ class AsyncSeismicServer:
 
     def _execute(self, index, fns, coords: np.ndarray, vals: np.ndarray,
                  staged: bool, delay_s: float = 0.0, *,
-                 audit: bool = False):
+                 audit: bool = False, params: SearchParams | None = None):
         """One pipeline execution against ``index``; returns host arrays
         plus wall-time bounds and (staged only) per-stage span triples.
 
@@ -468,6 +560,7 @@ class AsyncSeismicServer:
         must see it). ``audit`` (staged only) additionally probes the
         funnel's membership captures for the shadow auditor."""
         tel = self.telemetry
+        p = self.params if params is None else params
         triples: list[tuple[str, float, float]] = []
         probed: dict[str, object] = {}
         t0 = time.monotonic()
@@ -476,7 +569,7 @@ class AsyncSeismicServer:
         if staged:
             scores, ids, ev = run_pipeline_staged(
                 index, jnp.asarray(coords), jnp.asarray(vals),
-                self.params, fns=fns,
+                p, fns=fns,
                 record=lambda s, dt: tel.record_latency(f"stage_{s}", dt),
                 span_cb=lambda name, a, b: triples.append((name, a, b)),
                 split_refine=True, probe=probed.__setitem__,
@@ -486,7 +579,7 @@ class AsyncSeismicServer:
                 index,
                 PaddedSparse(jnp.asarray(coords), jnp.asarray(vals),
                              index.dim),
-                self.params))
+                p))
         t1 = time.monotonic()
         return (np.asarray(ids), np.asarray(scores), np.asarray(ev),
                 t0, t1, triples, probed)
@@ -530,7 +623,16 @@ class AsyncSeismicServer:
         seq = self._next_seq()
         audit_rows = self.auditor.plan(n) if self.auditor is not None \
             else ()
-        have_fns = fns is not None or self._fns is not None
+        # one atomic snapshot of the serving generation: a concurrent
+        # swap_index can never tear an old index against new stage fns
+        # or params inside a single launch
+        with self._swap_lock:
+            if index is None:
+                index = self.index
+            if fns is None:
+                fns = self._fns
+            params = self.params
+        have_fns = fns is not None
         capture = bool(audit_rows) and have_fns
         staged = self.stage_timing or capture or (
             have_fns
@@ -538,9 +640,8 @@ class AsyncSeismicServer:
         coords, vals = self._pack(batch, width)
         dispatch_t = time.monotonic()
         ids, scores, ev, t0, t1, triples, probed = self._execute(
-            self.index if index is None else index,
-            self._fns if fns is None else fns,
-            coords, vals, staged, delay_s, audit=capture)
+            index, fns, coords, vals, staged, delay_s, audit=capture,
+            params=params)
         tel.record_latency("launch", t1 - t0)
         if on_timing is not None:
             on_timing(t1 - t0,

@@ -106,6 +106,46 @@ class SeismicServer:
             self._device = DeviceAccounting(index, params,
                                             self.telemetry.registry)
         self._launch_seq = 0
+        # serving generation; bumped on every swap_index (no result
+        # cache here, but callers key their own memoization on it)
+        self.epoch = 0
+        if self.telemetry is not None:
+            self.telemetry.registry.gauge(
+                "seismic_index_epoch",
+                "Generation of the index being served (bumped on "
+                "every swap_index / mutation publish)").labels() \
+                .set_fn(lambda: self.epoch)
+
+    def swap_index(self, index: SeismicIndex,
+                   params: SearchParams | None = None) -> int:
+        """Publish a new index (and optionally new params); returns the
+        new serving epoch. The facade is synchronous — callers serialize
+        ``search``/``swap_index`` themselves — so the swap is a plain
+        field update plus revalidation and staged-fns rebuild."""
+        from repro.graph.refine import validate_refine_params
+        from repro.tune.policy import validate_tuned_index
+        params = self.params if params is None else params
+        validate_refine_params(index, params)
+        validate_tuned_index(index)
+        if self._fns is not None:
+            from repro.retrieval.pipeline import stage_fns
+            self._fns = stage_fns(index, params)
+        if self._device is not None:
+            from repro.obs.device import DeviceAccounting
+            self._device = DeviceAccounting(index, params,
+                                            self.telemetry.registry)
+        self.index = index
+        self.params = params
+        self.epoch += 1
+        return self.epoch
+
+    def apply_mutation(self, mutable, mutate_fn=None) -> int:
+        """Optionally run ``mutate_fn(mutable)`` (inserts / deletes /
+        compaction on a ``repro.core.mutate.MutableSeismicIndex``),
+        then publish its current snapshot via :meth:`swap_index`."""
+        if mutate_fn is not None:
+            mutate_fn(mutable)
+        return self.swap_index(mutable.index)
 
     def _search_staged(self, chunk: PaddedSparse, n_real: int,
                        audit_rows: tuple[int, ...] = ()):

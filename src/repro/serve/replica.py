@@ -82,17 +82,22 @@ class _ShardJob:
 
     __slots__ = ("batch", "coords", "vals", "width", "seq", "dispatch_t",
                  "parts", "t0_min", "t1_max", "failed", "_lock",
-                 "_remaining")
+                 "_remaining", "view")
 
     def __init__(self, batch: list[Request], coords: np.ndarray,
                  vals: np.ndarray, width: int, seq: int,
-                 dispatch_t: float, n_replicas: int):
+                 dispatch_t: float, n_replicas: int, view: tuple):
         self.batch = batch
         self.coords = coords
         self.vals = vals
         self.width = width
         self.seq = seq
         self.dispatch_t = dispatch_t
+        # (replicas, per_shard, n_docs, merge) snapshotted at dispatch:
+        # every shard part of ONE job scores the SAME index generation
+        # even if swap_index lands mid-fan-out (a torn job would merge
+        # top-k lists from two different corpora)
+        self.view = view
         self.parts: dict[int, tuple] = {}
         self.t0_min = float("inf")
         self.t1_max = 0.0
@@ -278,13 +283,67 @@ class ReplicaSeismicServer(AsyncSeismicServer):
     def warmup(self) -> None:
         super().warmup()
         if self.mode == "shard":
-            k = self.params.k
-            for width in self.launch_widths:
-                cand = jnp.full((width, self.n_replicas * k), -1,
-                                jnp.int32)
-                scores = jnp.full((width, self.n_replicas * k),
-                                  -jnp.inf, jnp.float32)
-                jax.block_until_ready(self._merge(cand, scores))
+            self._warmup_merge(self._merge, self.params.k)
+
+    def _warmup_merge(self, merge, k: int) -> None:
+        for width in self.launch_widths:
+            cand = jnp.full((width, self.n_replicas * k), -1,
+                            jnp.int32)
+            scores = jnp.full((width, self.n_replicas * k),
+                              -jnp.inf, jnp.float32)
+            jax.block_until_ready(merge(cand, scores))
+
+    # ----------------------------------------------------- index swap
+
+    def _publish_swap(self, index, params, fns, device) -> None:
+        super()._publish_swap(index, params, fns, device)
+        if self.mode == "mirror":
+            # republish the mirror list wholesale; replica loops
+            # re-read it per item, so the next batch on every replica
+            # serves the new generation
+            self._replicas = [(self.index, self._fns)] * self.n_replicas
+
+    def swap_index(self, index, params: SearchParams | None = None, *,
+                   warmup: bool = True, n_docs: int | None = None) -> int:
+        """Mirror mode: identical to ``AsyncSeismicServer.swap_index``
+        (every replica flips to the new index on its next batch). Shard
+        mode: ``index`` is a new ``build_sharded_index`` stacked pytree
+        with the SAME shard count; per-shard state (slices, globalize
+        offsets, merge program) is republished atomically, and in-flight
+        shard jobs finish on their dispatch-time view."""
+        if self.mode == "mirror":
+            return super().swap_index(index, params, warmup=warmup)
+        params = self.params if params is None else params
+        n_shards = jax.tree.leaves(index)[0].shape[0]
+        if n_shards != self.n_replicas:
+            raise ValueError(
+                f"stacked index has {n_shards} shards; server has "
+                f"{self.n_replicas} replicas (shard swap cannot resize)")
+        shards = [jax.tree.map(lambda x, s=s: x[s], index)
+                  for s in range(n_shards)]
+        rep = shards[0]
+        from repro.graph.refine import validate_refine_params
+        from repro.tune.policy import validate_tuned_index
+        validate_refine_params(rep, params)
+        validate_tuned_index(rep)
+        per_shard = rep.fwd.coords.shape[0]
+        nd = n_docs if n_docs is not None else n_shards * per_shard
+        k = params.k
+        merge = jax.jit(
+            lambda cand, scores: merge_topk(cand, scores, k, nd))
+        if warmup:
+            self._warmup_for(rep, params, None)
+            self._warmup_merge(merge, k)
+        with self._swap_lock:
+            self._publish_swap(rep, params, None, None)
+            self.per_shard = per_shard
+            self.n_docs = nd
+            self._merge = merge
+            self._replicas = [(s, None) for s in shards]
+            epoch = self.epoch
+        self._register_gauges()
+        self.telemetry.inc("swaps")
+        return epoch
 
     # ---------------------------------------------------------- worker
 
@@ -320,19 +379,26 @@ class ReplicaSeismicServer(AsyncSeismicServer):
         tel.inc(f"launch_width_{width}")
         tel.inc("dispatched", n)
         coords, vals = self._pack(batch, width)
+        with self._swap_lock:
+            view = (self._replicas, self.per_shard, self.n_docs,
+                    self._merge)
         job = _ShardJob(batch, coords, vals, width, self._next_seq(),
-                        time.monotonic(), self.n_replicas)
+                        time.monotonic(), self.n_replicas, view)
         for rid, box in enumerate(self._mailboxes):
             self._replica_dispatches.labels(str(rid)).inc()
             box.put(job)
 
     def _replica_loop(self, rid: int) -> None:
-        index, fns = self._replicas[rid]
         delay = self._delay[rid]
         while True:
             item = self._mailboxes[rid].get()
             if item is None:
                 return
+            # re-read the replica's (index, fns) for EVERY item: the
+            # list object is republished wholesale by swap_index, so a
+            # mirror replica picks up a swapped index on its next batch
+            # instead of serving the retired generation forever
+            index, fns = self._replicas[rid]
             try:
                 if isinstance(item, _ShardJob):
                     self._run_shard_part(rid, item)
@@ -356,8 +422,11 @@ class ReplicaSeismicServer(AsyncSeismicServer):
 
     def _run_shard_part(self, rid: int, job: _ShardJob) -> None:
         """Score one shard, globalize + pad-mask its top-k, deposit;
-        the last shard in merges and fulfils the whole batch."""
-        index, _ = self._replicas[rid]
+        the last shard in merges and fulfils the whole batch. All shard
+        state comes from the job's dispatch-time view, never ``self``
+        (see ``_ShardJob.view``)."""
+        replicas, per_shard, n_docs, _ = job.view
+        index, _ = replicas[rid]
         ids, scores, ev, t0, t1, _, _ = self._execute(
             index, None, job.coords, job.vals, False, self._delay[rid])
         self._on_timing(rid, t1 - t0, {})
@@ -365,7 +434,7 @@ class ReplicaSeismicServer(AsyncSeismicServer):
         # (-inf, -1) BEFORE anything crosses the shard boundary
         m_scores, m_gids = mask_shard_topk(
             jnp.asarray(scores), jnp.asarray(ids), index.fwd,
-            rid * self.per_shard, n_docs=self.n_docs)
+            rid * per_shard, n_docs=n_docs)
         part = (np.asarray(m_gids), np.asarray(m_scores), ev)
         if job.add(rid, part, t0, t1):
             self._finish_shard_job(job)
@@ -376,8 +445,9 @@ class ReplicaSeismicServer(AsyncSeismicServer):
         parts = [job.parts[r] for r in range(self.n_replicas)]
         all_g = np.concatenate([p[0] for p in parts], axis=1)
         all_s = np.concatenate([p[1] for p in parts], axis=1)
-        top_s, top_ids, _ = self._merge(jnp.asarray(all_g),
-                                        jnp.asarray(all_s))
+        merge = job.view[3]
+        top_s, top_ids, _ = merge(jnp.asarray(all_g),
+                                  jnp.asarray(all_s))
         # docs_evaluated is the total exactly-scored docs ACROSS shards
         ev = np.sum([p[2] for p in parts], axis=0)
         top_ids = np.asarray(top_ids)

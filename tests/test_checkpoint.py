@@ -119,3 +119,53 @@ def test_elastic_remesh_restore(tmp_path):
                                 repr(str(tmp_path / "ck")))
     out = run_with_devices(code, n_devices=8)
     assert "OK elastic" in out
+
+
+# ---------------------- orphaned .tmp dirs + non-conforming step entries
+
+def test_latest_step_ignores_nonconforming_entries(tmp_path):
+    """A stray file/dir that merely LOOKS like a step entry used to
+    raise ValueError inside latest_step and brick restore for the whole
+    directory."""
+    save_checkpoint(str(tmp_path), 5, _tree())
+    (tmp_path / "step_final").mkdir()            # int("final") boom
+    (tmp_path / "step_7.bak").write_text("x")    # int("7.bak") boom
+    (tmp_path / "step_").mkdir()
+    (tmp_path / "notes.txt").write_text("x")
+    assert latest_step(str(tmp_path)) == 5
+    like = jax.tree.map(lambda x: jnp.zeros_like(x), _tree())
+    _, step = load_checkpoint(str(tmp_path), like)
+    assert step == 5
+
+
+def test_manager_start_cleans_orphaned_tmp_dirs(tmp_path):
+    """A crash mid-save strands step_*.tmp dirs; a new manager over the
+    same directory removes them before any save (and its _gc never
+    trips over residual garbage)."""
+    save_checkpoint(str(tmp_path), 1, _tree())
+    orphan = tmp_path / "step_00000009.tmp"
+    orphan.mkdir()
+    (orphan / "shard_0.npz").write_text("torn")
+    keepme = tmp_path / "step_custom_notes"      # non-conforming: kept
+    keepme.mkdir()
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    assert not orphan.exists()
+    assert keepme.exists()
+    mgr.save_async(2, _tree(2))
+    mgr.wait()
+    assert latest_step(str(tmp_path)) == 2
+
+
+def test_save_over_orphaned_tmp_does_not_merge_stale_shards(tmp_path):
+    """Re-saving a step whose .tmp survived a crash must start clean:
+    the stale shard file must not ride into the committed checkpoint."""
+    tmp = tmp_path / "step_00000003.tmp"
+    tmp.mkdir()
+    (tmp / "shard_99.npz").write_text("stale garbage")
+    save_checkpoint(str(tmp_path), 3, _tree())
+    committed = tmp_path / "step_00000003"
+    assert committed.is_dir()
+    assert not (committed / "shard_99.npz").exists()
+    like = jax.tree.map(lambda x: jnp.zeros_like(x), _tree())
+    _, step = load_checkpoint(str(tmp_path), like)
+    assert step == 3

@@ -1,0 +1,387 @@
+"""Streaming index mutation (repro.core.mutate): LSM-style tail
+segments, tombstone deletes, and compaction.
+
+The load-bearing contract, checked here end to end:
+
+    frozen blocks + exact tail + tombstones  ==  one logical corpus
+
+At FULL budget (``cut`` covers every query coordinate and
+``block_budget = cut * n_blocks``) approximate search degenerates to
+exact search over the candidate union, so a grown-and-mutated index
+must BIT-match ``build_index`` of the equivalent corpus — same ids,
+same scores, same ``docs_evaluated`` — where "equivalent corpus" means
+a capacity-sized collection whose deleted / never-assigned rows are
+all-zero.
+
+Deterministic sweeps always run; the ``@needs_hypothesis`` sequences
+add randomized insert/delete/compact interleavings when hypothesis is
+installed (the conftest pins its deterministic profile).
+"""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from helpers import given, needs_hypothesis, settings, st
+from repro.core import MutableSeismicIndex, SeismicConfig, build_index, \
+    make_mutable
+from repro.retrieval import SearchParams, search_pipeline
+from repro.sparse.ops import PaddedSparse
+from repro.sparse.quant import dequantize_u8
+
+DIM = 64
+NNZ = 8
+CAP = 40
+
+CFG = SeismicConfig(lam=16, beta=2, alpha=1.0, block_cap=4,
+                    summary_nnz=64, superblock_fanout=2)
+
+
+def _full_budget_params(k: int = 10) -> SearchParams:
+    """Exhaustive operating point: every routed block selected."""
+    return SearchParams(k=k, cut=NNZ, block_budget=NNZ * CFG.n_blocks,
+                        policy="budget")
+
+
+def _rand_docs(rng, n: int):
+    coords = np.stack([rng.choice(np.arange(1, DIM), NNZ, replace=False)
+                       for _ in range(n)]).astype(np.int64)
+    vals = rng.uniform(0.1, 1.0, (n, NNZ)).astype(np.float32)
+    return coords, vals
+
+
+def _queries(rng, n: int = 8) -> PaddedSparse:
+    coords, vals = _rand_docs(rng, n)
+    return PaddedSparse(jnp.asarray(coords.astype(np.int32)),
+                        jnp.asarray(vals), DIM)
+
+
+def _equivalence_corpus(mut: MutableSeismicIndex) -> PaddedSparse:
+    """Capacity-sized collection equal to the mutable's logical corpus:
+    live rows carry their forward entries, deleted / unassigned rows
+    are all-zero."""
+    coords = np.asarray(mut.index.fwd.coords).copy()
+    vals = np.asarray(mut.index.fwd.vals).copy()
+    if mut.index.fwd_scale is not None:
+        vals = np.asarray(dequantize_u8(
+            jnp.asarray(vals), mut.index.fwd_scale, mut.index.fwd_zero))
+    dead = np.asarray(mut.index.tombstone).copy()
+    dead[mut.n_docs:] = True
+    coords[dead] = 0
+    vals[dead] = 0.0
+    return PaddedSparse(jnp.asarray(coords), jnp.asarray(vals), DIM)
+
+
+def _assert_bitmatch(mut: MutableSeismicIndex, queries: PaddedSparse,
+                     p: SearchParams) -> None:
+    fresh = build_index(_equivalence_corpus(mut), CFG)
+    s_m, i_m, ev_m = search_pipeline(mut.index, queries, p)
+    s_f, i_f, ev_f = search_pipeline(fresh, queries, p)
+    np.testing.assert_array_equal(np.asarray(i_m), np.asarray(i_f))
+    np.testing.assert_array_equal(np.asarray(s_m), np.asarray(s_f))
+    np.testing.assert_array_equal(np.asarray(ev_m), np.asarray(ev_f))
+
+
+# ------------------------------------------------------- growth + search
+
+def test_grow_from_empty_bitmatches_fresh_build():
+    """Corpus grown empty -> full through insert_docs with periodic
+    auto-compaction serves the exact same results as a fresh build."""
+    rng = np.random.default_rng(0)
+    mut = MutableSeismicIndex.empty(DIM, NNZ, CFG, capacity=CAP,
+                                    tail_cap=16, tail_max=8)
+    queries = _queries(rng)
+    p = _full_budget_params()
+    inserted = 0
+    epochs = [mut.epoch]
+    while inserted < CAP:
+        b = min(int(rng.integers(1, 6)), CAP - inserted)
+        ids = mut.insert_docs(*_rand_docs(rng, b))
+        np.testing.assert_array_equal(
+            ids, np.arange(inserted, inserted + b))
+        inserted += b
+        epochs.append(mut.epoch)
+        _assert_bitmatch(mut, queries, p)       # live tail mid-growth
+    assert mut.n_docs == CAP
+    assert all(b > a for a, b in zip(epochs, epochs[1:]))
+    mut.compact()
+    assert mut.tail_occupancy == 0
+    _assert_bitmatch(mut, queries, p)
+
+
+def test_capacity_exhaustion_raises():
+    mut = MutableSeismicIndex.empty(DIM, NNZ, CFG, capacity=4, tail_cap=8)
+    rng = np.random.default_rng(1)
+    mut.insert_docs(*_rand_docs(rng, 4))
+    with pytest.raises(ValueError, match="capacity exhausted"):
+        mut.insert_docs(*_rand_docs(rng, 1))
+
+
+def test_make_mutable_lifts_built_index():
+    """Wrapping an existing build + inserting on top matches a fresh
+    build over the concatenated corpus."""
+    rng = np.random.default_rng(2)
+    base_c, base_v = _rand_docs(rng, 20)
+    docs = PaddedSparse(jnp.asarray(base_c), jnp.asarray(base_v), DIM)
+    mut = make_mutable(build_index(docs, CFG), capacity=CAP, tail_cap=16,
+                       tail_max=8)
+    assert mut.n_docs == 20
+    ids = mut.insert_docs(*_rand_docs(rng, 12))
+    np.testing.assert_array_equal(ids, np.arange(20, 32))
+    _assert_bitmatch(mut, _queries(rng), _full_budget_params())
+    mut.compact()
+    _assert_bitmatch(mut, _queries(rng), _full_budget_params())
+
+
+# ---------------------------------------------------------- tombstones
+
+def test_deleted_docs_never_returned():
+    """Deletes on blocked AND tail docs: masked from results the moment
+    delete_docs returns, purged physically at compact — and the search
+    bit-matches a fresh build without those docs at every step."""
+    rng = np.random.default_rng(3)
+    mut = MutableSeismicIndex.empty(DIM, NNZ, CFG, capacity=CAP,
+                                    tail_cap=16, tail_max=8)
+    mut.insert_docs(*_rand_docs(rng, 30))
+    mut.compact()                      # 30 blocked docs
+    mut.insert_docs(*_rand_docs(rng, 6))   # 6 live in the tail
+    queries = _queries(rng)
+    p = _full_budget_params()
+    doomed = np.array([1, 7, 19, 31, 33])  # blocked + tail victims
+    mut.delete_docs(doomed)
+    assert mut.n_live == 31
+    for ids in (np.asarray(search_pipeline(mut.index, queries, p)[1]),):
+        assert not np.isin(ids, doomed).any()
+    _assert_bitmatch(mut, queries, p)          # pre-compaction
+    mut.compact()
+    ids = np.asarray(search_pipeline(mut.index, queries, p)[1])
+    assert not np.isin(ids, doomed).any()
+    _assert_bitmatch(mut, queries, p)          # post-purge
+    # ids are never reused: the next insert continues after the dead
+    new = mut.insert_docs(*_rand_docs(rng, 2))
+    np.testing.assert_array_equal(new, [36, 37])
+    _assert_bitmatch(mut, queries, p)
+
+
+def test_delete_is_idempotent_and_checked():
+    rng = np.random.default_rng(4)
+    mut = MutableSeismicIndex.empty(DIM, NNZ, CFG, capacity=8, tail_cap=8)
+    mut.insert_docs(*_rand_docs(rng, 4))
+    mut.delete_docs([1, 2])
+    mut.delete_docs([2])               # idempotent
+    assert mut.n_live == 2
+    with pytest.raises(ValueError, match="delete ids"):
+        mut.delete_docs([17])
+
+
+def test_adaptive_policy_excludes_deleted():
+    """The adaptive selector bootstraps theta from exact stage-1 scores;
+    tombstoned docs must neither surface in results nor inflate theta
+    into over-pruning."""
+    rng = np.random.default_rng(5)
+    mut = MutableSeismicIndex.empty(DIM, NNZ, CFG, capacity=CAP,
+                                    tail_cap=16, tail_max=8)
+    mut.insert_docs(*_rand_docs(rng, 36))
+    mut.compact()
+    doomed = np.arange(0, 36, 5)
+    mut.delete_docs(doomed)
+    p = SearchParams(k=10, cut=NNZ, block_budget=NNZ * CFG.n_blocks,
+                     policy="adaptive", probe_budget=4, heap_factor=0.9)
+    ids = np.asarray(search_pipeline(mut.index, _queries(rng), p)[1])
+    assert not np.isin(ids, doomed).any()
+
+
+# ------------------------------------------------- summary monotonicity
+
+def _block_members(index, ell: int, b: int) -> np.ndarray:
+    off = int(index.block_off[ell, b])
+    ln = int(index.block_len[ell, b])
+    docs = np.asarray(index.list_docs[ell, off:off + ln])
+    return docs[docs < index.n_docs]
+
+
+def test_summaries_upper_bound_members_after_mutation():
+    """After an insert/delete/compact sequence every u8 block summary
+    still upper-bounds its live members' exact scores (up to the
+    round-to-nearest quantization slack), and every superblock summary
+    upper-bounds its children EXACTLY (ceil quantization — the
+    monotone-merge invariant compaction must preserve)."""
+    rng = np.random.default_rng(6)
+    mut = MutableSeismicIndex.empty(DIM, NNZ, CFG, capacity=CAP,
+                                    tail_cap=16, tail_max=6)
+    mut.insert_docs(*_rand_docs(rng, 25))
+    mut.delete_docs([2, 9, 14])
+    mut.insert_docs(*_rand_docs(rng, 10))
+    mut.compact()
+    mut.insert_docs(*_rand_docs(rng, 5))   # leave a live tail too
+    idx = mut.index
+    fwd_c = np.asarray(idx.fwd.coords)
+    fwd_v = np.asarray(idx.fwd.vals, np.float32)
+    q_dense = np.zeros((4, DIM), np.float32)
+    qs = _queries(rng, 4)
+    for r, (qc, qv) in enumerate(zip(np.asarray(qs.coords),
+                                     np.asarray(qs.vals))):
+        np.add.at(q_dense[r], qc, qv)
+        q_dense[r, 0] = 0.0
+    fanout = CFG.superblock_fanout
+    checked = 0
+    for ell in range(idx.n_lists):
+        blk_scores = np.full(CFG.n_blocks, -np.inf)
+        for b in range(CFG.n_blocks):
+            if int(idx.block_len[ell, b]) == 0:
+                continue
+            sc = np.asarray(idx.sum_coords[ell, b])
+            sv = np.asarray(dequantize_u8(idx.sum_q[ell, b],
+                                          idx.sum_scale[ell, b],
+                                          idx.sum_zero[ell, b]))
+            s_sum = q_dense[:, sc] @ sv                     # [4]
+            slack = 0.5 * float(idx.sum_scale[ell, b]) \
+                * q_dense.sum(axis=1)
+            for d in _block_members(idx, ell, b):
+                exact = q_dense[:, fwd_c[d]] @ fwd_v[d]
+                assert np.all(s_sum + slack + 1e-4 >= exact), \
+                    f"block summary violated at list {ell} block {b}"
+                checked += 1
+            blk_scores[b] = s_sum.max()
+        if idx.sup_coords is None:
+            continue
+        for g in range(CFG.n_superblocks):
+            kids = blk_scores[g * fanout:(g + 1) * fanout]
+            if not np.isfinite(kids).any():
+                continue
+            pc = np.asarray(idx.sup_coords[ell, g])
+            pv = np.asarray(dequantize_u8(idx.sup_q[ell, g],
+                                          idx.sup_scale[ell, g],
+                                          idx.sup_zero[ell, g]))
+            sup = q_dense[:, pc] @ pv
+            for b in range(g * fanout, (g + 1) * fanout):
+                if int(idx.block_len[ell, b]) == 0:
+                    continue
+                sc = np.asarray(idx.sum_coords[ell, b])
+                sv = np.asarray(dequantize_u8(idx.sum_q[ell, b],
+                                              idx.sum_scale[ell, b],
+                                              idx.sum_zero[ell, b]))
+                child = q_dense[:, sc] @ sv
+                assert np.all(sup + 1e-4 >= child), \
+                    f"superblock bound violated at list {ell} group {g}"
+    assert checked > 0
+
+
+# --------------------------------------------------- checkpoint round-trip
+
+def test_index_checkpoint_roundtrips_tail_and_tombstones(tmp_path):
+    """save_index/load_index persist the mutation plane; resuming a
+    MutableSeismicIndex from the restored snapshot serves identically
+    and keeps the tombstones dead forever."""
+    from repro.ckpt.checkpoint import load_index, save_index
+    rng = np.random.default_rng(7)
+    mut = MutableSeismicIndex.empty(DIM, NNZ, CFG, capacity=CAP,
+                                    tail_cap=16, tail_max=8)
+    mut.insert_docs(*_rand_docs(rng, 24))
+    mut.compact()
+    mut.insert_docs(*_rand_docs(rng, 5))       # live tail at save time
+    mut.delete_docs([3, 11, 25])               # blocked + tail victims
+    save_index(str(tmp_path), mut.index, step=1)
+    restored = load_index(str(tmp_path), step=1)
+    assert restored.tail_ids is not None
+    assert restored.tombstone is not None
+    queries = _queries(rng)
+    p = _full_budget_params()
+    s0, i0, ev0 = search_pipeline(mut.index, queries, p)
+    s1, i1, ev1 = search_pipeline(restored, queries, p)
+    np.testing.assert_array_equal(np.asarray(i0), np.asarray(i1))
+    np.testing.assert_array_equal(np.asarray(s0), np.asarray(s1))
+    np.testing.assert_array_equal(np.asarray(ev0), np.asarray(ev1))
+    # resume mutating on top of the restored snapshot
+    mut2 = make_mutable(restored, capacity=CAP, tail_cap=16, tail_max=8,
+                        n_docs=mut.n_docs)
+    assert mut2.tail_occupancy == mut.tail_occupancy
+    assert mut2.n_live == mut.n_live
+    mut2.compact()
+    ids = np.asarray(search_pipeline(mut2.index, queries, p)[1])
+    assert not np.isin(ids, [3, 11, 25]).any()
+    _assert_bitmatch(mut2, queries, p)
+
+
+def test_backcompat_index_without_mutation_plane(tmp_path):
+    """Pre-mutation checkpoints (no tail/tombstone keys) still load,
+    with the mutation plane absent (None) — and the compiled program
+    for such an index is the immutable one."""
+    from repro.ckpt.checkpoint import load_index, save_index
+    rng = np.random.default_rng(8)
+    docs = PaddedSparse(*map(jnp.asarray, _rand_docs(rng, 16)), DIM)
+    idx = build_index(docs, CFG)
+    save_index(str(tmp_path), idx, step=0)
+    restored = load_index(str(tmp_path), step=0)
+    assert restored.tail_ids is None and restored.tombstone is None
+
+
+# ------------------------------------------------ property-based sequences
+
+OPS = st.lists(
+    st.one_of(
+        st.tuples(st.just("insert"), st.integers(1, 6)),
+        st.tuples(st.just("delete"), st.integers(0, 1_000_000)),
+        st.tuples(st.just("compact"), st.just(0)),
+    ),
+    min_size=1, max_size=12)
+
+
+@needs_hypothesis
+@settings(max_examples=25, deadline=None)
+@given(ops=OPS, seed=st.integers(0, 2**16))
+def test_property_any_sequence_bitmatches_equivalent_build(ops, seed):
+    """(a) after ANY insert/delete/compact sequence, full-budget search
+    bit-matches build_index of the equivalent final corpus."""
+    rng = np.random.default_rng(seed)
+    mut = MutableSeismicIndex.empty(DIM, NNZ, CFG, capacity=CAP,
+                                    tail_cap=16, tail_max=8)
+    for op, arg in ops:
+        if op == "insert":
+            b = min(arg, CAP - mut.n_docs)
+            if b > 0:
+                mut.insert_docs(*_rand_docs(rng, b))
+        elif op == "delete" and mut.n_docs > 0:
+            mut.delete_docs([arg % mut.n_docs])
+        elif op == "compact":
+            mut.compact()
+    _assert_bitmatch(mut, _queries(rng), _full_budget_params())
+
+
+@needs_hypothesis
+@settings(max_examples=10, deadline=None)
+@given(ops=OPS, seed=st.integers(0, 2**16))
+def test_property_summaries_stay_upper_bounds(ops, seed):
+    """(b) after ANY sequence, block summaries upper-bound live member
+    scores (quantization slack) for random nonnegative queries."""
+    rng = np.random.default_rng(seed)
+    mut = MutableSeismicIndex.empty(DIM, NNZ, CFG, capacity=CAP,
+                                    tail_cap=16, tail_max=8)
+    for op, arg in ops:
+        if op == "insert":
+            b = min(arg, CAP - mut.n_docs)
+            if b > 0:
+                mut.insert_docs(*_rand_docs(rng, b))
+        elif op == "delete" and mut.n_docs > 0:
+            mut.delete_docs([arg % mut.n_docs])
+        elif op == "compact":
+            mut.compact()
+    idx = mut.index
+    fwd_c = np.asarray(idx.fwd.coords)
+    fwd_v = np.asarray(idx.fwd.vals, np.float32)
+    q = np.zeros(DIM, np.float32)
+    qc, qv = _rand_docs(rng, 1)
+    q[qc[0]] = qv[0]
+    q[0] = 0.0
+    for ell in range(idx.n_lists):
+        for b in range(CFG.n_blocks):
+            if int(idx.block_len[ell, b]) == 0:
+                continue
+            sc = np.asarray(idx.sum_coords[ell, b])
+            sv = np.asarray(dequantize_u8(idx.sum_q[ell, b],
+                                          idx.sum_scale[ell, b],
+                                          idx.sum_zero[ell, b]))
+            s_sum = float(q[sc] @ sv)
+            slack = 0.5 * float(idx.sum_scale[ell, b]) * float(q.sum())
+            for d in _block_members(idx, ell, b):
+                exact = float(q[fwd_c[d]] @ fwd_v[d])
+                assert s_sum + slack + 1e-4 >= exact

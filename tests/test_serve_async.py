@@ -1,5 +1,6 @@
 """Async serving subsystem: deadline micro-batching, admission control,
 result cache, telemetry, and parity with the raw jitted pipeline."""
+import struct
 import threading
 import time
 
@@ -232,7 +233,9 @@ def test_result_cache_hit(small_index, small_collection):
     # the cached row owns its storage: it must not alias the served
     # result (mutation poisoning) nor pin the [max_batch, k] launch
     # arrays via a view
-    key = query_fingerprint(*srv._normalize(c, v))
+    # cache keys carry the serving-epoch prefix (stale-result fix)
+    key = struct.pack("<Q", srv.epoch) \
+        + query_fingerprint(*srv._normalize(c, v))
     cached_ids, cached_scores, _ = srv.cache.get(key)
     np.testing.assert_array_equal(cached_ids, first.ids)
     assert not np.shares_memory(cached_ids, first.ids)

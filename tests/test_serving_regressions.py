@@ -167,3 +167,109 @@ def test_distributed_merge_masks_pad_docs_4dev():
     including when a pad row sits in a posting list."""
     out = run_with_devices(DIST_CODE, n_devices=4)
     assert "OK pad mask" in out
+
+
+# ----------------------- 3. stale cache / swap-tear across index mutation
+
+def test_swap_index_invalidates_cached_results(small_index,
+                                               small_collection):
+    """THE stale-cache satellite bug: the result cache used to key on
+    the query fingerprint alone, so any cached top-k survived an index
+    swap/mutation forever. Keys now carry the serving epoch: after
+    ``swap_index`` the old lines are unreachable and the same query is
+    recomputed against the new index."""
+    from repro.core import make_mutable
+    idx, _ = small_index
+    _, queries, *_ = small_collection
+    srv = AsyncSeismicServer(
+        idx, SearchParams(k=5, cut=8, block_budget=8),
+        max_batch=8, query_nnz=16, deadline_s=0.02, cache_size=32)
+    c = np.asarray(queries.coords[0])
+    v = np.asarray(queries.vals[0])
+    with srv:
+        first = srv.submit(c, v).result(10.0)
+        assert srv.submit(c, v).result(10.0).cached    # warm line
+        top = int(first.ids[0])
+        mut = make_mutable(idx)
+        mut.delete_docs([top])                # the cached top-1 dies
+        epoch0 = srv.epoch
+        assert srv.swap_index(mut.index) == epoch0 + 1
+        after = srv.submit(c, v).result(60.0)
+        assert not after.cached               # stale line NOT served
+        assert top not in after.ids           # fresh result, new index
+        again = srv.submit(c, v).result(10.0)
+        assert again.cached                   # re-cached under epoch 1
+        assert top not in again.ids
+
+
+def test_replica_mirror_swap_reaches_every_replica(small_index,
+                                                   small_collection):
+    """Mirror replicas used to snapshot (index, fns) ONCE before their
+    serve loop — a swapped index never reached a running replica. The
+    loop now re-reads the published replica list per batch."""
+    from repro.core import make_mutable
+    from repro.serve.replica import ReplicaSeismicServer
+    idx, _ = small_index
+    _, queries, *_ = small_collection
+    srv = ReplicaSeismicServer(
+        idx, SearchParams(k=5, cut=8, block_budget=8), n_replicas=2,
+        max_batch=4, query_nnz=16, deadline_s=0.01, coalesce=False)
+    c = np.asarray(queries.coords[0])
+    v = np.asarray(queries.vals[0])
+    with srv:
+        top = int(srv.submit(c, v).result(10.0).ids[0])
+        mut = make_mutable(idx)
+        mut.delete_docs([top])
+        srv.swap_index(mut.index)
+        # sequential singles spread over both replicas via the balancer
+        for _ in range(8):
+            r = srv.submit(c, v).result(60.0)
+            assert top not in r.ids
+    assert srv.epoch == 1
+
+
+def test_sync_facade_swap_bumps_epoch(small_index, small_collection):
+    from repro.core import make_mutable
+    from repro.serve.engine import SeismicServer
+    idx, _ = small_index
+    _, queries, *_ = small_collection
+    srv = SeismicServer(idx, SearchParams(k=5, cut=8, block_budget=8),
+                        max_batch=8)
+    qs = PaddedSparse(queries.coords[:2], queries.vals[:2], queries.dim)
+    top = int(srv.search(qs).ids[0, 0])
+    mut = make_mutable(idx)
+    mut.delete_docs([top])
+    assert srv.swap_index(mut.index) == 1
+    assert top not in srv.search(qs).ids[0]
+
+
+# --------------------------- 4. fingerprint scale-bucket boundary flap
+
+def test_fingerprint_stable_under_vmax_jitter():
+    """THE cache-flap satellite bug: ``round(log2(vmax) * 8)`` put
+    near-identical queries on opposite sides of a bucket edge. The
+    candidate-set fix pins: for ANY scale, a ±0.2% vmax-jittered twin
+    shares at least one cache key with the original."""
+    from repro.serve.cache import (LRUCache, fingerprint_candidates,
+                                   query_fingerprint)
+    rng = np.random.default_rng(0)
+    c = rng.choice(np.arange(1, 512), 16, replace=False).astype(np.int64)
+    v = rng.uniform(0.2, 1.0, 16).astype(np.float32)
+    saw_alt = False
+    for scale in np.geomspace(0.5, 2.0, 65):
+        base = fingerprint_candidates(c, v * np.float32(scale))
+        saw_alt = saw_alt or len(base) > 1
+        for jit in (1.002, 0.998):
+            twin = fingerprint_candidates(
+                c, v * np.float32(scale) * np.float32(jit))
+            assert set(base) & set(twin), (scale, jit)
+    assert saw_alt          # the sweep did cross guard bands
+    # end-to-end through the LRU: insert under primary, twins hit
+    cache = LRUCache(8)
+    cache.put(fingerprint_candidates(c, v)[0], "payload")
+    for jit in (1.002, 0.998):
+        got = cache.get_any(
+            fingerprint_candidates(c, v * np.float32(jit)))
+        assert got == "payload"
+    # the primary stays byte-identical to the legacy fingerprint
+    assert fingerprint_candidates(c, v)[0] == query_fingerprint(c, v)
